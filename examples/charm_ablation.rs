@@ -1,0 +1,46 @@
+//! Fig 3 driver: the Charm++ build-option ablation, both on the simulated
+//! 8-node cluster (the paper's setup) and as real single-host runs of the
+//! in-process Charm++-like runtime with each build flavour.
+//!
+//! `cargo run --release --example charm_ablation`
+
+use taskbench_amt::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use taskbench_amt::experiments::fig3;
+use taskbench_amt::harness::report::Table;
+use taskbench_amt::runtimes::{run_with, CharmOptions, RunOptions, SystemKind};
+use taskbench_amt::sim::SimParams;
+
+fn main() -> anyhow::Result<()> {
+    let params = SimParams::default();
+    println!("# Fig 3 (sim) — 8 nodes / 384 cores, grain 4096\n");
+    println!("{}", fig3(200, &params).to_markdown());
+
+    // Real-mode ablation: same five builds on the actual charmlike
+    // runtime, single host, fine grain (here the scheduler-path deltas
+    // are visible because there is no 10 µs of compute hiding them).
+    let graph = TaskGraph::new(GraphConfig {
+        width: 8,
+        steps: 300,
+        dependence: DependencePattern::Stencil1D,
+        kernel: KernelConfig::compute_bound(64),
+        ..GraphConfig::default()
+    });
+    let mut t = Table::new(&["Build", "wall ms", "tasks/s"]);
+    for (name, copts) in CharmOptions::fig3_builds() {
+        let mut opts = RunOptions::new(2);
+        opts.charm = copts;
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let r = run_with(SystemKind::CharmLike, &graph, &opts)?;
+            best = best.min(r.elapsed.as_secs_f64());
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", best * 1e3),
+            format!("{:.0}", graph.num_points() as f64 / best),
+        ]);
+    }
+    println!("# Real-mode ablation — this host, grain 64, width 8 × 300 steps\n");
+    println!("{}", t.to_markdown());
+    Ok(())
+}

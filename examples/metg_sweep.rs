@@ -1,0 +1,33 @@
+//! Table 2 driver: METG per system without/with overdecomposition on the
+//! simulated 48-core node, plus a *real-mode* grain sweep of the
+//! in-process runtimes on this host.
+//!
+//! `cargo run --release --example metg_sweep`
+
+use taskbench_amt::experiments::{table2, fig1, fig1_table};
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn main() {
+    let params = SimParams::default();
+    let grains: Vec<u64> = (2..=16).step_by(2).map(|p| 1u64 << p).collect();
+
+    println!("# Table 2 — METG (µs), stencil, 1 node (48 simulated cores)\n");
+    let t = table2(&SystemKind::all(), &[1, 8, 16], 100, &grains, &params);
+    println!("{}", t.to_markdown());
+
+    // Real-mode sweep on this host (single-core box: measures each
+    // runtime's true code-path cost, not parallel scaling).
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let real_grains: Vec<u64> = (4..=12).step_by(4).map(|p| 1u64 << p).collect();
+    println!("# Real-mode sweep on this host ({host} core(s))\n");
+    let rows = fig1(
+        &[SystemKind::MpiLike, SystemKind::CharmLike, SystemKind::HpxLocal],
+        host,
+        50,
+        &real_grains,
+        false,
+        &params,
+    );
+    println!("{}", fig1_table(&rows, &real_grains).to_markdown());
+}

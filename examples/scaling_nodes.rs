@@ -1,0 +1,21 @@
+//! Fig 2 driver: METG vs node count (1..8 simulated Rostam nodes) under
+//! overdecomposition 8 and 16 — the paper's communication-hiding study.
+//!
+//! `cargo run --release --example scaling_nodes`
+
+use taskbench_amt::experiments::fig2;
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn main() {
+    let params = SimParams::default();
+    let grains: Vec<u64> = (2..=16).step_by(2).map(|p| 1u64 << p).collect();
+    for tpc in [8usize, 16] {
+        println!("# Fig 2{} — METG (µs) vs nodes, overdecomposition {tpc}\n",
+                 if tpc == 8 { 'a' } else { 'b' });
+        let t = fig2(&SystemKind::all(), &[1, 2, 4, 8], tpc, 50, &grains, &params);
+        println!("{}", t.to_markdown());
+    }
+    println!("reading: lower is better; flat is ideal (topology-independent).");
+    println!("expected: MPI & Charm++ low/flat, HPX-dist & MPI+OpenMP rising.");
+}

@@ -1,0 +1,76 @@
+"""AOT bridge: lower the L2 jax functions to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The HLO *text* parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md and load_hlo.rs.
+
+Run once at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+
+Usage: python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# name -> (fn, example-args factory)
+ARTIFACTS = {
+    "task_body": (model.task_body, model.example_args),
+    "compute_kernel": (model.compute_kernel_only, model.compute_kernel_args),
+    "memory_kernel": (model.memory_kernel_only, model.memory_kernel_args),
+}
+
+
+def emit(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"k_max": model.K_MAX, "tile": [8, 128], "artifacts": {}}
+    for name, (fn, args_fn) in ARTIFACTS.items():
+        args = args_fn()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "args": [
+                {"shape": list(a.shape), "dtype": a.dtype.name} for a in args
+            ],
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    emit(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

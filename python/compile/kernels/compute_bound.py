@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: Task Bench's compute-bound kernel, rethought for TPU.
+
+Task Bench's ``execute_kernel_compute`` is a scalar-C FMA busy-loop: for
+``iterations`` rounds it updates a small scratch buffer with ``x = a*x + b``.
+On a GPU the natural port would be one thread per element; on TPU the right
+shape is one VPU tile: we lay the scratch buffer out as an ``(8, 128)`` f32
+tile (the VPU lane shape), keep it resident in VMEM for the whole loop, and
+iterate with ``lax.fori_loop`` so the loop body is a single fused
+multiply-add per element per round.
+
+VMEM footprint: one ``(8, 128)`` f32 tile = 4 KiB, plus the output tile —
+~8 KiB total, far below the ~16 MiB VMEM budget, so the kernel is purely
+compute-bound exactly like the original. FLOP count: 2 FLOPs per element per
+iteration = ``2 * 1024 * iterations``.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape = one float32 VPU register tile (sublane x lane).
+TILE = (8, 128)
+# FMA coefficients. Chosen so that even 2**24 iterations stay well inside
+# f32 range: x_n ~ x_0 * A**n with A**(2**24) ~ e**1.67.
+FMA_A = 1.0000001
+FMA_B = 1e-6
+
+FLOPS_PER_ELEM_PER_ITER = 2  # one multiply + one add
+TILE_ELEMS = TILE[0] * TILE[1]
+
+
+def _kernel(iters_ref, x_ref, o_ref):
+    """Pallas body: VMEM-resident FMA loop.
+
+    ``iters_ref`` is a (1,) int32 scalar operand (SMEM-like), ``x_ref`` the
+    input tile, ``o_ref`` the output tile. The loop carry lives in vector
+    registers; nothing is spilled between iterations.
+    """
+    x = x_ref[...]
+    n = iters_ref[0]
+
+    def body(_, v):
+        return v * FMA_A + FMA_B
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, x)
+
+
+def compute_bound(x, iters):
+    """Run the compute-bound kernel: ``iters`` FMA rounds over tile ``x``.
+
+    Args:
+      x: f32 tile of shape ``TILE``.
+      iters: int32 scalar (traced OK) — number of FMA rounds.
+
+    Returns:
+      f32 tile of shape ``TILE``.
+    """
+    iters_arr = jnp.asarray(iters, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(TILE, jnp.float32),
+        interpret=True,
+    )(iters_arr, x)
+
+
+def flops(iters: int) -> int:
+    """FLOPs performed by one kernel invocation with ``iters`` rounds."""
+    return FLOPS_PER_ELEM_PER_ITER * TILE_ELEMS * int(iters)

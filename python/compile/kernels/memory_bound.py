@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: Task Bench's memory-bound kernel for TPU.
+
+The original walks a scratch buffer larger than cache with unit-stride
+loads/stores per iteration. The TPU rethink: the working set is a
+``(64, 128)`` f32 block (32 KiB) streamed through VMEM; each iteration is a
+rotate-by-one-sublane plus a scale, so every round touches every element
+once (pure bandwidth, negligible arithmetic intensity: 1 FLOP per 8 bytes
+moved).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = (64, 128)
+SCALE = 1.0000001
+
+BLOCK_ELEMS = BLOCK[0] * BLOCK[1]
+BYTES_PER_ELEM_PER_ITER = 8  # one f32 read + one f32 write
+
+
+def _kernel(iters_ref, x_ref, o_ref):
+    x = x_ref[...]
+    n = iters_ref[0]
+
+    def body(_, v):
+        # Rotate one sublane and scale: a full read + write of the block.
+        return jnp.roll(v, 1, axis=0) * SCALE
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body, x)
+
+
+def memory_bound(x, iters):
+    """Run ``iters`` rotate-and-scale rounds over block ``x``.
+
+    Args:
+      x: f32 block of shape ``BLOCK``.
+      iters: int32 scalar (traced OK).
+
+    Returns:
+      f32 block of shape ``BLOCK``.
+    """
+    iters_arr = jnp.asarray(iters, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(BLOCK, jnp.float32),
+        interpret=True,
+    )(iters_arr, x)
+
+
+def bytes_moved(iters: int) -> int:
+    """Bytes moved through the memory system by one invocation."""
+    return BYTES_PER_ELEM_PER_ITER * BLOCK_ELEMS * int(iters)

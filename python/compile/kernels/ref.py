@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: pytest asserts the Pallas kernels
+(interpret mode) match these references (allclose with tight tolerances),
+and the Rust native kernel mirrors the same arithmetic so the L3 fast path
+is numerically interchangeable with the L1 kernel.
+"""
+
+import jax.numpy as jnp
+
+from .compute_bound import FMA_A, FMA_B
+from .memory_bound import SCALE
+
+
+def compute_bound_ref(x, iters: int):
+    """Reference FMA loop, unrolled in Python (requires concrete ``iters``)."""
+    v = jnp.asarray(x, jnp.float32)
+    for _ in range(int(iters)):
+        v = v * jnp.float32(FMA_A) + jnp.float32(FMA_B)
+    return v
+
+
+def memory_bound_ref(x, iters: int):
+    """Reference rotate-and-scale loop."""
+    v = jnp.asarray(x, jnp.float32)
+    for _ in range(int(iters)):
+        v = jnp.roll(v, 1, axis=0) * jnp.float32(SCALE)
+    return v
+
+
+def task_body_ref(deps, mask, coord, iters: int):
+    """Reference for the full L2 task body (see ``model.task_body``)."""
+    deps = jnp.asarray(deps, jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    coord = jnp.asarray(coord, jnp.float32)
+    denom = jnp.maximum(jnp.float32(1.0), mask.sum())
+    x = jnp.tensordot(mask, deps, axes=1) / denom
+    x = x + jnp.float32(1e-3) * (coord[0] + jnp.float32(0.5) * coord[1])
+    return compute_bound_ref(x, iters)

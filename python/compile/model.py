@@ -1,0 +1,79 @@
+"""L2: the Task Bench *task body* as a jax computation.
+
+One task of the Task Bench graph consumes the output tiles of up to
+``K_MAX`` dependencies, mixes them with its own graph coordinate (so the
+output is unique per task and checksummable), then runs the L1 compute-bound
+Pallas kernel for ``iters`` rounds.
+
+A single HLO artifact serves every task in the graph: variable dependency
+counts are expressed with a 0/1 ``mask`` vector over a fixed ``K_MAX`` input
+slab, and the iteration count is a *runtime scalar* driving a bounded
+``fori_loop`` inside the kernel — so one compile covers the whole grain-size
+sweep. Python never runs at request time: ``aot.py`` lowers these functions
+once to HLO text and the Rust runtime replays them via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.compute_bound import TILE, compute_bound
+from .kernels.memory_bound import BLOCK, memory_bound
+
+# Fixed dependency-slab width. Task Bench's stencil needs 3 (left, self,
+# right); fft/nearest use more — 4 covers every pattern we ship at radix<=4,
+# and wider radices are folded by the Rust side into chained mixes.
+K_MAX = 4
+
+
+def task_body(deps, mask, coord, iters):
+    """One Task Bench task: mix dependencies, run the compute kernel.
+
+    Args:
+      deps:  f32[K_MAX, 8, 128] — dependency output tiles (unused slots are
+             arbitrary; they are masked out).
+      mask:  f32[K_MAX] — 1.0 for live dependencies, 0.0 otherwise.
+      coord: f32[2] — (x, t) graph coordinate of this task.
+      iters: i32[]  — compute-kernel rounds (the grain size).
+
+    Returns:
+      (f32[8, 128],) — the task's output tile.
+    """
+    denom = jnp.maximum(jnp.float32(1.0), mask.sum())
+    x = jnp.tensordot(mask, deps, axes=1) / denom
+    x = x + jnp.float32(1e-3) * (coord[0] + jnp.float32(0.5) * coord[1])
+    return (compute_bound(x, iters),)
+
+
+def compute_kernel_only(x, iters):
+    """Bare L1 compute kernel (numerical-parity artifact for the Rust
+    native kernel and the PJRT dispatch-overhead microbench)."""
+    return (compute_bound(x, iters),)
+
+
+def memory_kernel_only(x, iters):
+    """Bare L1 memory-bound kernel."""
+    return (memory_bound(x, iters),)
+
+
+def example_args():
+    """ShapeDtypeStructs for lowering ``task_body``."""
+    return (
+        jax.ShapeDtypeStruct((K_MAX,) + TILE, jnp.float32),
+        jax.ShapeDtypeStruct((K_MAX,), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def compute_kernel_args():
+    return (
+        jax.ShapeDtypeStruct(TILE, jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def memory_kernel_args():
+    return (
+        jax.ShapeDtypeStruct(BLOCK, jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )

@@ -1,0 +1,136 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles.
+
+This is the CORE numerical-correctness signal of the compile path: if these
+pass, the HLO artifacts the Rust runtime executes compute exactly what
+``ref.py`` (and the mirrored Rust native kernel) computes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.compute_bound import (
+    FMA_A,
+    FMA_B,
+    TILE,
+    compute_bound,
+    flops,
+)
+from compile.kernels.memory_bound import BLOCK, bytes_moved, memory_bound
+from compile.kernels.ref import (
+    compute_bound_ref,
+    memory_bound_ref,
+)
+
+
+def tile_of(seed: int, shape=TILE) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape), jnp.float32)
+
+
+def fma_tol(iters: int) -> dict:
+    """XLA contracts the loop body into a true FMA (one rounding); the
+    unrolled ref rounds twice per round. Divergence grows ~1 ulp/iter."""
+    return dict(rtol=1e-6 + 2.5e-7 * iters, atol=1e-7 + 1e-9 * iters)
+
+
+# ---------------------------------------------------------------- compute
+
+
+@pytest.mark.parametrize("iters", [0, 1, 2, 7, 64, 1000])
+def test_compute_bound_matches_ref(iters):
+    x = tile_of(iters + 1)
+    got = compute_bound(x, iters)
+    want = compute_bound_ref(x, iters)
+    np.testing.assert_allclose(got, want, **fma_tol(iters))
+
+
+def test_compute_bound_zero_iters_is_identity():
+    x = tile_of(3)
+    np.testing.assert_array_equal(compute_bound(x, 0), x)
+
+
+def test_compute_bound_iters_is_dynamic():
+    """One jit covers every iteration count (no per-grain recompiles)."""
+    f = jax.jit(compute_bound)
+    x = tile_of(5)
+    for iters in (1, 3, 17):
+        np.testing.assert_allclose(
+            f(x, iters), compute_bound_ref(x, iters), **fma_tol(iters)
+        )
+
+
+def test_compute_bound_closed_form():
+    """x_n = A^n x_0 + B (A^n - 1)/(A - 1) — analytic cross-check."""
+    iters = 200
+    x = tile_of(9)
+    a_n = FMA_A**iters
+    want = a_n * np.asarray(x, np.float64) + FMA_B * (a_n - 1.0) / (FMA_A - 1.0)
+    got = np.asarray(compute_bound(x, iters), np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_compute_bound_no_overflow_at_large_iters():
+    x = tile_of(11)
+    out = np.asarray(compute_bound(x, 1 << 20))
+    assert np.all(np.isfinite(out))
+
+
+def test_flops_accounting():
+    assert flops(10) == 2 * 8 * 128 * 10
+    assert flops(0) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    iters=st.integers(min_value=0, max_value=512),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=0.01, max_value=100.0),
+)
+def test_compute_bound_hypothesis(iters, seed, scale):
+    x = tile_of(seed) * jnp.float32(scale)
+    got = compute_bound(x, iters)
+    want = compute_bound_ref(x, iters)
+    tol = fma_tol(iters)
+    np.testing.assert_allclose(
+        got, want, rtol=tol["rtol"], atol=tol["atol"] * scale
+    )
+
+
+# ----------------------------------------------------------------- memory
+
+
+@pytest.mark.parametrize("iters", [0, 1, 2, 5, 64, BLOCK[0], BLOCK[0] + 3])
+def test_memory_bound_matches_ref(iters):
+    x = tile_of(iters + 100, shape=BLOCK)
+    got = memory_bound(x, iters)
+    want = memory_bound_ref(x, iters)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_memory_bound_full_rotation_returns_scaled_original():
+    """BLOCK[0] rotations = identity permutation, scaled by SCALE^n."""
+    x = tile_of(42, shape=BLOCK)
+    n = BLOCK[0]
+    got = np.asarray(memory_bound(x, n), np.float64)
+    want = np.asarray(x, np.float64) * (1.0000001**n)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_bytes_accounting():
+    assert bytes_moved(3) == 8 * 64 * 128 * 3
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    iters=st.integers(min_value=0, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_memory_bound_hypothesis(iters, seed):
+    x = tile_of(seed, shape=BLOCK)
+    got = memory_bound(x, iters)
+    want = memory_bound_ref(x, iters)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,110 @@
+"""L2 task body: shape contract, masking semantics, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels.compute_bound import TILE
+from compile.kernels.ref import task_body_ref
+
+
+def slab_of(seed: int) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.uniform(-1.0, 1.0, size=(model.K_MAX,) + TILE), jnp.float32
+    )
+
+
+def test_output_shape():
+    (out,) = model.task_body(
+        slab_of(0),
+        jnp.ones((model.K_MAX,), jnp.float32),
+        jnp.zeros((2,), jnp.float32),
+        jnp.int32(3),
+    )
+    assert out.shape == TILE
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("nlive", [0, 1, 2, 3, 4])
+def test_matches_ref_for_every_dep_count(nlive):
+    deps = slab_of(nlive)
+    mask = jnp.asarray(
+        [1.0] * nlive + [0.0] * (model.K_MAX - nlive), jnp.float32
+    )
+    coord = jnp.asarray([3.0, 7.0], jnp.float32)
+    (got,) = model.task_body(deps, mask, coord, jnp.int32(5))
+    want = task_body_ref(deps, mask, coord, 5)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_masked_slots_do_not_leak():
+    """Garbage in masked-out dep slots must not change the output."""
+    deps_a = slab_of(1)
+    deps_b = deps_a.at[2:].set(1e6)  # poison dead slots
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    coord = jnp.asarray([0.0, 1.0], jnp.float32)
+    (a,) = model.task_body(deps_a, mask, coord, jnp.int32(4))
+    (b,) = model.task_body(deps_b, mask, coord, jnp.int32(4))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_coordinate_disambiguates_tasks():
+    """Two tasks with identical deps but different coords differ."""
+    deps = slab_of(2)
+    mask = jnp.ones((model.K_MAX,), jnp.float32)
+    (a,) = model.task_body(deps, mask, jnp.asarray([0.0, 0.0], jnp.float32), 2)
+    (b,) = model.task_body(deps, mask, jnp.asarray([1.0, 0.0], jnp.float32), 2)
+    assert not np.allclose(a, b)
+
+
+def test_zero_mask_uses_coord_only():
+    deps = slab_of(3)
+    mask = jnp.zeros((model.K_MAX,), jnp.float32)
+    coord = jnp.asarray([2.0, 4.0], jnp.float32)
+    (got,) = model.task_body(deps, mask, coord, jnp.int32(0))
+    want = np.full(TILE, 1e-3 * (2.0 + 0.5 * 4.0), np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_deterministic():
+    deps = slab_of(4)
+    mask = jnp.ones((model.K_MAX,), jnp.float32)
+    coord = jnp.asarray([1.0, 2.0], jnp.float32)
+    (a,) = model.task_body(deps, mask, coord, jnp.int32(9))
+    (b,) = model.task_body(deps, mask, coord, jnp.int32(9))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_jit_with_dynamic_iters():
+    f = jax.jit(model.task_body)
+    deps = slab_of(5)
+    mask = jnp.ones((model.K_MAX,), jnp.float32)
+    coord = jnp.asarray([1.0, 1.0], jnp.float32)
+    for iters in (0, 1, 13):
+        (got,) = f(deps, mask, coord, jnp.int32(iters))
+        want = task_body_ref(deps, mask, coord, iters)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    nlive=st.integers(min_value=0, max_value=model.K_MAX),
+    iters=st.integers(min_value=0, max_value=64),
+    xcoord=st.integers(min_value=0, max_value=1000),
+    tcoord=st.integers(min_value=0, max_value=1000),
+)
+def test_task_body_hypothesis(seed, nlive, iters, xcoord, tcoord):
+    deps = slab_of(seed)
+    mask = jnp.asarray(
+        [1.0] * nlive + [0.0] * (model.K_MAX - nlive), jnp.float32
+    )
+    coord = jnp.asarray([float(xcoord), float(tcoord)], jnp.float32)
+    (got,) = model.task_body(deps, mask, coord, jnp.int32(iters))
+    want = task_body_ref(deps, mask, coord, iters)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

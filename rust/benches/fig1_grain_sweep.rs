@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig 1a/1b — TFLOP/s and efficiency vs grain size,
+//! stencil, 1 node (48 simulated cores + real single-core run for the
+//! in-process runtimes).
+//!
+//! `cargo bench --bench fig1_grain_sweep`
+
+use taskbench_amt::experiments::{fig1, fig1_table};
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn main() {
+    let params = SimParams::default();
+    let grains: Vec<u64> = (2..=16).step_by(2).map(|p| 1u64 << p).collect();
+    let t0 = std::time::Instant::now();
+    let rows = fig1(&SystemKind::all(), 48, 100, &grains, true, &params);
+    println!("# Fig 1a/1b — stencil, 1 node (48 cores), 48 tasks, sim mode");
+    println!("{}", fig1_table(&rows, &grains).to_markdown());
+    println!("bench wall: {:?}", t0.elapsed());
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Fig 2a/2b — METG vs node count under
+//! overdecomposition 8 and 16 (simulated Rostam cluster, EDR IB model).
+//!
+//! `cargo bench --bench fig2_nodes`
+
+use taskbench_amt::experiments::fig2;
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn main() {
+    let params = SimParams::default();
+    let grains: Vec<u64> = (2..=16).step_by(2).map(|p| 1u64 << p).collect();
+    let nodes = [1usize, 2, 4, 8];
+    let t0 = std::time::Instant::now();
+    for tpc in [8usize, 16] {
+        let t = fig2(&SystemKind::all(), &nodes, tpc, 50, &grains, &params);
+        println!("# Fig 2{} — METG (µs) vs nodes, overdecomposition {tpc}",
+                 if tpc == 8 { 'a' } else { 'b' });
+        println!("{}", t.to_markdown());
+    }
+    println!("expected shape: MPI & Charm++ low and flat; HPX-dist and");
+    println!("MPI+OpenMP higher and rising with node count (paper §6.2).");
+    println!("bench wall: {:?}", t0.elapsed());
+}

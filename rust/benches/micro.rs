@@ -1,0 +1,100 @@
+//! Microbenchmarks of the substrates whose costs the paper's ablations
+//! probe: priority-queue flavours (§5.1 eight-byte vs bit-vector),
+//! work-stealing deque ops, marshalling, per-runtime task overhead on
+//! this host (single-threaded — exact code-path cost), and PJRT dispatch.
+//!
+//! `cargo bench --bench micro`
+
+use std::time::Instant;
+
+use taskbench_amt::comm::{marshal, unmarshal};
+use taskbench_amt::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use taskbench_amt::runtimes::{run_with, RunOptions, SystemKind};
+use taskbench_amt::sched::{BitvecPrioQueue, EightBytePrioQueue, PrioQueue, Worker};
+
+fn time_ns(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    // warm-up
+    for _ in 0..iters.min(1000) {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("{label:<44} {ns:>10.1} ns/op");
+    ns
+}
+
+fn main() {
+    println!("## sched: priority queues (Fig 3 'Char. Priority' knob)");
+    let mut bq: BitvecPrioQueue<u64> = BitvecPrioQueue::default();
+    let mut i = 0u32;
+    let bv = time_ns("bitvec prio push+pop", 200_000, || {
+        i = i.wrapping_add(1);
+        bq.push(&i.to_be_bytes(), i as u64);
+        if bq.len() > 64 {
+            bq.pop();
+        }
+    });
+    let mut eq: EightBytePrioQueue<u64> = EightBytePrioQueue::default();
+    let eb = time_ns("eight-byte prio push+pop", 200_000, || {
+        i = i.wrapping_add(1);
+        eq.push(&i.to_be_bytes(), i as u64);
+        if eq.len() > 64 {
+            eq.pop();
+        }
+    });
+    println!("eight-byte saves {:.1}% of the message-queue op\n", (1.0 - eb / bv) * 100.0);
+
+    println!("## sched: Chase-Lev deque (HPX executor hot path)");
+    let (w, _s) = Worker::<u64>::new();
+    time_ns("wsdeque push+pop (owner)", 200_000, || {
+        w.push(1);
+        let _ = w.pop();
+    });
+
+    println!("\n## comm: marshalling (Charm++ param-marshall / HPX parcel)");
+    let payload = vec![1.0f32; 16];
+    time_ns("marshal+unmarshal 64 B", 200_000, || {
+        let wire = marshal(&payload);
+        let _ = unmarshal(&wire);
+    });
+    let tile = vec![1.0f32; 1024];
+    time_ns("marshal+unmarshal 4 KiB", 50_000, || {
+        let wire = marshal(&tile);
+        let _ = unmarshal(&wire);
+    });
+
+    println!("\n## runtimes: per-task overhead, single-threaded, empty kernel");
+    for system in SystemKind::all() {
+        let g = TaskGraph::new(GraphConfig {
+            width: 16,
+            steps: 200,
+            dependence: DependencePattern::Stencil1D,
+            kernel: KernelConfig::empty(),
+            ..GraphConfig::default()
+        });
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let r = run_with(system, &g, &RunOptions::new(1)).unwrap();
+            best = best.min(r.elapsed.as_secs_f64());
+        }
+        println!(
+            "{:<44} {:>10.1} ns/task",
+            system.name(),
+            best * 1e9 / g.num_points() as f64
+        );
+    }
+
+    println!("\n## PJRT dispatch (why METG sweeps use the native kernel)");
+    match taskbench_amt::runtime::XlaTaskRuntime::load(
+        taskbench_amt::runtime::XlaTaskRuntime::default_dir(),
+    ) {
+        Ok(rt) => {
+            let st = rt.measure_dispatch_overhead(200).unwrap();
+            println!("pjrt zero-iter kernel dispatch: mean {:.1} µs, min {:.1} µs", st.mean_us, st.min_us);
+        }
+        Err(e) => println!("(skipped: {e:#})"),
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Table 2 — METG(µs) per system for the stencil
+//! without/with overdecomposition (1, 8, 16 tasks per core), 1 node.
+//!
+//! `cargo bench --bench table2_metg`
+
+use taskbench_amt::experiments::table2;
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn main() {
+    let params = SimParams::default();
+    let grains: Vec<u64> = (2..=16).step_by(2).map(|p| 1u64 << p).collect();
+    let t0 = std::time::Instant::now();
+    let t = table2(&SystemKind::all(), &[1, 8, 16], 100, &grains, &params);
+    println!("# Table 2 — METG (µs), stencil, 1 node (48 simulated cores)");
+    println!("{}", t.to_markdown());
+    println!("paper reference: Charm++ 9.8/37.8/84.1, HPX-dist 19.3/39.2/54.1,");
+    println!("                 HPX-local 22.4/54.5/77.9, MPI 3.9/6.1/7.6,");
+    println!("                 OpenMP 36.2/36.9/41.8, MPI+OpenMP 50.9/152.5/258.6");
+    println!("bench wall: {:?}", t0.elapsed());
+}

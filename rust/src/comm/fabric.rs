@@ -1,0 +1,121 @@
+//! In-process message fabric: N endpoints with blocking MPSC mailboxes.
+//!
+//! This is the transport under the MPI-like, Charm++-like and HPX-
+//! distributed runtimes in *real* mode. It is deliberately thin — the
+//! interesting costs (marshalling, scheduling) live in the runtimes; the
+//! fabric contributes only the queue hand-off, like shared-memory byte
+//! transports do.
+
+use std::sync::Arc;
+
+use crate::sched::RunQueue;
+
+/// A fabric of `n` endpoints exchanging messages of type `T`.
+pub struct Fabric<T> {
+    boxes: Vec<Arc<RunQueue<T>>>,
+}
+
+impl<T: Send> Fabric<T> {
+    pub fn new(n: usize) -> Self {
+        Self { boxes: (0..n).map(|_| Arc::new(RunQueue::new())).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.boxes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    /// Handle for endpoint `rank` (cloneable senders, single receiver by
+    /// convention).
+    pub fn endpoint(&self, rank: usize) -> Endpoint<T> {
+        Endpoint { rank, boxes: self.boxes.clone() }
+    }
+}
+
+/// One endpoint's view: send to anyone, receive from own mailbox.
+pub struct Endpoint<T> {
+    rank: usize,
+    boxes: Vec<Arc<RunQueue<T>>>,
+}
+
+impl<T: Send> Clone for Endpoint<T> {
+    fn clone(&self) -> Self {
+        Self { rank: self.rank, boxes: self.boxes.clone() }
+    }
+}
+
+impl<T: Send> Endpoint<T> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.boxes.len()
+    }
+
+    pub fn send(&self, dst: usize, msg: T) {
+        self.boxes[dst].push(msg);
+    }
+
+    /// Blocking receive (spins briefly first — network-poll style).
+    pub fn recv(&self) -> T {
+        self.boxes[self.rank].pop_spin_then_block(200)
+    }
+
+    pub fn try_recv(&self) -> Option<T> {
+        self.boxes[self.rank].try_pop()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point() {
+        let f: Fabric<u32> = Fabric::new(2);
+        let a = f.endpoint(0);
+        let b = f.endpoint(1);
+        a.send(1, 42);
+        assert_eq!(b.recv(), 42);
+    }
+
+    #[test]
+    fn self_send() {
+        let f: Fabric<&str> = Fabric::new(1);
+        let e = f.endpoint(0);
+        e.send(0, "hi");
+        assert_eq!(e.recv(), "hi");
+    }
+
+    #[test]
+    fn all_to_all_exchange() {
+        let n = 4;
+        let f: Fabric<(usize, usize)> = Fabric::new(n);
+        let eps: Vec<_> = (0..n).map(|r| f.endpoint(r)).collect();
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    for dst in 0..ep.num_ranks() {
+                        ep.send(dst, (ep.rank(), dst));
+                    }
+                    let mut from = Vec::new();
+                    for _ in 0..ep.num_ranks() {
+                        let (src, dst) = ep.recv();
+                        assert_eq!(dst, ep.rank());
+                        from.push(src);
+                    }
+                    from.sort_unstable();
+                    assert_eq!(from, (0..ep.num_ranks()).collect::<Vec<_>>());
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

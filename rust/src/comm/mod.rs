@@ -1,0 +1,15 @@
+//! Communication substrate.
+//!
+//! In-process message fabric ([`fabric`]) used by the distributed-flavour
+//! runtimes in *real* mode, payload marshalling ([`serialize`]) modelling
+//! Charm++ parameter-marshalling / HPX parcel serialization, and the
+//! interconnect model ([`model`]) the DES uses for multi-node runs
+//! (EDR-InfiniBand-like by default, per Table 1 of the paper).
+
+mod fabric;
+mod model;
+mod serialize;
+
+pub use fabric::{Endpoint, Fabric};
+pub use model::{IntranodeTransport, NetworkModel};
+pub use serialize::{marshal, unmarshal, MsgPayload};

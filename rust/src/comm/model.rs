@@ -1,0 +1,82 @@
+//! Interconnect model: parameters of the simulated fabric.
+//!
+//! Defaults approximate the paper's testbed (Table 1): 200 Gb/s EDR
+//! InfiniBand (~1 µs small-message latency), and DDR4 shared memory for
+//! the intra-node SHMEM path.
+
+/// How intra-node messages travel in the Charm++-like runtime — the
+/// §5.1 "Intranode IPC via Shared Memory" ablation knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntranodeTransport {
+    /// Default Charm++ build: loop through the NIC path (marshal + copy).
+    Nic,
+    /// SHMEM build: zero-copy hand-off through shared memory.
+    Shmem,
+}
+
+/// Latency/bandwidth interconnect model used by the discrete-event
+/// simulator; `xfer_ns` is the end-to-end wire time for one message.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// One-way small-message latency between nodes, ns.
+    pub inter_node_latency_ns: f64,
+    /// Inter-node bandwidth, bytes/ns (== GB/s / 1e0... i.e. GB/s * 1e-0).
+    pub inter_node_bytes_per_ns: f64,
+    /// Intra-node (cross-core) hand-off latency, ns.
+    pub intra_node_latency_ns: f64,
+    /// Intra-node copy bandwidth, bytes/ns.
+    pub intra_node_bytes_per_ns: f64,
+    pub intranode: IntranodeTransport,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self {
+            // EDR IB: ~1 µs MPI pingpong latency, 200 Gb/s = 25 GB/s
+            inter_node_latency_ns: 1_000.0,
+            inter_node_bytes_per_ns: 25.0,
+            // shared memory: ~150 ns hand-off, ~12 GB/s effective copy
+            intra_node_latency_ns: 150.0,
+            intra_node_bytes_per_ns: 12.0,
+            intranode: IntranodeTransport::Shmem,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Wire time for `bytes` between two cores, ns.
+    pub fn xfer_ns(&self, bytes: usize, same_node: bool) -> f64 {
+        if same_node {
+            self.intra_node_latency_ns
+                + bytes as f64 / self.intra_node_bytes_per_ns
+        } else {
+            self.inter_node_latency_ns
+                + bytes as f64 / self.inter_node_bytes_per_ns
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let m = NetworkModel::default();
+        let t = m.xfer_ns(64, false);
+        assert!(t > 1_000.0 && t < 1_100.0, "{t}");
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let m = NetworkModel::default();
+        let t = m.xfer_ns(25_000_000, false); // 25 MB at 25 B/ns = 1 ms
+        assert!(t > 1.0e6 && t < 1.1e6, "{t}");
+    }
+
+    #[test]
+    fn intra_node_cheaper_than_inter_node() {
+        let m = NetworkModel::default();
+        assert!(m.xfer_ns(64, true) < m.xfer_ns(64, false));
+    }
+}

@@ -1,0 +1,89 @@
+//! Payload marshalling.
+//!
+//! Charm++ parameter-marshals entry-method arguments (a real copy into a
+//! message buffer, and another copy out on the receive side); HPX
+//! serializes parcels similarly. The paper singles this out ("Charm++'s
+//! parameter marshalling and related copying overheads"). These functions
+//! *are* those copies — the SHMEM/zero-copy paths skip them.
+
+use crate::core::Payload;
+
+/// A message body: either a zero-copy shared payload (SHMEM-style) or a
+/// marshalled byte buffer (NIC-style / remote parcel).
+#[derive(Debug, Clone)]
+pub enum MsgPayload {
+    Shared(Payload),
+    Marshalled(Box<[u8]>),
+}
+
+impl MsgPayload {
+    /// Recover the f32 payload, copying iff it was marshalled.
+    pub fn into_payload(self) -> Payload {
+        match self {
+            MsgPayload::Shared(p) => p,
+            MsgPayload::Marshalled(bytes) => unmarshal(&bytes),
+        }
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            MsgPayload::Shared(p) => p.len() * 4,
+            MsgPayload::Marshalled(b) => b.len(),
+        }
+    }
+}
+
+/// Copy a payload into a wire buffer (little-endian f32s).
+pub fn marshal(p: &[f32]) -> Box<[u8]> {
+    let mut out = Vec::with_capacity(p.len() * 4);
+    for v in p {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.into_boxed_slice()
+}
+
+/// Copy a wire buffer back into a payload.
+pub fn unmarshal(bytes: &[u8]) -> Payload {
+    assert!(bytes.len() % 4 == 0, "wire buffer not f32-aligned");
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Payload::from(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_exact() {
+        let p: Vec<f32> = (0..64).map(|i| (i as f32).sin()).collect();
+        let wire = marshal(&p);
+        assert_eq!(wire.len(), 256);
+        let back = unmarshal(&wire);
+        assert_eq!(&back[..], &p[..]);
+    }
+
+    #[test]
+    fn round_trip_specials() {
+        let p = vec![0.0f32, -0.0, f32::MIN, f32::MAX, 1e-38, f32::INFINITY];
+        let back = unmarshal(&marshal(&p));
+        assert_eq!(&back[..], &p[..]);
+    }
+
+    #[test]
+    fn shared_vs_marshalled_same_payload() {
+        let p = Payload::from(vec![1.0f32, 2.0, 3.0]);
+        let a = MsgPayload::Shared(p.clone()).into_payload();
+        let b = MsgPayload::Marshalled(marshal(&p)).into_payload();
+        assert_eq!(&a[..], &b[..]);
+        assert_eq!(MsgPayload::Shared(p).wire_bytes(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "aligned")]
+    fn unaligned_wire_rejected() {
+        unmarshal(&[1, 2, 3]);
+    }
+}

@@ -1,0 +1,198 @@
+//! Experiment configuration: a typed config struct parsed from a small
+//! TOML subset (`key = value`, `[section]`, `#` comments — the offline
+//! vendor set has no `toml`/`serde`, so the parser lives here) with CLI
+//! overrides applied on top.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use crate::core::DependencePattern;
+use crate::runtimes::SystemKind;
+
+/// Everything a benchmark invocation needs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Systems to run (empty = all).
+    pub systems: Vec<SystemKind>,
+    pub pattern: DependencePattern,
+    /// Cores per node (real mode: host worker threads).
+    pub cores: usize,
+    /// Simulated node counts (1 = real/single-node).
+    pub nodes: Vec<usize>,
+    pub tasks_per_core: Vec<usize>,
+    pub steps: usize,
+    /// Grain ladder (kernel iterations).
+    pub grains: Vec<u64>,
+    pub reps: usize,
+    pub warmup: usize,
+    /// Use the DES instead of real execution.
+    pub simulate: bool,
+    /// Calibrate sim params from the real runtimes (slow) instead of the
+    /// recorded defaults.
+    pub calibrate: bool,
+    pub output_csv: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            systems: SystemKind::all(),
+            pattern: DependencePattern::Stencil1D,
+            cores: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            nodes: vec![1],
+            tasks_per_core: vec![1],
+            steps: 1000,
+            grains: crate::metg::default_grains(),
+            reps: 5,
+            warmup: 1,
+            simulate: false,
+            calibrate: false,
+            output_csv: None,
+        }
+    }
+}
+
+/// Parse the TOML subset into a flat `section.key -> value` map.
+pub fn parse_toml_subset(text: &str) -> anyhow::Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(sec) = line.strip_prefix('[') {
+            let sec = sec
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+            section = sec.trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`, got `{line}`", lineno + 1);
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim().trim_matches('"').to_string();
+        out.insert(key, v);
+    }
+    Ok(out)
+}
+
+fn parse_list<T: std::str::FromStr>(v: &str) -> anyhow::Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    v.trim_matches(|c| c == '[' || c == ']')
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<T>().map_err(|e| anyhow::anyhow!("`{s}`: {e}")))
+        .collect()
+}
+
+impl ExperimentConfig {
+    /// Load from a config file, falling back to defaults for absent keys.
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        let map = parse_toml_subset(&text)?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map)?;
+        Ok(cfg)
+    }
+
+    /// Apply a key/value map (from file or CLI) onto this config.
+    pub fn apply(&mut self, map: &HashMap<String, String>) -> anyhow::Result<()> {
+        for (k, v) in map {
+            match k.replace("experiment.", "").as_str() {
+                "systems" => {
+                    self.systems = v
+                        .trim_matches(|c| c == '[' || c == ']')
+                        .split(',')
+                        .map(|s| s.trim().trim_matches('"'))
+                        .filter(|s| !s.is_empty())
+                        .map(|s| {
+                            SystemKind::parse(s)
+                                .with_context(|| format!("unknown system `{s}`"))
+                        })
+                        .collect::<anyhow::Result<_>>()?;
+                }
+                "pattern" => {
+                    self.pattern = DependencePattern::parse(v, 3)
+                        .with_context(|| format!("unknown pattern `{v}`"))?;
+                }
+                "cores" => self.cores = v.parse().context("cores")?,
+                "nodes" => self.nodes = parse_list(v)?,
+                "tasks_per_core" => self.tasks_per_core = parse_list(v)?,
+                "steps" => self.steps = v.parse().context("steps")?,
+                "grains" => self.grains = parse_list(v)?,
+                "reps" => self.reps = v.parse().context("reps")?,
+                "warmup" => self.warmup = v.parse().context("warmup")?,
+                "simulate" => self.simulate = v.parse().context("simulate")?,
+                "calibrate" => self.calibrate = v.parse().context("calibrate")?,
+                "output_csv" => self.output_csv = Some(v.clone()),
+                other => bail!("unknown config key `{other}`"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_comments_strings() {
+        let m = parse_toml_subset(
+            "# comment\n[experiment]\nsteps = 100 # trailing\npattern = \"fft\"\n",
+        )
+        .unwrap();
+        assert_eq!(m["experiment.steps"], "100");
+        assert_eq!(m["experiment.pattern"], "fft");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_toml_subset("nonsense line").is_err());
+        assert!(parse_toml_subset("[unterminated").is_err());
+    }
+
+    #[test]
+    fn apply_overrides_defaults() {
+        let mut cfg = ExperimentConfig::default();
+        let mut m = HashMap::new();
+        m.insert("steps".to_string(), "42".to_string());
+        m.insert("grains".to_string(), "[16, 256, 4096]".to_string());
+        m.insert("systems".to_string(), "[mpi, charm]".to_string());
+        m.insert("simulate".to_string(), "true".to_string());
+        cfg.apply(&m).unwrap();
+        assert_eq!(cfg.steps, 42);
+        assert_eq!(cfg.grains, vec![16, 256, 4096]);
+        assert_eq!(cfg.systems, vec![SystemKind::MpiLike, SystemKind::CharmLike]);
+        assert!(cfg.simulate);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        let mut m = HashMap::new();
+        m.insert("bogus".to_string(), "1".to_string());
+        assert!(cfg.apply(&m).is_err());
+    }
+
+    #[test]
+    fn unknown_system_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        let mut m = HashMap::new();
+        m.insert("systems".to_string(), "[nope]".to_string());
+        assert!(cfg.apply(&m).is_err());
+    }
+}

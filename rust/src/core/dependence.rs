@@ -1,0 +1,354 @@
+//! Dependence patterns: which points at `t-1` a point at `(x, t)` reads.
+//!
+//! Pattern semantics follow the Task Bench paper (§3 of Slaughter et al.):
+//! a pattern is a *cyclic sequence of dependence sets*; static patterns
+//! (stencil, nearest, …) have one set, the butterfly patterns (fft, tree)
+//! cycle through `ceil(log2(width))` sets, and the random pattern
+//! regenerates its set every `period` timesteps from a deterministic PRNG.
+
+use crate::util::Prng;
+
+/// `ceil(log2(n))` for `n >= 1` (0 for `n <= 1`).
+pub fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// A dependency pattern over the task grid.
+///
+/// `radix`-parameterized patterns take the fan-in from the pattern itself;
+/// [`DependencePattern::RandomNearest`] additionally takes the regeneration
+/// `period` from [`crate::core::GraphConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DependencePattern {
+    /// No dependencies at all: embarrassingly parallel.
+    Trivial,
+    /// Each point depends only on itself at `t-1` (no communication).
+    NoComm,
+    /// 3-point stencil `{x-1, x, x+1}` clipped at the edges — the pattern
+    /// used by every experiment in the paper.
+    Stencil1D,
+    /// 3-point stencil with periodic (wrap-around) boundaries.
+    Stencil1DPeriodic,
+    /// Wavefront/domino: `{x-1, x}` clipped (diagonal data flow).
+    Dom,
+    /// Butterfly broadcast tree: at set `k`, `x` depends on `x` with bit
+    /// `k` cleared (and itself) — information fans out from point 0 in
+    /// `ceil(log2(width))` steps.
+    Tree,
+    /// FFT butterfly: at set `k`, `x` depends on `{x, x ^ 2^k}`.
+    Fft,
+    /// Every point depends on every point (dense collective).
+    AllToAll,
+    /// `radix`-point window centred on `x`, clipped.
+    Nearest { radix: usize },
+    /// `radix` points spread evenly across the row, rotating by one each
+    /// dependence set so traffic touches the whole row over time.
+    Spread { radix: usize },
+    /// Up to `radix` distinct points drawn uniformly from the row by a
+    /// deterministic PRNG, regenerated every `period` timesteps.
+    RandomNearest { radix: usize },
+}
+
+impl DependencePattern {
+    /// All patterns at small default parameters (for sweeps and tests).
+    pub fn all() -> Vec<DependencePattern> {
+        use DependencePattern::*;
+        vec![
+            Trivial,
+            NoComm,
+            Stencil1D,
+            Stencil1DPeriodic,
+            Dom,
+            Tree,
+            Fft,
+            AllToAll,
+            Nearest { radix: 5 },
+            Spread { radix: 3 },
+            RandomNearest { radix: 3 },
+        ]
+    }
+
+    /// Parse the Task Bench CLI name (e.g. `stencil_1d`).
+    pub fn parse(name: &str, radix: usize) -> Option<Self> {
+        use DependencePattern::*;
+        Some(match name {
+            "trivial" => Trivial,
+            "no_comm" => NoComm,
+            "stencil_1d" | "stencil" => Stencil1D,
+            "stencil_1d_periodic" => Stencil1DPeriodic,
+            "dom" => Dom,
+            "tree" => Tree,
+            "fft" => Fft,
+            "all_to_all" => AllToAll,
+            "nearest" => Nearest { radix },
+            "spread" => Spread { radix },
+            "random_nearest" | "random" => RandomNearest { radix },
+            _ => return None,
+        })
+    }
+
+    /// Task Bench CLI name.
+    pub fn name(&self) -> &'static str {
+        use DependencePattern::*;
+        match self {
+            Trivial => "trivial",
+            NoComm => "no_comm",
+            Stencil1D => "stencil_1d",
+            Stencil1DPeriodic => "stencil_1d_periodic",
+            Dom => "dom",
+            Tree => "tree",
+            Fft => "fft",
+            AllToAll => "all_to_all",
+            Nearest { .. } => "nearest",
+            Spread { .. } => "spread",
+            RandomNearest { .. } => "random_nearest",
+        }
+    }
+
+    /// Number of distinct dependence sets this pattern cycles through.
+    pub fn timestep_period(&self, width: usize, random_period: usize) -> usize {
+        use DependencePattern::*;
+        match self {
+            Tree | Fft => ceil_log2(width).max(1),
+            RandomNearest { .. } => random_period.max(1),
+            _ => 1,
+        }
+    }
+
+    /// Which dependence set governs the edges *into* timestep `t` (t >= 1).
+    pub fn dset_at(&self, t: usize, width: usize, random_period: usize) -> usize {
+        use DependencePattern::*;
+        let p = self.timestep_period(width, random_period);
+        match self {
+            Tree | Fft => (t - 1) % p,
+            // Random patterns hold a set for `period` steps, then switch.
+            RandomNearest { .. } => ((t - 1) / p.max(1)) % MAX_RANDOM_SETS,
+            _ => 0,
+        }
+    }
+
+    /// Dependencies of point `x` under dependence set `dset`, sorted
+    /// ascending, deduplicated. `graph_seed` feeds the random pattern.
+    pub fn deps(
+        &self,
+        dset: usize,
+        x: usize,
+        width: usize,
+        graph_seed: u64,
+    ) -> Vec<usize> {
+        use DependencePattern::*;
+        debug_assert!(x < width);
+        let mut out = match *self {
+            Trivial => vec![],
+            NoComm => vec![x],
+            Stencil1D => {
+                let lo = x.saturating_sub(1);
+                let hi = (x + 1).min(width - 1);
+                (lo..=hi).collect()
+            }
+            Stencil1DPeriodic => {
+                if width == 1 {
+                    vec![0]
+                } else {
+                    vec![(x + width - 1) % width, x, (x + 1) % width]
+                }
+            }
+            Dom => {
+                if x == 0 {
+                    vec![0]
+                } else {
+                    vec![x - 1, x]
+                }
+            }
+            Tree => {
+                let cleared = x & !(1usize << dset);
+                vec![cleared, x]
+            }
+            Fft => {
+                let partner = x ^ (1usize << dset);
+                if partner < width {
+                    vec![partner, x]
+                } else {
+                    vec![x]
+                }
+            }
+            AllToAll => (0..width).collect(),
+            Nearest { radix } => {
+                let half = radix / 2;
+                let lo = x.saturating_sub(half);
+                let hi = (x + radix.saturating_sub(half + 1)).min(width - 1);
+                (lo..=hi).collect()
+            }
+            Spread { radix } => {
+                let r = radix.max(1).min(width);
+                (0..r)
+                    .map(|i| (x + i * width / r + dset + i) % width)
+                    .collect()
+            }
+            RandomNearest { radix } => {
+                let r = radix.max(1).min(width);
+                let mut rng = Prng::seed_from_u64(
+                    graph_seed
+                        ^ (dset as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ (x as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+                );
+                (0..r).map(|_| rng.gen_range(width)).collect()
+            }
+        };
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Upper bound on the fan-in of any point under this pattern.
+    pub fn max_fanin(&self, width: usize) -> usize {
+        use DependencePattern::*;
+        match *self {
+            Trivial => 0,
+            NoComm => 1,
+            Stencil1D | Stencil1DPeriodic => 3.min(width),
+            Dom | Tree | Fft => 2.min(width),
+            AllToAll => width,
+            Nearest { radix } | Spread { radix } | RandomNearest { radix } => {
+                radix.min(width)
+            }
+        }
+    }
+}
+
+/// Distinct random dependence sets kept before cycling (bounds table
+/// memory for very long runs).
+const MAX_RANDOM_SETS: usize = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::DependencePattern::*;
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(0), 0);
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+    }
+
+    #[test]
+    fn stencil_interior_and_edges() {
+        let p = Stencil1D;
+        assert_eq!(p.deps(0, 0, 8, 0), vec![0, 1]);
+        assert_eq!(p.deps(0, 3, 8, 0), vec![2, 3, 4]);
+        assert_eq!(p.deps(0, 7, 8, 0), vec![6, 7]);
+    }
+
+    #[test]
+    fn stencil_periodic_wraps() {
+        let p = Stencil1DPeriodic;
+        assert_eq!(p.deps(0, 0, 8, 0), vec![0, 1, 7]);
+        assert_eq!(p.deps(0, 7, 8, 0), vec![0, 6, 7]);
+        assert_eq!(p.deps(0, 0, 1, 0), vec![0]);
+    }
+
+    #[test]
+    fn dom_is_wavefront() {
+        assert_eq!(Dom.deps(0, 0, 4, 0), vec![0]);
+        assert_eq!(Dom.deps(0, 3, 4, 0), vec![2, 3]);
+    }
+
+    #[test]
+    fn fft_butterfly_partners() {
+        // width 8, dset 0: partner = x ^ 1
+        assert_eq!(Fft.deps(0, 0, 8, 0), vec![0, 1]);
+        assert_eq!(Fft.deps(1, 2, 8, 0), vec![0, 2]);
+        assert_eq!(Fft.deps(2, 5, 8, 0), vec![1, 5]);
+        // partner out of range -> self only
+        assert_eq!(Fft.deps(2, 3, 6, 0), vec![3]);
+    }
+
+    #[test]
+    fn tree_reaches_root() {
+        // With all bits cleared over log2(w) sets, every x eventually
+        // depends (transitively) on 0. At set k, dep = x & !(1<<k).
+        assert_eq!(Tree.deps(0, 5, 8, 0), vec![4, 5]);
+        assert_eq!(Tree.deps(2, 5, 8, 0), vec![1, 5]);
+        assert_eq!(Tree.deps(0, 0, 8, 0), vec![0]);
+    }
+
+    #[test]
+    fn all_to_all_full_fanin() {
+        assert_eq!(AllToAll.deps(0, 2, 4, 0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn nearest_window() {
+        let p = Nearest { radix: 5 };
+        assert_eq!(p.deps(0, 4, 16, 0), vec![2, 3, 4, 5, 6]);
+        assert_eq!(p.deps(0, 0, 16, 0), vec![0, 1, 2]);
+        assert_eq!(p.deps(0, 15, 16, 0), vec![13, 14, 15]);
+    }
+
+    #[test]
+    fn spread_is_within_width_and_distinct_across_dsets() {
+        let p = Spread { radix: 3 };
+        let a = p.deps(0, 2, 12, 0);
+        let b = p.deps(1, 2, 12, 0);
+        assert!(a.iter().all(|&d| d < 12));
+        assert_ne!(a, b, "rotation must change the set across dsets");
+    }
+
+    #[test]
+    fn random_nearest_is_deterministic_and_seed_sensitive() {
+        let p = RandomNearest { radix: 3 };
+        assert_eq!(p.deps(0, 4, 32, 7), p.deps(0, 4, 32, 7));
+        assert_ne!(
+            (0..8).map(|x| p.deps(0, x, 1024, 7)).collect::<Vec<_>>(),
+            (0..8).map(|x| p.deps(0, x, 1024, 8)).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn deps_sorted_dedup_in_range() {
+        for p in DependencePattern::all() {
+            for width in [1usize, 2, 3, 8, 17] {
+                let period = p.timestep_period(width, 4);
+                for dset in 0..period {
+                    for x in 0..width {
+                        let d = p.deps(dset, x, width, 42);
+                        assert!(d.windows(2).all(|w| w[0] < w[1]), "{p:?}");
+                        assert!(d.iter().all(|&i| i < width), "{p:?}");
+                        assert!(d.len() <= p.max_fanin(width), "{p:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dset_cycles() {
+        assert_eq!(Fft.timestep_period(8, 1), 3);
+        assert_eq!(Fft.dset_at(1, 8, 1), 0);
+        assert_eq!(Fft.dset_at(4, 8, 1), 0);
+        assert_eq!(Stencil1D.dset_at(99, 8, 1), 0);
+        let r = RandomNearest { radix: 2 };
+        assert_eq!(r.timestep_period(8, 5), 5);
+        assert_eq!(r.dset_at(1, 8, 5), 0);
+        assert_eq!(r.dset_at(6, 8, 5), 1);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for p in DependencePattern::all() {
+            let parsed = DependencePattern::parse(p.name(), 5);
+            assert!(parsed.is_some(), "{p:?}");
+            assert_eq!(parsed.unwrap().name(), p.name());
+        }
+        assert!(DependencePattern::parse("bogus", 1).is_none());
+    }
+}

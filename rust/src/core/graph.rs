@@ -1,0 +1,235 @@
+//! The task graph: a `width × steps` grid plus cached dependence tables.
+//!
+//! Dependence/reverse-dependence lookups are on every runtime's hot path,
+//! so [`TaskGraph::new`] materializes per-dependence-set tables once
+//! (`O(width · fanin)` memory per set) and lookups are slice borrows.
+
+use super::dependence::DependencePattern;
+use super::kernel::KernelConfig;
+
+/// Everything needed to define a Task Bench workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphConfig {
+    /// Points per timestep.
+    pub width: usize,
+    /// Timesteps (the paper uses 1000).
+    pub steps: usize,
+    pub dependence: DependencePattern,
+    pub kernel: KernelConfig,
+    /// Regeneration period for [`DependencePattern::RandomNearest`].
+    pub random_period: usize,
+    /// Seed for randomized patterns (and anything else stochastic).
+    pub seed: u64,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        Self {
+            width: 4,
+            steps: 10,
+            dependence: DependencePattern::Stencil1D,
+            kernel: KernelConfig::compute_bound(64),
+            random_period: 4,
+            seed: 0x7a5b_beac,
+        }
+    }
+}
+
+/// A fully-materialized task graph.
+#[derive(Debug, Clone)]
+pub struct TaskGraph {
+    cfg: GraphConfig,
+    /// `tables[dset][x]` = sorted deps of `x` (indices at `t-1`).
+    tables: Vec<Vec<Vec<u32>>>,
+    /// `rtables[dset][x]` = sorted consumers of `x` (indices at `t+1`).
+    rtables: Vec<Vec<Vec<u32>>>,
+    /// Total number of dependence sets actually used over `steps`.
+    num_dsets: usize,
+}
+
+impl TaskGraph {
+    pub fn new(cfg: GraphConfig) -> Self {
+        assert!(cfg.width > 0, "width must be positive");
+        assert!(cfg.steps > 0, "steps must be positive");
+        // Enumerate the dsets reachable over this run's timesteps.
+        let mut used = std::collections::BTreeSet::new();
+        for t in 1..cfg.steps {
+            used.insert(cfg.dependence.dset_at(t, cfg.width, cfg.random_period));
+        }
+        let num_dsets = used.iter().copied().max().map_or(1, |m| m + 1);
+
+        let mut tables = Vec::with_capacity(num_dsets);
+        let mut rtables = Vec::with_capacity(num_dsets);
+        for dset in 0..num_dsets {
+            let mut fwd: Vec<Vec<u32>> = Vec::with_capacity(cfg.width);
+            let mut rev: Vec<Vec<u32>> = vec![Vec::new(); cfg.width];
+            for x in 0..cfg.width {
+                let deps = cfg.dependence.deps(dset, x, cfg.width, cfg.seed);
+                for &d in &deps {
+                    rev[d].push(x as u32);
+                }
+                fwd.push(deps.into_iter().map(|d| d as u32).collect());
+            }
+            for r in rev.iter_mut() {
+                r.sort_unstable();
+            }
+            tables.push(fwd);
+            rtables.push(rev);
+        }
+        Self { cfg, tables, rtables, num_dsets }
+    }
+
+    pub fn config(&self) -> &GraphConfig {
+        &self.cfg
+    }
+
+    pub fn width(&self) -> usize {
+        self.cfg.width
+    }
+
+    pub fn steps(&self) -> usize {
+        self.cfg.steps
+    }
+
+    pub fn num_points(&self) -> usize {
+        self.cfg.width * self.cfg.steps
+    }
+
+    /// Number of materialized dependence sets.
+    pub fn num_dsets(&self) -> usize {
+        self.num_dsets
+    }
+
+    /// The dependence set governing edges *into* timestep `t` (`t >= 1`).
+    pub fn dset_at(&self, t: usize) -> usize {
+        debug_assert!(t >= 1);
+        self.cfg
+            .dependence
+            .dset_at(t, self.cfg.width, self.cfg.random_period)
+    }
+
+    /// Points at `t-1` that `(x, t)` reads. Empty for `t == 0`.
+    pub fn dependencies(&self, x: usize, t: usize) -> &[u32] {
+        if t == 0 {
+            return &[];
+        }
+        &self.tables[self.dset_at(t)][x]
+    }
+
+    /// Points at `t+1` that read `(x, t)`. Empty for the last timestep.
+    pub fn reverse_dependencies(&self, x: usize, t: usize) -> &[u32] {
+        if t + 1 >= self.cfg.steps {
+            return &[];
+        }
+        &self.rtables[self.dset_at(t + 1)][x]
+    }
+
+    /// Total dependency edges in the graph.
+    pub fn num_edges(&self) -> usize {
+        (1..self.cfg.steps)
+            .map(|t| {
+                let dset = self.dset_at(t);
+                self.tables[dset].iter().map(|d| d.len()).sum::<usize>()
+            })
+            .sum()
+    }
+
+    /// Total FLOPs the whole graph performs (compute kernels only).
+    pub fn total_flops(&self) -> f64 {
+        self.cfg.kernel.flops_per_point() * self.num_points() as f64
+    }
+
+    /// Bytes in one task's output payload.
+    pub fn payload_bytes(&self) -> usize {
+        self.cfg.kernel.payload_elems * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::dependence::DependencePattern::*;
+
+    fn graph(dep: DependencePattern, width: usize, steps: usize) -> TaskGraph {
+        TaskGraph::new(GraphConfig {
+            width,
+            steps,
+            dependence: dep,
+            ..GraphConfig::default()
+        })
+    }
+
+    #[test]
+    fn first_timestep_has_no_deps() {
+        let g = graph(Stencil1D, 8, 4);
+        for x in 0..8 {
+            assert!(g.dependencies(x, 0).is_empty());
+        }
+    }
+
+    #[test]
+    fn last_timestep_has_no_consumers() {
+        let g = graph(Stencil1D, 8, 4);
+        for x in 0..8 {
+            assert!(g.reverse_dependencies(x, 3).is_empty());
+        }
+    }
+
+    #[test]
+    fn reverse_is_exact_inverse() {
+        for dep in DependencePattern::all() {
+            let g = graph(dep, 16, 9);
+            for t in 1..g.steps() {
+                for x in 0..g.width() {
+                    for &d in g.dependencies(x, t) {
+                        assert!(
+                            g.reverse_dependencies(d as usize, t - 1)
+                                .contains(&(x as u32)),
+                            "{dep:?}: ({x},{t}) dep {d} missing reverse"
+                        );
+                    }
+                    for &c in g.reverse_dependencies(x, t - 1) {
+                        assert!(
+                            g.dependencies(c as usize, t).contains(&(x as u32)),
+                            "{dep:?}: spurious reverse edge"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_count_matches_tables() {
+        let g = graph(Stencil1D, 4, 3);
+        // per interior step: 2*(2) edge points + 2*(3) interior = 10
+        assert_eq!(g.num_edges(), 20);
+    }
+
+    #[test]
+    fn fft_uses_multiple_dsets() {
+        let g = graph(Fft, 8, 10);
+        assert_eq!(g.num_dsets(), 3);
+        assert_eq!(g.dset_at(1), 0);
+        assert_eq!(g.dset_at(2), 1);
+        assert_eq!(g.dset_at(3), 2);
+        assert_eq!(g.dset_at(4), 0);
+    }
+
+    #[test]
+    fn total_flops() {
+        let g = TaskGraph::new(GraphConfig {
+            width: 4,
+            steps: 10,
+            kernel: KernelConfig::compute_bound(100),
+            ..GraphConfig::default()
+        });
+        assert_eq!(g.total_flops(), (2 * 16 * 100 * 40) as f64);
+    }
+
+    #[test]
+    #[should_panic(expected = "width must be positive")]
+    fn zero_width_rejected() {
+        graph(Stencil1D, 0, 4);
+    }
+}

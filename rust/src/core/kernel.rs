@@ -1,0 +1,266 @@
+//! Task kernels: the work executed at each graph point.
+//!
+//! The compute-bound kernel is the paper's workhorse: an FMA busy-loop
+//! whose iteration count *is* the grain size. The native implementation
+//! mirrors the L1 Pallas kernel's arithmetic exactly (`v = fma(v, A, B)`,
+//! f32, same coefficients — XLA contracts the multiply-add into a single
+//! rounding, hence `f32::mul_add` here), so the L3 fast path and the PJRT
+//! artifact are numerically interchangeable.
+
+use std::time::Instant;
+
+/// FMA multiplier — must match `python/compile/kernels/compute_bound.py`.
+pub const FMA_A: f32 = 1.000_000_1;
+/// FMA addend — must match the Pallas kernel.
+pub const FMA_B: f32 = 1e-6;
+/// Elements of the full (8, 128) XLA tile.
+pub const TILE_ELEMS: usize = 1024;
+/// FLOPs per element per FMA round (one mul + one add).
+pub const FLOPS_PER_ELEM_PER_ITER: usize = 2;
+
+/// What work each task performs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    /// No work: pure runtime-overhead measurement.
+    Empty,
+    /// Spin for a wall-clock duration (latency injection).
+    BusyWait { micros: u64 },
+    /// The FMA loop: `iterations` rounds over the task's payload.
+    ComputeBound { iterations: u64 },
+    /// Streaming rotate-and-scale over a scratch buffer `scratch_elems`
+    /// long (mirrors the Pallas memory-bound kernel's access pattern).
+    MemoryBound { iterations: u64, scratch_elems: usize },
+    /// Compute-bound with a per-point pseudorandom iteration count in
+    /// `[iterations/span, iterations]` — models imbalanced workloads.
+    LoadImbalance { iterations: u64, span: u64 },
+}
+
+/// Kernel + payload-size configuration for a graph.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelConfig {
+    pub kernel: Kernel,
+    /// f32 elements in each task's output payload. 16 (64 B, Task Bench's
+    /// compact default) for fine-grain sweeps; [`TILE_ELEMS`] for exact
+    /// parity with the XLA artifact.
+    pub payload_elems: usize,
+}
+
+impl KernelConfig {
+    pub fn empty() -> Self {
+        Self { kernel: Kernel::Empty, payload_elems: 16 }
+    }
+
+    pub fn compute_bound(iterations: u64) -> Self {
+        Self { kernel: Kernel::ComputeBound { iterations }, payload_elems: 16 }
+    }
+
+    pub fn compute_bound_tile(iterations: u64) -> Self {
+        Self {
+            kernel: Kernel::ComputeBound { iterations },
+            payload_elems: TILE_ELEMS,
+        }
+    }
+
+    pub fn busy_wait(micros: u64) -> Self {
+        Self { kernel: Kernel::BusyWait { micros }, payload_elems: 16 }
+    }
+
+    pub fn memory_bound(iterations: u64) -> Self {
+        Self {
+            kernel: Kernel::MemoryBound { iterations, scratch_elems: 8192 },
+            payload_elems: 16,
+        }
+    }
+
+    pub fn load_imbalance(iterations: u64, span: u64) -> Self {
+        Self {
+            kernel: Kernel::LoadImbalance { iterations, span },
+            payload_elems: 16,
+        }
+    }
+
+    /// FLOPs a single point performs under this config (0 for non-compute
+    /// kernels; load-imbalance reports the *mean*).
+    pub fn flops_per_point(&self) -> f64 {
+        match self.kernel {
+            Kernel::ComputeBound { iterations } => {
+                (FLOPS_PER_ELEM_PER_ITER * self.payload_elems) as f64
+                    * iterations as f64
+            }
+            Kernel::LoadImbalance { iterations, span } => {
+                let mean = if span <= 1 {
+                    iterations as f64
+                } else {
+                    // uniform over [iterations/span, iterations]
+                    (iterations as f64 / span as f64 + iterations as f64) / 2.0
+                };
+                (FLOPS_PER_ELEM_PER_ITER * self.payload_elems) as f64 * mean
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// The FMA loop over a buffer. `#[inline(never)]` keeps the loop a stable
+/// measurement target; the inner loop auto-vectorizes to packed FMAs.
+#[inline(never)]
+pub fn fma_loop(buf: &mut [f32], iterations: u64) {
+    for _ in 0..iterations {
+        for v in buf.iter_mut() {
+            *v = v.mul_add(FMA_A, FMA_B);
+        }
+    }
+}
+
+/// Streaming pass: rotate-by-one and scale, `iterations` times.
+#[inline(never)]
+pub fn stream_loop(scratch: &mut Vec<f32>, elems: usize, iterations: u64) {
+    if scratch.len() != elems {
+        scratch.resize(elems, 1.0);
+    }
+    for _ in 0..iterations {
+        let first = scratch[0];
+        for i in 0..elems - 1 {
+            scratch[i] = scratch[i + 1] * FMA_A;
+        }
+        scratch[elems - 1] = first * FMA_A;
+    }
+}
+
+/// Deterministic per-point imbalance factor in `[1/span, 1]`.
+fn imbalance_iters(iterations: u64, span: u64, x: usize, t: usize) -> u64 {
+    if span <= 1 {
+        return iterations;
+    }
+    let h = (x as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((t as u64).wrapping_mul(0xD1B5_4A32_D192_ED03));
+    let h = (h ^ (h >> 33)).wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    let frac = (h >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+    let lo = iterations / span;
+    lo + ((iterations - lo) as f64 * frac) as u64
+}
+
+impl Kernel {
+    /// Execute the kernel over `payload` for point `(x, t)`.
+    /// `scratch` is reusable per-worker memory for the memory-bound kernel.
+    pub fn execute(
+        &self,
+        payload: &mut [f32],
+        scratch: &mut Vec<f32>,
+        x: usize,
+        t: usize,
+    ) {
+        match *self {
+            Kernel::Empty => {}
+            Kernel::BusyWait { micros } => {
+                let start = Instant::now();
+                while start.elapsed().as_micros() < micros as u128 {
+                    std::hint::spin_loop();
+                }
+            }
+            Kernel::ComputeBound { iterations } => fma_loop(payload, iterations),
+            Kernel::MemoryBound { iterations, scratch_elems } => {
+                stream_loop(scratch, scratch_elems, iterations);
+                // Fold one scratch word back so the work can't be DCE'd and
+                // the output stays dependency-deterministic.
+                if let Some(v) = payload.first_mut() {
+                    *v = v.mul_add(1.0, scratch[0] * 0.0);
+                }
+                fma_loop(payload, 1);
+            }
+            Kernel::LoadImbalance { iterations, span } => {
+                fma_loop(payload, imbalance_iters(iterations, span, x, t))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fma_matches_closed_form() {
+        // x_n = A^n x_0 + B (A^n - 1)/(A - 1)
+        let n = 1000u64;
+        let mut buf = vec![0.5f32; 8];
+        fma_loop(&mut buf, n);
+        let a_n = (FMA_A as f64).powi(n as i32);
+        let want = a_n * 0.5 + (FMA_B as f64) * (a_n - 1.0) / (FMA_A as f64 - 1.0);
+        for v in buf {
+            assert!((v as f64 - want).abs() / want < 1e-4, "{v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn fma_zero_iters_is_identity() {
+        let mut buf = vec![1.25f32; 4];
+        fma_loop(&mut buf, 0);
+        assert_eq!(buf, vec![1.25f32; 4]);
+    }
+
+    #[test]
+    fn fma_stays_finite_at_large_iters() {
+        let mut buf = vec![1.0f32; 4];
+        fma_loop(&mut buf, 1 << 20);
+        assert!(buf.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stream_full_rotation_restores_order() {
+        let elems = 16usize;
+        let mut scratch: Vec<f32> = (0..elems).map(|i| i as f32).collect();
+        stream_loop(&mut scratch, elems, elems as u64);
+        // After `elems` rotations each element is back home, scaled A^elems.
+        let scale = (FMA_A as f64).powi(elems as i32);
+        for (i, v) in scratch.iter().enumerate() {
+            let want = i as f64 * scale;
+            assert!((*v as f64 - want).abs() <= want * 1e-5 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn busy_wait_spins_for_duration() {
+        let start = Instant::now();
+        Kernel::BusyWait { micros: 500 }.execute(&mut [], &mut Vec::new(), 0, 0);
+        assert!(start.elapsed().as_micros() >= 500);
+    }
+
+    #[test]
+    fn imbalance_within_bounds_and_deterministic() {
+        for x in 0..64 {
+            let it = imbalance_iters(1000, 4, x, 3);
+            assert!((250..=1000).contains(&it));
+            assert_eq!(it, imbalance_iters(1000, 4, x, 3));
+        }
+        assert_eq!(imbalance_iters(1000, 1, 9, 9), 1000);
+        // Different points should (almost always) get different work.
+        let a = imbalance_iters(1000, 4, 1, 1);
+        let b = imbalance_iters(1000, 4, 2, 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let c = KernelConfig::compute_bound(100);
+        assert_eq!(c.flops_per_point(), (2 * 16 * 100) as f64);
+        let t = KernelConfig::compute_bound_tile(10);
+        assert_eq!(t.flops_per_point(), (2 * 1024 * 10) as f64);
+        assert_eq!(KernelConfig::empty().flops_per_point(), 0.0);
+        let li = KernelConfig::load_imbalance(1000, 4);
+        assert_eq!(li.flops_per_point(), 2.0 * 16.0 * 625.0);
+    }
+
+    #[test]
+    fn kernel_execute_compute_touches_payload() {
+        let mut payload = vec![1.0f32; 16];
+        Kernel::ComputeBound { iterations: 3 }.execute(
+            &mut payload,
+            &mut Vec::new(),
+            0,
+            0,
+        );
+        assert!(payload.iter().all(|&v| v > 1.0));
+    }
+}

@@ -1,0 +1,27 @@
+//! Task Bench core: parameterized task graphs.
+//!
+//! A Task Bench workload is a `width × steps` grid of *points* (tasks).
+//! Point `(x, t)` depends on a pattern-defined set of points at timestep
+//! `t-1`. The kernel executed at each point and the dependence pattern are
+//! the two knobs the paper sweeps; everything else (validation, FLOP
+//! accounting) is fixed by this module.
+//!
+//! This is a from-scratch Rust port of the C core of Task Bench
+//! (Slaughter et al., SC'20) — the substrate the paper builds on.
+
+mod dependence;
+mod graph;
+mod kernel;
+mod point;
+mod validate;
+
+pub use dependence::{ceil_log2, DependencePattern};
+pub use graph::{GraphConfig, TaskGraph};
+pub use kernel::{
+    fma_loop, stream_loop, Kernel, KernelConfig, FMA_A, FMA_B,
+    FLOPS_PER_ELEM_PER_ITER, TILE_ELEMS,
+};
+pub use point::{execute_point, mix_deps, Payload, PointCoord, TaskOutput};
+pub use validate::{
+    checksum_final, oracle_outputs, validate_execution, ExecRecord, Oracle,
+};

@@ -1,0 +1,279 @@
+//! Correctness validation for runtime executions.
+//!
+//! Task Bench validates that a runtime really executed the task graph it
+//! claimed to: every point exactly once, consuming exactly the declared
+//! dependencies, in dependency order. We additionally check numerics
+//! against a sequential oracle — outputs are deterministic f32, so a
+//! runtime that reorders, drops or duplicates a message produces a
+//! bitwise-detectable divergence.
+
+use std::collections::HashMap;
+
+use super::graph::TaskGraph;
+use super::point::{execute_point, Payload, PointCoord};
+
+/// What a runtime records per executed task (validation mode only).
+#[derive(Debug, Clone)]
+pub struct ExecRecord {
+    pub coord: PointCoord,
+    /// Coordinates of the dependency payloads actually consumed, in the
+    /// order they were mixed.
+    pub deps_seen: Vec<PointCoord>,
+    /// Monotonic start/end of the task body, ns since run start.
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub payload: Payload,
+}
+
+/// Sequential reference execution of a whole graph.
+pub struct Oracle {
+    width: usize,
+    outputs: Vec<Payload>,
+}
+
+impl Oracle {
+    pub fn output(&self, c: PointCoord) -> &Payload {
+        &self.outputs[c.index(self.width)]
+    }
+
+    /// Checksum over the final timestep (order-independent fold) — the
+    /// quick cross-runtime signal used by examples and the e2e driver.
+    pub fn final_checksum(&self, graph: &TaskGraph) -> f64 {
+        checksum_final(
+            graph,
+            (0..graph.width()).map(|x| {
+                self.outputs[PointCoord::new(x, graph.steps() - 1).index(self.width)]
+                    .clone()
+            }),
+        )
+    }
+}
+
+/// Order-independent checksum over the final-timestep payloads.
+pub fn checksum_final(
+    graph: &TaskGraph,
+    finals: impl Iterator<Item = Payload>,
+) -> f64 {
+    let _ = graph;
+    finals
+        .map(|p| p.iter().map(|&v| v as f64).sum::<f64>())
+        .sum()
+}
+
+/// Execute the whole graph sequentially (the reference semantics).
+pub fn oracle_outputs(graph: &TaskGraph) -> Oracle {
+    let width = graph.width();
+    let elems = graph.config().kernel.payload_elems;
+    let kernel = graph.config().kernel.kernel;
+    let mut outputs: Vec<Payload> = Vec::with_capacity(graph.num_points());
+    let mut scratch = Vec::new();
+    for t in 0..graph.steps() {
+        for x in 0..width {
+            let deps: Vec<&[f32]> = graph
+                .dependencies(x, t)
+                .iter()
+                .map(|&d| &outputs[PointCoord::new(d as usize, t - 1).index(width)][..])
+                .collect();
+            let out = execute_point(
+                PointCoord::new(x, t),
+                &deps,
+                &kernel,
+                elems,
+                &mut scratch,
+            );
+            outputs.push(out);
+        }
+    }
+    Oracle { width, outputs }
+}
+
+/// Validate a runtime execution trace against the graph + oracle.
+///
+/// Checks, in order:
+/// 1. every point executed exactly once (no drops, no duplicates);
+/// 2. each point consumed exactly its declared dependencies;
+/// 3. happens-before: every dependency finished before its consumer
+///    started (catches runtimes that read stale/unsynchronized data);
+/// 4. payloads are bitwise equal to the sequential oracle.
+pub fn validate_execution(
+    graph: &TaskGraph,
+    records: &[ExecRecord],
+) -> Result<(), String> {
+    if records.len() != graph.num_points() {
+        return Err(format!(
+            "expected {} executions, got {}",
+            graph.num_points(),
+            records.len()
+        ));
+    }
+    let mut by_coord: HashMap<PointCoord, &ExecRecord> = HashMap::new();
+    for r in records {
+        if by_coord.insert(r.coord, r).is_some() {
+            return Err(format!("point {:?} executed more than once", r.coord));
+        }
+    }
+    for t in 0..graph.steps() {
+        for x in 0..graph.width() {
+            let c = PointCoord::new(x, t);
+            let r = by_coord
+                .get(&c)
+                .ok_or_else(|| format!("point {c:?} never executed"))?;
+            let want: Vec<PointCoord> = graph
+                .dependencies(x, t)
+                .iter()
+                .map(|&d| PointCoord::new(d as usize, t - 1))
+                .collect();
+            let mut seen = r.deps_seen.clone();
+            seen.sort();
+            if seen != want {
+                return Err(format!(
+                    "point {c:?} consumed {seen:?}, expected {want:?}"
+                ));
+            }
+            for d in &want {
+                let dep = by_coord[d];
+                if dep.end_ns > r.start_ns {
+                    return Err(format!(
+                        "happens-before violated: {d:?} ended at {} but {c:?} \
+                         started at {}",
+                        dep.end_ns, r.start_ns
+                    ));
+                }
+            }
+        }
+    }
+    let oracle = oracle_outputs(graph);
+    for r in records {
+        let want = oracle.output(r.coord);
+        if r.payload[..] != want[..] {
+            return Err(format!(
+                "payload mismatch at {:?}: got {:?}, want {:?}",
+                r.coord,
+                &r.payload[..2.min(r.payload.len())],
+                &want[..2.min(want.len())]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{DependencePattern, GraphConfig, KernelConfig};
+
+    fn small_graph() -> TaskGraph {
+        TaskGraph::new(GraphConfig {
+            width: 4,
+            steps: 5,
+            dependence: DependencePattern::Stencil1D,
+            kernel: KernelConfig::compute_bound(8),
+            ..GraphConfig::default()
+        })
+    }
+
+    /// Build a correct trace straight from the oracle.
+    fn oracle_trace(graph: &TaskGraph) -> Vec<ExecRecord> {
+        let oracle = oracle_outputs(graph);
+        let mut recs = Vec::new();
+        let mut clock = 0u64;
+        for t in 0..graph.steps() {
+            for x in 0..graph.width() {
+                let c = PointCoord::new(x, t);
+                clock += 2;
+                recs.push(ExecRecord {
+                    coord: c,
+                    deps_seen: graph
+                        .dependencies(x, t)
+                        .iter()
+                        .map(|&d| PointCoord::new(d as usize, t - 1))
+                        .collect(),
+                    start_ns: clock,
+                    end_ns: clock + 1,
+                    payload: oracle.output(c).clone(),
+                });
+            }
+        }
+        recs
+    }
+
+    #[test]
+    fn oracle_trace_validates() {
+        let g = small_graph();
+        validate_execution(&g, &oracle_trace(&g)).unwrap();
+    }
+
+    #[test]
+    fn missing_point_detected() {
+        let g = small_graph();
+        let mut recs = oracle_trace(&g);
+        recs.pop();
+        assert!(validate_execution(&g, &recs).is_err());
+    }
+
+    #[test]
+    fn duplicate_point_detected() {
+        let g = small_graph();
+        let mut recs = oracle_trace(&g);
+        let dup = recs[0].clone();
+        recs.pop();
+        recs.push(dup);
+        let err = validate_execution(&g, &recs).unwrap_err();
+        assert!(err.contains("more than once"), "{err}");
+    }
+
+    #[test]
+    fn wrong_deps_detected() {
+        let g = small_graph();
+        let mut recs = oracle_trace(&g);
+        let idx = g.width(); // first point of t=1
+        recs[idx].deps_seen.pop();
+        let err = validate_execution(&g, &recs).unwrap_err();
+        assert!(err.contains("consumed"), "{err}");
+    }
+
+    #[test]
+    fn happens_before_violation_detected() {
+        let g = small_graph();
+        let mut recs = oracle_trace(&g);
+        let idx = g.width();
+        recs[idx].start_ns = 0; // started before its deps ended
+        let err = validate_execution(&g, &recs).unwrap_err();
+        assert!(err.contains("happens-before"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_payload_detected() {
+        let g = small_graph();
+        let mut recs = oracle_trace(&g);
+        let mut p = recs[7].payload.to_vec();
+        p[0] += 1.0;
+        recs[7].payload = Payload::from(p);
+        let err = validate_execution(&g, &recs).unwrap_err();
+        assert!(err.contains("payload mismatch"), "{err}");
+    }
+
+    #[test]
+    fn oracle_deterministic_and_checksum_stable() {
+        let g = small_graph();
+        let a = oracle_outputs(&g);
+        let b = oracle_outputs(&g);
+        assert_eq!(a.final_checksum(&g), b.final_checksum(&g));
+        assert!(a.final_checksum(&g).is_finite());
+    }
+
+    #[test]
+    fn oracle_validates_for_every_pattern() {
+        for dep in DependencePattern::all() {
+            let g = TaskGraph::new(GraphConfig {
+                width: 6,
+                steps: 4,
+                dependence: dep,
+                kernel: KernelConfig::compute_bound(4),
+                ..GraphConfig::default()
+            });
+            validate_execution(&g, &oracle_trace(&g))
+                .unwrap_or_else(|e| panic!("{dep:?}: {e}"));
+        }
+    }
+}

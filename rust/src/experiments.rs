@@ -1,0 +1,442 @@
+//! The paper's experiments, as reusable drivers shared by the CLI,
+//! `rust/benches/*` and `examples/*`. Each function regenerates one table
+//! or figure (see DESIGN.md §5 for the index).
+
+use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use crate::harness::report::{pm, Table};
+use crate::metg::{metg_from_curve, sweep_grains, GrainRun, SweepConfig};
+use crate::runtimes::{CharmOptions, SystemKind};
+use crate::sim::{simulate, Machine, SimParams};
+
+/// Peak FLOP/s of the simulated machine (the DES equivalent of the peak
+/// calibration: every core computing, zero overhead).
+pub fn sim_peak_flops(machine: Machine, params: &SimParams) -> f64 {
+    let flops_per_iter =
+        (crate::core::FLOPS_PER_ELEM_PER_ITER * params.payload_bytes / 4) as f64;
+    machine.total_cores() as f64 * flops_per_iter / (params.ns_per_iter * 1e-9)
+}
+
+/// One simulated grain run (mirrors [`crate::metg::GrainRun`]).
+pub fn sim_grain_run(
+    system: SystemKind,
+    machine: Machine,
+    params: &SimParams,
+    charm: &CharmOptions,
+    pattern: DependencePattern,
+    tasks_per_core: usize,
+    steps: usize,
+    grain: u64,
+) -> GrainRun {
+    let graph = TaskGraph::new(GraphConfig {
+        width: machine.total_cores() * tasks_per_core,
+        steps,
+        dependence: pattern,
+        kernel: KernelConfig::compute_bound(grain),
+        ..GraphConfig::default()
+    });
+    let r = simulate(&graph, system, machine, params, charm);
+    GrainRun {
+        grain_iters: grain,
+        tasks: r.tasks,
+        wall: crate::harness::Summary::of(&[r.makespan_ns * 1e-9]),
+        flops_per_sec: r.flops_per_sec(&graph),
+        granularity_us: r.task_granularity_us(machine.total_cores()),
+    }
+}
+
+/// Simulated METG(50%) for one system on one machine.
+#[allow(clippy::too_many_arguments)]
+pub fn sim_metg(
+    system: SystemKind,
+    machine: Machine,
+    params: &SimParams,
+    charm: &CharmOptions,
+    pattern: DependencePattern,
+    tasks_per_core: usize,
+    steps: usize,
+    grains: &[u64],
+) -> Option<f64> {
+    let peak = sim_peak_flops(machine, params);
+    let runs: Vec<GrainRun> = grains
+        .iter()
+        .map(|&g| {
+            sim_grain_run(
+                system, machine, params, charm, pattern, tasks_per_core, steps, g,
+            )
+        })
+        .collect();
+    metg_from_curve(&runs, peak, 0.5)
+}
+
+/// Fig 1a/1b: FLOP/s and efficiency vs grain size, all systems, 1 node.
+/// `sim = true` runs the DES on a 48-core node (the paper's machine);
+/// `sim = false` runs the real in-process runtimes with `cores` workers.
+pub struct Fig1Row {
+    pub system: SystemKind,
+    pub runs: Vec<GrainRun>,
+    pub peak_flops: f64,
+}
+
+pub fn fig1(
+    systems: &[SystemKind],
+    cores: usize,
+    steps: usize,
+    grains: &[u64],
+    simulate_mode: bool,
+    params: &SimParams,
+) -> Vec<Fig1Row> {
+    let mut grains = grains.to_vec();
+    grains.sort_unstable_by(|a, b| b.cmp(a));
+    grains.dedup();
+    let grains = &grains[..];
+    systems
+        .iter()
+        .map(|&system| {
+            if simulate_mode {
+                let machine = Machine::new(1, cores);
+                let peak = sim_peak_flops(machine, params);
+                let runs = grains
+                    .iter()
+                    .map(|&g| {
+                        sim_grain_run(
+                            system,
+                            machine,
+                            params,
+                            &CharmOptions::default(),
+                            DependencePattern::Stencil1D,
+                            1,
+                            steps,
+                            g,
+                        )
+                    })
+                    .collect();
+                Fig1Row { system, runs, peak_flops: peak }
+            } else {
+                let mut cfg = SweepConfig::new(system, cores);
+                cfg.steps = steps;
+                cfg.grains = grains.to_vec();
+                let peak =
+                    crate::metg::measure_peak_flops(cores, 16, 1 << 20).flops_per_sec;
+                Fig1Row { system, runs: sweep_grains(&cfg), peak_flops: peak }
+            }
+        })
+        .collect()
+}
+
+/// Table 2: METG(µs) per system × tasks-per-core on 1 node (48 simulated
+/// cores, Table 1's machine).
+pub fn table2(
+    systems: &[SystemKind],
+    tasks_per_core: &[usize],
+    steps: usize,
+    grains: &[u64],
+    params: &SimParams,
+) -> Table {
+    let machine = Machine::rostam(1);
+    let mut headers = vec!["System".to_string()];
+    for n in tasks_per_core {
+        headers.push(if *n == 1 {
+            "single task per core".into()
+        } else {
+            format!("{n} tasks per core")
+        });
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+    for &system in systems {
+        let mut row = vec![system.name().to_string()];
+        for &tpc in tasks_per_core {
+            let m = sim_metg(
+                system,
+                machine,
+                params,
+                &CharmOptions::default(),
+                DependencePattern::Stencil1D,
+                tpc,
+                steps,
+                grains,
+            );
+            row.push(match m {
+                Some(us) => format!("{us:.1}"),
+                None => "—".into(),
+            });
+        }
+        table.row(&row);
+    }
+    table
+}
+
+/// Fig 2: METG vs node count for a fixed overdecomposition factor.
+pub fn fig2(
+    systems: &[SystemKind],
+    nodes: &[usize],
+    tasks_per_core: usize,
+    steps: usize,
+    grains: &[u64],
+    params: &SimParams,
+) -> Table {
+    let mut headers = vec!["System".to_string()];
+    for n in nodes {
+        headers.push(format!("{n} node{}", if *n == 1 { "" } else { "s" }));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+    for &system in systems {
+        let mut row = vec![system.name().to_string()];
+        for &n in nodes {
+            if system.is_shared_memory_only() && n > 1 {
+                row.push("n/a".into());
+                continue;
+            }
+            let m = sim_metg(
+                system,
+                Machine::rostam(n),
+                params,
+                &CharmOptions::default(),
+                DependencePattern::Stencil1D,
+                tasks_per_core,
+                steps,
+                grains,
+            );
+            row.push(match m {
+                Some(us) => format!("{us:.1}"),
+                None => "—".into(),
+            });
+        }
+        table.row(&row);
+    }
+    table
+}
+
+/// Fig 3: Charm++ build-option ablation — task throughput (tasks/s) at
+/// grain 4096 on 8 nodes × 48 cores, 384 tasks.
+pub fn fig3(steps: usize, params: &SimParams) -> Table {
+    let machine = Machine::rostam(8);
+    let graph = TaskGraph::new(GraphConfig {
+        width: machine.total_cores(),
+        steps,
+        dependence: DependencePattern::Stencil1D,
+        kernel: KernelConfig::compute_bound(4096),
+        ..GraphConfig::default()
+    });
+    let mut table = Table::new(&["Build", "tasks/s", "vs Default"]);
+    let base = simulate(
+        &graph,
+        SystemKind::CharmLike,
+        machine,
+        params,
+        &CharmOptions::default(),
+    )
+    .tasks_per_sec();
+    for (name, copts) in CharmOptions::fig3_builds() {
+        let tput =
+            simulate(&graph, SystemKind::CharmLike, machine, params, &copts)
+                .tasks_per_sec();
+        table.row(&[
+            name.to_string(),
+            format!("{tput:.0}"),
+            format!("{:+.1}%", (tput / base - 1.0) * 100.0),
+        ]);
+    }
+    table
+}
+
+/// Render a Fig 1 row set as a markdown table (grain, TFLOP/s and
+/// efficiency per system).
+pub fn fig1_table(rows: &[Fig1Row], grains: &[u64]) -> Table {
+    let mut headers = vec!["grain".to_string()];
+    for r in rows {
+        headers.push(format!("{} TFLOP/s", r.system.id()));
+        headers.push(format!("{} eff%", r.system.id()));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    let mut gs = grains.to_vec();
+    gs.sort_unstable_by(|a, b| b.cmp(a));
+    for (i, g) in gs.iter().enumerate() {
+        let mut row = vec![g.to_string()];
+        for r in rows {
+            let run = &r.runs[i];
+            debug_assert_eq!(run.grain_iters, *g);
+            row.push(format!("{:.4}", run.flops_per_sec / 1e12));
+            row.push(format!("{:.1}", 100.0 * run.flops_per_sec / r.peak_flops));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Beyond-the-paper ablation (its §6.3/§7 outlook): METG per dependence
+/// pattern for each system — "additional investigation with different
+/// Task Bench dependency patterns is required".
+pub fn pattern_sweep(
+    systems: &[SystemKind],
+    steps: usize,
+    grains: &[u64],
+    params: &SimParams,
+) -> Table {
+    let machine = Machine::rostam(1);
+    let patterns = DependencePattern::all();
+    let mut headers = vec!["System".to_string()];
+    for p in &patterns {
+        headers.push(p.name().to_string());
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+    for &system in systems {
+        let mut row = vec![system.name().to_string()];
+        for &pattern in &patterns {
+            let m = sim_metg(
+                system,
+                machine,
+                params,
+                &CharmOptions::default(),
+                pattern,
+                1,
+                steps,
+                grains,
+            );
+            row.push(fmt_metg(m));
+        }
+        table.row(&row);
+    }
+    table
+}
+
+/// Format a METG value for the tables.
+pub fn fmt_metg(v: Option<f64>) -> String {
+    match v {
+        Some(us) => pm(us, 0.0).split(" ±").next().unwrap().to_string(),
+        None => "—".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_grains() -> Vec<u64> {
+        vec![1 << 4, 1 << 7, 1 << 10, 1 << 13]
+    }
+
+    #[test]
+    fn table2_shape_matches_paper_ordering() {
+        let p = SimParams::default();
+        let grains = quick_grains();
+        let metg = |sys, tpc| {
+            sim_metg(
+                sys,
+                Machine::rostam(1),
+                &p,
+                &CharmOptions::default(),
+                DependencePattern::Stencil1D,
+                tpc,
+                50,
+                &grains,
+            )
+            .expect("no METG")
+        };
+        // Paper Table 2, column 1 (single task per core): MPI < Charm++ <
+        // HPX dist < HPX local.
+        let mpi = metg(SystemKind::MpiLike, 1);
+        let charm = metg(SystemKind::CharmLike, 1);
+        let hpxd = metg(SystemKind::HpxDistributed, 1);
+        let hpxl = metg(SystemKind::HpxLocal, 1);
+        assert!(mpi < charm, "mpi {mpi} vs charm {charm}");
+        assert!(charm < hpxd, "charm {charm} vs hpxd {hpxd}");
+        assert!(hpxd < hpxl, "hpxd {hpxd} vs hpxl {hpxl}");
+    }
+
+    #[test]
+    fn hybrid_worst_and_rising() {
+        let p = SimParams::default();
+        let grains = quick_grains();
+        let metg = |tpc| {
+            sim_metg(
+                SystemKind::Hybrid,
+                Machine::rostam(1),
+                &p,
+                &CharmOptions::default(),
+                DependencePattern::Stencil1D,
+                tpc,
+                50,
+                &grains,
+            )
+            .expect("no METG")
+        };
+        let m1 = metg(1);
+        let m8 = metg(8);
+        assert!(m8 > m1, "hybrid must degrade with overdecomposition");
+    }
+
+    #[test]
+    fn fig2_mpi_flat_hpx_rising() {
+        let p = SimParams::default();
+        let grains = quick_grains();
+        let metg = |sys, nodes| {
+            sim_metg(
+                sys,
+                Machine::rostam(nodes),
+                &p,
+                &CharmOptions::default(),
+                DependencePattern::Stencil1D,
+                8,
+                30,
+                &grains,
+            )
+            .expect("no METG")
+        };
+        let mpi1 = metg(SystemKind::MpiLike, 1);
+        let mpi8 = metg(SystemKind::MpiLike, 8);
+        let hpx1 = metg(SystemKind::HpxDistributed, 1);
+        let hpx8 = metg(SystemKind::HpxDistributed, 8);
+        // MPI roughly flat (allow 2.5×); HPX-dist rises more than MPI.
+        assert!(mpi8 < mpi1 * 2.5, "MPI not flat: {mpi1} -> {mpi8}");
+        assert!(
+            hpx8 / hpx1 > mpi8 / mpi1,
+            "HPX-dist should rise faster: {hpx1}->{hpx8} vs {mpi1}->{mpi8}"
+        );
+    }
+
+    #[test]
+    fn fig3_shmem_helps() {
+        let p = SimParams::default();
+        let t = fig3(30, &p);
+        let md = t.to_markdown();
+        assert!(md.contains("SHMEM"));
+        // SHMEM row should show a positive delta.
+        let shmem_line = md.lines().find(|l| l.contains("SHMEM")).unwrap();
+        assert!(shmem_line.contains('+'), "{shmem_line}");
+    }
+
+    #[test]
+    fn pattern_sweep_covers_all_patterns() {
+        let p = SimParams::default();
+        let t = pattern_sweep(&[SystemKind::MpiLike], 20, &quick_grains(), &p);
+        let md = t.to_markdown();
+        for pat in DependencePattern::all() {
+            assert!(md.contains(pat.name()), "{} missing", pat.name());
+        }
+        // all_to_all has width-fanin messaging: its METG must exceed the
+        // stencil's for the same system.
+        let line = md.lines().last().unwrap().to_string();
+        assert!(line.contains("MPI"), "{line}");
+    }
+
+    #[test]
+    fn fig1_table_renders() {
+        let p = SimParams::default();
+        let rows = fig1(
+            &[SystemKind::MpiLike, SystemKind::CharmLike],
+            8,
+            20,
+            &quick_grains(),
+            true,
+            &p,
+        );
+        let t = fig1_table(&rows, &quick_grains());
+        let md = t.to_markdown();
+        assert!(md.contains("mpi TFLOP/s"));
+        assert_eq!(md.lines().count(), 2 + 4);
+    }
+}

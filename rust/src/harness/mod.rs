@@ -1,0 +1,11 @@
+//! Measurement harness: repeated runs, confidence intervals, reporting.
+//!
+//! The paper's protocol (§6): every data point is 5 runs, reported with a
+//! 99% confidence interval.
+
+pub mod report;
+mod run;
+mod stats;
+
+pub use run::{repeat_timing, TimingSample};
+pub use stats::{mean, stddev, Summary};

@@ -1,0 +1,132 @@
+//! Table/CSV emitters matching the layout of the paper's tables and
+//! figure data series.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned markdown table.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {c:<w$} |");
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{:-<1$}|", "", w + 2);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        let _ = ncol;
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        out.push_str(
+            &self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// `12.3 ± 0.4` formatting for mean/CI pairs.
+pub fn pm(mean: f64, ci: f64) -> String {
+    if mean >= 100.0 {
+        format!("{mean:.0} ± {ci:.0}")
+    } else if mean >= 1.0 {
+        format!("{mean:.1} ± {ci:.1}")
+    } else {
+        format!("{mean:.3} ± {ci:.3}")
+    }
+}
+
+/// Engineering notation for FLOP/s (e.g. `2.44e12`).
+pub fn flops(v: f64) -> String {
+    format!("{v:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_layout() {
+        let mut t = Table::new(&["System", "METG"]);
+        t.row(&["MPI".into(), "3.9".into()]);
+        t.row(&["Charm++".into(), "9.8".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| System"));
+        assert!(md.contains("| MPI"));
+        assert_eq!(md.lines().count(), 4);
+        // All rows same width
+        let lens: Vec<usize> = md.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x,y".into(), "q\"z".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn row_width_checked() {
+        Table::new(&["a"]).row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn pm_formats_by_magnitude() {
+        assert_eq!(pm(258.6, 12.0), "259 ± 12");
+        assert_eq!(pm(9.83, 0.21), "9.8 ± 0.2");
+        assert_eq!(pm(0.5, 0.01), "0.500 ± 0.010");
+    }
+}

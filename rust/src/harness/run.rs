@@ -1,0 +1,58 @@
+//! Repeated-run orchestration.
+
+use super::stats::Summary;
+
+/// One measurement series: wall times (seconds) of repeated executions.
+#[derive(Debug, Clone)]
+pub struct TimingSample {
+    pub secs: Vec<f64>,
+}
+
+impl TimingSample {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.secs)
+    }
+}
+
+/// Run `f` `reps` times (after `warmup` discarded runs) and collect wall
+/// times in seconds. `f` returns its own measured duration so harness
+/// overhead (thread spawn, allocation) can be excluded by the callee.
+pub fn repeat_timing(
+    reps: usize,
+    warmup: usize,
+    mut f: impl FnMut() -> std::time::Duration,
+) -> TimingSample {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    TimingSample {
+        secs: (0..reps.max(1)).map(|_| f().as_secs_f64()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn collects_reps_not_warmup() {
+        let mut calls = 0;
+        let s = repeat_timing(5, 2, || {
+            calls += 1;
+            Duration::from_millis(calls)
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(s.secs.len(), 5);
+        // warmup runs (1ms, 2ms) excluded:
+        assert!((s.secs[0] - 0.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_over_sample() {
+        let s = repeat_timing(3, 0, || Duration::from_millis(10));
+        let sum = s.summary();
+        assert!((sum.mean - 0.010).abs() < 1e-9);
+        assert_eq!(sum.n, 3);
+    }
+}

@@ -1,0 +1,116 @@
+//! Summary statistics with Student-t confidence intervals.
+
+/// Two-sided 99% critical t-values for df = 1..=30 (then normal approx).
+const T99: [f64; 30] = [
+    63.657, 9.925, 5.841, 4.604, 4.032, 3.707, 3.499, 3.355, 3.250, 3.169,
+    3.106, 3.055, 3.012, 2.977, 2.947, 2.921, 2.898, 2.878, 2.861, 2.845,
+    2.831, 2.819, 2.807, 2.797, 2.787, 2.779, 2.771, 2.763, 2.756, 2.750,
+];
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Mean ± 99% CI half-width over repeated measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    /// Half-width of the 99% confidence interval on the mean.
+    pub ci99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "no samples");
+        let m = mean(xs);
+        let sd = stddev(xs);
+        let ci99 = if xs.len() < 2 {
+            0.0
+        } else {
+            let df = xs.len() - 1;
+            let t = if df <= 30 { T99[df - 1] } else { 2.576 };
+            t * sd / (xs.len() as f64).sqrt()
+        };
+        Summary {
+            n: xs.len(),
+            mean: m,
+            stddev: sd,
+            ci99,
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ci_matches_hand_computation_n5() {
+        // n=5, sd=1 -> ci99 = 4.604 / sqrt(5)
+        let xs = [
+            10.0 - 1.264911064,
+            10.0 - 0.632455532,
+            10.0,
+            10.0 + 0.632455532,
+            10.0 + 1.264911064,
+        ];
+        let s = Summary::of(&xs);
+        assert!((s.stddev - 1.0).abs() < 1e-9, "{}", s.stddev);
+        assert!((s.ci99 - 4.604 / 5f64.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_sample_has_zero_ci() {
+        let s = Summary::of(&[3.0]);
+        assert_eq!(s.ci99, 0.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min, 3.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn constant_samples_zero_spread() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.ci99, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no samples")]
+    fn empty_rejected() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn large_df_uses_normal() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.ci99 > 0.0 && s.ci99 < s.stddev);
+    }
+}

@@ -1,0 +1,49 @@
+//! # taskbench-amt
+//!
+//! Reproduction of *"Quantifying Overheads in Charm++ and HPX using Task
+//! Bench"* (Wu et al., 2022): a parameterized task-graph benchmark
+//! ([`core`]), a family of runtime systems under test ([`runtimes`] — a
+//! Charm++-like message-driven runtime, an HPX-like future/work-stealing
+//! runtime in local and distributed flavours, MPI-like, OpenMP-like and a
+//! funnelled hybrid), a cluster discrete-event simulator ([`sim`]) for
+//! multi-node experiments, and the METG measurement harness ([`metg`],
+//! [`harness`]).
+//!
+//! The compute hot-spot is authored as a JAX/Pallas kernel, AOT-lowered to
+//! HLO text at build time, and executed from Rust through PJRT ([`runtime`]).
+//! A numerically-mirrored native kernel serves the sub-microsecond grain
+//! sizes that METG sweeps require (see DESIGN.md §3).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use taskbench_amt::core::{TaskGraph, GraphConfig, DependencePattern, KernelConfig};
+//! use taskbench_amt::runtimes::{self, SystemKind};
+//!
+//! let graph = TaskGraph::new(GraphConfig {
+//!     width: 8,
+//!     steps: 100,
+//!     dependence: DependencePattern::Stencil1D,
+//!     kernel: KernelConfig::compute_bound(256),
+//!     ..GraphConfig::default()
+//! });
+//! let report = runtimes::run(SystemKind::CharmLike, &graph, 8).unwrap();
+//! println!("elapsed: {:?}", report.elapsed);
+//! ```
+
+pub mod comm;
+pub mod config;
+pub mod core;
+pub mod experiments;
+pub mod harness;
+pub mod metg;
+pub mod runtime;
+pub mod runtimes;
+pub mod sched;
+pub mod sim;
+
+/// Crate-wide result type.
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,246 @@
+//! `repro` — the Task Bench AMT-overheads launcher.
+//!
+//! Subcommands (each regenerates a paper artifact; see DESIGN.md §5):
+//!
+//! ```text
+//! repro run       --system mpi --pattern stencil_1d --width 8 --steps 100 --grain 256
+//! repro sweep     [--sim] [--cores N] [--steps N]          # Fig 1a/1b
+//! repro metg      [--overdecompose 1,8,16] [--steps N]     # Table 2
+//! repro nodes     [--nodes 1,2,4,8] [--overdecompose 8]    # Fig 2a/2b
+//! repro ablation  [--steps N]                              # Fig 3
+//! repro calibrate                                          # sim params
+//! repro peak                                               # peak FLOP/s
+//! repro dispatch                                           # PJRT overhead
+//! ```
+//!
+//! The offline vendor set has no `clap`; the parser below is a minimal
+//! `--key value` scanner with a config-file base (`--config file.toml`).
+
+use std::collections::HashMap;
+
+use taskbench_amt::config::ExperimentConfig;
+use taskbench_amt::core::{
+    DependencePattern, GraphConfig, KernelConfig, TaskGraph,
+};
+use taskbench_amt::experiments;
+use taskbench_amt::metg::measure_peak_flops;
+use taskbench_amt::runtime::XlaTaskRuntime;
+use taskbench_amt::runtimes::{self, RunOptions, SystemKind};
+use taskbench_amt::sim::{calibrate, SimParams};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
+         see the crate docs for details"
+    );
+    std::process::exit(2);
+}
+
+/// Parse `--key value` pairs (plus bare `--flag` booleans) into a map.
+fn parse_args(args: &[String]) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            eprintln!("unexpected argument `{a}`");
+            usage();
+        };
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            map.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    map
+}
+
+fn get<T: std::str::FromStr>(m: &HashMap<String, String>, k: &str, default: T) -> T {
+    m.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn get_list(m: &HashMap<String, String>, k: &str, default: Vec<usize>) -> Vec<usize> {
+    m.get(k)
+        .map(|v| {
+            v.split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or(default)
+}
+
+fn sim_params(m: &HashMap<String, String>) -> SimParams {
+    if m.get("calibrate").map(|v| v == "true").unwrap_or(false) {
+        eprintln!("calibrating sim params from the real runtimes (slow)...");
+        calibrate(16)
+    } else {
+        SimParams::default()
+    }
+}
+
+fn base_config(m: &HashMap<String, String>) -> ExperimentConfig {
+    let mut cfg = match m.get("config") {
+        Some(path) => ExperimentConfig::from_file(path).unwrap_or_else(|e| {
+            eprintln!("config error: {e:#}");
+            std::process::exit(2);
+        }),
+        None => ExperimentConfig::default(),
+    };
+    if let Some(s) = m.get("steps") {
+        cfg.steps = s.parse().unwrap_or(cfg.steps);
+    }
+    if let Some(c) = m.get("cores") {
+        cfg.cores = c.parse().unwrap_or(cfg.cores);
+    }
+    cfg
+}
+
+fn quick_grains() -> Vec<u64> {
+    (2..=16).step_by(2).map(|p| 1u64 << p).collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let m = parse_args(&args[1..]);
+
+    match cmd.as_str() {
+        "run" => cmd_run(&m),
+        "sweep" => cmd_sweep(&m),
+        "metg" => cmd_metg(&m),
+        "nodes" => cmd_nodes(&m),
+        "ablation" => cmd_ablation(&m),
+        "patterns" => cmd_patterns(&m),
+        "calibrate" => cmd_calibrate(),
+        "peak" => cmd_peak(&m),
+        "dispatch" => cmd_dispatch(&m),
+        "help" | "--help" | "-h" => usage(),
+        other => {
+            eprintln!("unknown subcommand `{other}`");
+            usage();
+        }
+    }
+}
+
+fn cmd_run(m: &HashMap<String, String>) {
+    let system = m
+        .get("system")
+        .and_then(|s| SystemKind::parse(s))
+        .unwrap_or(SystemKind::MpiLike);
+    let pattern = m
+        .get("pattern")
+        .and_then(|p| DependencePattern::parse(p, get(m, "radix", 3)))
+        .unwrap_or(DependencePattern::Stencil1D);
+    let graph = TaskGraph::new(GraphConfig {
+        width: get(m, "width", 8),
+        steps: get(m, "steps", 100),
+        dependence: pattern,
+        kernel: KernelConfig::compute_bound(get(m, "grain", 256)),
+        ..GraphConfig::default()
+    });
+    let mut opts = RunOptions::new(get(m, "workers", 2));
+    opts.validate = get(m, "validate", false);
+    let report = runtimes::run_with(system, &graph, &opts).expect("run failed");
+    if let Some(records) = &report.records {
+        taskbench_amt::core::validate_execution(&graph, records)
+            .expect("validation failed");
+        println!("validation: OK ({} task records)", records.len());
+    }
+    println!(
+        "{}: {} tasks in {:?}  checksum {:.6e}  granularity {:.2} µs",
+        report.system.name(),
+        report.tasks,
+        report.elapsed,
+        report.checksum,
+        report.task_granularity_us(opts.workers),
+    );
+}
+
+fn cmd_sweep(m: &HashMap<String, String>) {
+    let cfg = base_config(m);
+    let sim = get(m, "sim", true);
+    let params = sim_params(m);
+    let cores = if sim { 48 } else { cfg.cores };
+    let steps = get(m, "steps", if sim { 100 } else { 50 });
+    let grains = quick_grains();
+    let rows = experiments::fig1(&cfg.systems, cores, steps, &grains, sim, &params);
+    println!("# Fig 1a/1b — stencil, 1 node ({cores} cores), {cores} tasks");
+    println!("{}", experiments::fig1_table(&rows, &grains).to_markdown());
+}
+
+fn cmd_metg(m: &HashMap<String, String>) {
+    let cfg = base_config(m);
+    let params = sim_params(m);
+    let tpc = get_list(m, "overdecompose", vec![1, 8, 16]);
+    let steps = get(m, "steps", 100);
+    let t = experiments::table2(&cfg.systems, &tpc, steps, &quick_grains(), &params);
+    println!("# Table 2 — METG (µs), stencil, 1 node (48 simulated cores)");
+    println!("{}", t.to_markdown());
+}
+
+fn cmd_nodes(m: &HashMap<String, String>) {
+    let cfg = base_config(m);
+    let params = sim_params(m);
+    let nodes = get_list(m, "nodes", vec![1, 2, 4, 8]);
+    let tpc = get(m, "overdecompose", 8usize);
+    let steps = get(m, "steps", 50);
+    let t = experiments::fig2(&cfg.systems, &nodes, tpc, steps, &quick_grains(), &params);
+    println!("# Fig 2 — METG (µs) vs nodes, overdecomposition {tpc}");
+    println!("{}", t.to_markdown());
+}
+
+fn cmd_ablation(m: &HashMap<String, String>) {
+    let params = sim_params(m);
+    let steps = get(m, "steps", 100);
+    let t = experiments::fig3(steps, &params);
+    println!(
+        "# Fig 3 — Charm++ build options, stencil, 8 nodes / 384 cores, grain 4096"
+    );
+    println!("{}", t.to_markdown());
+}
+
+fn cmd_patterns(m: &HashMap<String, String>) {
+    let cfg = base_config(m);
+    let params = sim_params(m);
+    let steps = get(m, "steps", 60);
+    let t = taskbench_amt::experiments::pattern_sweep(
+        &cfg.systems,
+        steps,
+        &quick_grains(),
+        &params,
+    );
+    println!("# Pattern ablation — METG (µs) per dependence pattern, 1 node");
+    println!("{}", t.to_markdown());
+}
+
+fn cmd_calibrate() {
+    let p = calibrate(16);
+    println!("{p:#?}");
+}
+
+fn cmd_peak(m: &HashMap<String, String>) {
+    let workers = get(m, "workers", 1);
+    let c = measure_peak_flops(workers, 16, 1 << 22);
+    println!(
+        "peak: {:.3e} FLOP/s on {} workers ({:.2} ns/iter, payload 16 f32)",
+        c.flops_per_sec, c.workers, c.ns_per_iter
+    );
+}
+
+fn cmd_dispatch(m: &HashMap<String, String>) {
+    let dir = m
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(XlaTaskRuntime::default_dir);
+    let rt = XlaTaskRuntime::load(&dir).expect("loading artifacts");
+    let stats = rt
+        .measure_dispatch_overhead(get(m, "calls", 200))
+        .expect("dispatch measurement");
+    println!(
+        "PJRT dispatch: mean {:.1} µs, min {:.1} µs over {} calls",
+        stats.mean_us, stats.min_us, stats.calls
+    );
+}

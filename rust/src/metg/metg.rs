@@ -1,0 +1,112 @@
+//! METG extraction from an efficiency curve.
+
+use super::sweep::GrainRun;
+
+/// One point on the efficiency curve.
+#[derive(Debug, Clone, Copy)]
+pub struct EfficiencyPoint {
+    pub granularity_us: f64,
+    /// Achieved / peak FLOP/s, in [0, ~1].
+    pub efficiency: f64,
+}
+
+/// Compute METG(threshold): the smallest task granularity at which the
+/// system still reaches `threshold` efficiency (0.5 in the paper).
+///
+/// The curve walks from large grains (high efficiency) to small; METG is
+/// the log-granularity interpolated crossing of the threshold, exactly as
+/// Task Bench computes it. Returns `None` if the system never reaches the
+/// threshold (reported as "no METG" in the tables), and the smallest
+/// measured granularity if even the smallest grain stays above it.
+pub fn metg_from_curve(
+    runs: &[GrainRun],
+    peak_flops: f64,
+    threshold: f64,
+) -> Option<f64> {
+    assert!(peak_flops > 0.0);
+    let mut pts: Vec<EfficiencyPoint> = runs
+        .iter()
+        .map(|r| EfficiencyPoint {
+            granularity_us: r.granularity_us,
+            efficiency: r.flops_per_sec / peak_flops,
+        })
+        .collect();
+    // Large granularity first.
+    pts.sort_by(|a, b| b.granularity_us.total_cmp(&a.granularity_us));
+
+    let mut best: Option<f64> = None;
+    let mut prev: Option<EfficiencyPoint> = None;
+    for p in pts {
+        if p.efficiency >= threshold {
+            best = Some(p.granularity_us);
+            prev = Some(p);
+        } else {
+            if let Some(q) = prev {
+                // Interpolate the crossing in log-granularity space.
+                let (e0, e1) = (q.efficiency, p.efficiency);
+                if e0 > e1 {
+                    let f = (e0 - threshold) / (e0 - e1);
+                    let lg = q.granularity_us.ln()
+                        + f * (p.granularity_us.ln() - q.granularity_us.ln());
+                    best = Some(lg.exp());
+                }
+            }
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::Summary;
+
+    fn run(gran_us: f64, flops: f64) -> GrainRun {
+        GrainRun {
+            grain_iters: 0,
+            tasks: 1,
+            wall: Summary::of(&[1.0]),
+            flops_per_sec: flops,
+            granularity_us: gran_us,
+        }
+    }
+
+    #[test]
+    fn exact_threshold_point_is_metg() {
+        let runs =
+            vec![run(100.0, 1.0), run(10.0, 0.5), run(1.0, 0.1)];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        assert!((m - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interpolates_between_points() {
+        let runs = vec![run(100.0, 0.9), run(10.0, 0.3)];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        assert!(m > 10.0 && m < 100.0, "{m}");
+        // log-interp: f = (0.9-0.5)/(0.9-0.3) = 2/3
+        let want = (100f64.ln() + (2.0 / 3.0) * (10f64.ln() - 100f64.ln())).exp();
+        assert!((m - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn never_reaches_threshold() {
+        let runs = vec![run(100.0, 0.4), run(10.0, 0.2)];
+        assert!(metg_from_curve(&runs, 1.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn always_above_threshold_returns_smallest() {
+        let runs = vec![run(100.0, 0.9), run(10.0, 0.8), run(1.0, 0.7)];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        assert!((m - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsorted_input_handled() {
+        let runs = vec![run(10.0, 0.5), run(100.0, 1.0), run(1.0, 0.1)];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        assert!((m - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,15 @@
+//! METG: Minimum Effective Task Granularity (Task Bench §4, used
+//! throughout the paper's evaluation).
+//!
+//! Protocol: calibrate peak FLOP/s on this machine ([`peak`]), sweep the
+//! compute-kernel grain size downwards ([`sweep`]), convert each run to
+//! (task granularity, efficiency), and report the smallest granularity at
+//! which efficiency is still ≥ 50% ([`metg_from_curve`]).
+
+mod metg;
+mod peak;
+mod sweep;
+
+pub use metg::{metg_from_curve, EfficiencyPoint};
+pub use peak::{measure_peak_flops, PeakCalibration};
+pub use sweep::{default_grains, sweep_grains, GrainRun, SweepConfig};

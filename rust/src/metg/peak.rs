@@ -1,0 +1,83 @@
+//! Peak FLOP/s calibration.
+//!
+//! METG is efficiency-*relative*: every system's FLOP/s is normalized to
+//! the peak the compute kernel achieves on the same machine with zero
+//! runtime involvement. We measure that directly: `workers` threads, each
+//! hammering a private payload-sized buffer with the FMA kernel, no
+//! synchronization inside the timed region.
+
+use std::time::Instant;
+
+use crate::core::{fma_loop, FLOPS_PER_ELEM_PER_ITER};
+
+/// Result of a peak calibration.
+#[derive(Debug, Clone, Copy)]
+pub struct PeakCalibration {
+    pub workers: usize,
+    pub payload_elems: usize,
+    /// Peak FLOP/s across all workers.
+    pub flops_per_sec: f64,
+    /// Single-core nanoseconds per FMA iteration over one payload.
+    pub ns_per_iter: f64,
+}
+
+/// Measure peak FLOP/s with `workers` threads over `payload_elems`
+/// buffers. `iters_per_round` should be large enough that loop overhead
+/// vanishes (2^20 is plenty at 16 elems).
+pub fn measure_peak_flops(
+    workers: usize,
+    payload_elems: usize,
+    iters_per_round: u64,
+) -> PeakCalibration {
+    let workers = workers.max(1);
+    let start = Instant::now();
+    let handles: Vec<_> = (0..workers)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut buf = vec![1.0f32; payload_elems];
+                let t0 = Instant::now();
+                fma_loop(&mut buf, iters_per_round);
+                std::hint::black_box(&buf);
+                t0.elapsed().as_secs_f64()
+            })
+        })
+        .collect();
+    let per_thread_secs: Vec<f64> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let wall = start.elapsed().as_secs_f64();
+
+    let flops_per_thread =
+        (FLOPS_PER_ELEM_PER_ITER * payload_elems) as f64 * iters_per_round as f64;
+    let total = flops_per_thread * workers as f64;
+    // Use the wall over the whole group: that is what a runtime competes
+    // against when it keeps all cores busy.
+    let flops_per_sec = total / wall;
+    let ns_per_iter = per_thread_secs.iter().sum::<f64>() / workers as f64 * 1e9
+        / iters_per_round as f64;
+    PeakCalibration { workers, payload_elems, flops_per_sec, ns_per_iter }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_is_positive_and_scales_roughly() {
+        let one = measure_peak_flops(1, 16, 1 << 18);
+        assert!(one.flops_per_sec > 1e8, "{:?}", one);
+        assert!(one.ns_per_iter > 0.0);
+        let two = measure_peak_flops(2, 16, 1 << 18);
+        // 2 threads should not be much slower than 1 (asserted very
+        // loosely: the suite runs concurrently on a 1-core box, so this
+        // check only catches gross regressions, not scaling).
+        assert!(two.flops_per_sec > one.flops_per_sec * 0.5);
+    }
+
+    #[test]
+    fn ns_per_iter_consistent_with_flops() {
+        let c = measure_peak_flops(1, 16, 1 << 18);
+        let implied = (FLOPS_PER_ELEM_PER_ITER * 16) as f64 / (c.ns_per_iter * 1e-9);
+        let ratio = implied / c.flops_per_sec;
+        assert!(ratio > 0.5 && ratio < 2.0, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Grain-size sweeps: run a task graph at decreasing compute grain and
+//! record wall time / FLOP/s / granularity per grain (the data behind
+//! Fig 1a/1b).
+
+use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use crate::harness::{repeat_timing, Summary};
+use crate::runtimes::{run_with, RunOptions, SystemKind};
+
+/// One grain-size measurement.
+#[derive(Debug, Clone)]
+pub struct GrainRun {
+    pub grain_iters: u64,
+    pub tasks: usize,
+    /// Wall-time summary over the repeated runs (seconds).
+    pub wall: Summary,
+    /// Mean achieved FLOP/s.
+    pub flops_per_sec: f64,
+    /// Mean task granularity, µs (wall · cores / tasks).
+    pub granularity_us: f64,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub system: SystemKind,
+    pub pattern: DependencePattern,
+    /// Cores of the (real) node.
+    pub workers: usize,
+    /// Tasks per core (1 = the paper's §6.1 setup; 8/16 = §6.2).
+    pub tasks_per_core: usize,
+    pub steps: usize,
+    /// Grain sizes (kernel iterations) to visit, any order.
+    pub grains: Vec<u64>,
+    /// Repetitions per grain (paper: 5) and discarded warmups.
+    pub reps: usize,
+    pub warmup: usize,
+    pub opts: RunOptions,
+}
+
+impl SweepConfig {
+    pub fn new(system: SystemKind, workers: usize) -> Self {
+        Self {
+            system,
+            pattern: DependencePattern::Stencil1D,
+            workers,
+            tasks_per_core: 1,
+            steps: 1000,
+            grains: default_grains(),
+            reps: 5,
+            warmup: 1,
+            opts: RunOptions::new(workers),
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.workers * self.tasks_per_core
+    }
+}
+
+/// The power-of-two grain ladder Fig 1 sweeps (2^4 .. 2^16 iterations by
+/// default — at ~1.5 ns/iter·16 elems that spans ~0.4 µs .. ~1.6 ms tasks).
+pub fn default_grains() -> Vec<u64> {
+    (4..=16).map(|p| 1u64 << p).collect()
+}
+
+/// Run the sweep; returns one [`GrainRun`] per grain, largest first.
+pub fn sweep_grains(cfg: &SweepConfig) -> Vec<GrainRun> {
+    let mut grains = cfg.grains.clone();
+    grains.sort_unstable_by(|a, b| b.cmp(a));
+    grains.dedup();
+    grains
+        .into_iter()
+        .map(|g| {
+            let graph = TaskGraph::new(GraphConfig {
+                width: cfg.width(),
+                steps: cfg.steps,
+                dependence: cfg.pattern,
+                kernel: KernelConfig::compute_bound(g),
+                ..GraphConfig::default()
+            });
+            let mut opts = cfg.opts.clone();
+            opts.workers = cfg.workers;
+            opts.validate = false;
+            let sample = repeat_timing(cfg.reps, cfg.warmup, || {
+                run_with(cfg.system, &graph, &opts)
+                    .expect("runtime execution failed")
+                    .elapsed
+            });
+            let wall = sample.summary();
+            let tasks = graph.num_points();
+            GrainRun {
+                grain_iters: g,
+                tasks,
+                flops_per_sec: graph.total_flops() / wall.mean,
+                granularity_us: wall.mean * 1e6 * cfg.workers as f64
+                    / tasks as f64,
+                wall,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_produces_monotone_granularity() {
+        let mut cfg = SweepConfig::new(SystemKind::OpenMpLike, 2);
+        cfg.steps = 30;
+        cfg.grains = vec![1 << 6, 1 << 10, 1 << 14];
+        cfg.reps = 2;
+        cfg.warmup = 0;
+        let runs = sweep_grains(&cfg);
+        assert_eq!(runs.len(), 3);
+        // Largest grain first, and granularity decreases with grain.
+        assert!(runs[0].grain_iters > runs[2].grain_iters);
+        assert!(
+            runs[0].granularity_us > runs[2].granularity_us,
+            "{runs:#?}"
+        );
+        for r in &runs {
+            assert!(r.flops_per_sec > 0.0);
+            assert_eq!(r.tasks, 2 * 30);
+        }
+    }
+
+    #[test]
+    fn overdecomposition_multiplies_width() {
+        let mut cfg = SweepConfig::new(SystemKind::MpiLike, 2);
+        cfg.tasks_per_core = 8;
+        assert_eq!(cfg.width(), 16);
+    }
+}

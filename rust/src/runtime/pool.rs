@@ -1,0 +1,31 @@
+//! PJRT dispatch measurement.
+
+use std::time::Instant;
+
+use super::{XlaTaskRuntime, TILE_ELEMS};
+
+/// Dispatch-overhead measurement result.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatchStats {
+    pub calls: usize,
+    pub mean_us: f64,
+    pub min_us: f64,
+}
+
+pub(crate) fn measure_dispatch(
+    rt: &XlaTaskRuntime,
+    n: usize,
+) -> anyhow::Result<DispatchStats> {
+    let x = vec![1.0f32; TILE_ELEMS];
+    // warm-up
+    let _ = rt.compute_kernel(&x, 0)?;
+    let mut min = f64::INFINITY;
+    let t0 = Instant::now();
+    for _ in 0..n.max(1) {
+        let t = Instant::now();
+        let _ = rt.compute_kernel(&x, 0)?;
+        min = min.min(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let mean = t0.elapsed().as_secs_f64() * 1e6 / n.max(1) as f64;
+    Ok(DispatchStats { calls: n, mean_us: mean, min_us: min })
+}

@@ -1,0 +1,120 @@
+//! Chare state: per-PE bookkeeping for the chares anchored there.
+//!
+//! A chare buffers arriving entry-method messages per timestep until the
+//! expected fan-in is complete, then the PE scheduler runs the invocation
+//! (message-driven execution — §3.1 of the paper).
+
+use std::collections::HashMap;
+
+use crate::core::{Payload, TaskGraph};
+
+/// Pending input buffers for one chare, keyed by timestep.
+#[derive(Default)]
+struct ChareState {
+    pending: HashMap<u32, Vec<(u32, Payload)>>,
+}
+
+/// All chares anchored to one PE (x ≡ pe mod pes).
+pub(crate) struct ChareTable {
+    states: HashMap<u32, ChareState>,
+    /// Points executed by this PE (sanity accounting).
+    executed: usize,
+}
+
+impl ChareTable {
+    pub fn new(graph: &TaskGraph, pe: usize, pes: usize) -> Self {
+        let mut states = HashMap::new();
+        for x in (pe..graph.width()).step_by(pes) {
+            states.insert(x as u32, ChareState::default());
+        }
+        Self { states, executed: 0 }
+    }
+
+    /// Deposit an arrived input for `(x, t)` whose expected fan-in is
+    /// `expected`. Returns the complete input set when this message is the
+    /// last one.
+    pub fn deposit(
+        &mut self,
+        x: usize,
+        t: usize,
+        src_x: u32,
+        payload: Payload,
+        expected: usize,
+    ) -> Option<Vec<(u32, Payload)>> {
+        let state = self
+            .states
+            .get_mut(&(x as u32))
+            .expect("message delivered to a chare not anchored here");
+        let buf = state.pending.entry(t as u32).or_default();
+        buf.push((src_x, payload));
+        if buf.len() >= expected {
+            state.pending.remove(&(t as u32))
+        } else {
+            None
+        }
+    }
+
+    /// Book-keeping hook after an invocation ran.
+    pub fn note_done(&mut self, _x: usize, _t: usize) {
+        self.executed += 1;
+    }
+
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub fn executed(&self) -> usize {
+        self.executed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{DependencePattern, GraphConfig};
+
+    fn table() -> ChareTable {
+        let g = TaskGraph::new(GraphConfig {
+            width: 8,
+            steps: 4,
+            dependence: DependencePattern::Stencil1D,
+            ..GraphConfig::default()
+        });
+        ChareTable::new(&g, 1, 4) // owns x = 1, 5
+    }
+
+    fn pl(v: f32) -> Payload {
+        Payload::from(vec![v])
+    }
+
+    #[test]
+    fn completes_on_last_arrival() {
+        let mut t = table();
+        assert!(t.deposit(1, 1, 0, pl(0.0), 3).is_none());
+        assert!(t.deposit(1, 1, 2, pl(2.0), 3).is_none());
+        let got = t.deposit(1, 1, 1, pl(1.0), 3).unwrap();
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn timesteps_buffer_independently() {
+        let mut t = table();
+        assert!(t.deposit(1, 1, 0, pl(0.0), 2).is_none());
+        assert!(t.deposit(1, 2, 0, pl(0.0), 2).is_none());
+        assert!(t.deposit(1, 1, 1, pl(1.0), 2).is_some());
+        assert!(t.deposit(1, 2, 1, pl(1.0), 2).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "not anchored")]
+    fn wrong_pe_detected() {
+        let mut t = table();
+        t.deposit(2, 1, 0, pl(0.0), 1); // x=2 lives on PE 2, not PE 1
+    }
+
+    #[test]
+    fn executed_counter() {
+        let mut t = table();
+        assert_eq!(t.executed(), 0);
+        t.note_done(1, 0);
+        t.note_done(5, 0);
+        assert_eq!(t.executed(), 2);
+    }
+}

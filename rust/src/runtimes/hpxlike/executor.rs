@@ -1,0 +1,257 @@
+//! The HPX-like executor: N worker threads, per-worker Chase–Lev deques,
+//! optional work stealing, and a global injector for external spawns.
+//!
+//! Mirrors the executor the paper's HPX implementations deploy (§5.2):
+//! worker threads stay alive across tasks ("retaining the spawning
+//! threads alive by allocating existing work to these threads"), tasks
+//! spawned by a task go to the spawner's own deque (LIFO hot path), and
+//! idle workers either steal (work-stealing policy on) or fall back to
+//! the injector only (policy off).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::core::ExecRecord;
+use crate::sched::{RunQueue, Stealer, Worker};
+
+use super::super::{Epoch, Recorder};
+
+/// A lightweight task — boxed closure, the stand-in for an HPX thread.
+pub type Task = Box<dyn FnOnce(&mut WorkerCtx) + Send>;
+
+struct Shared {
+    injector: RunQueue<Task>,
+    stealers: Vec<Stealer<Task>>,
+    completed: AtomicUsize,
+    target: AtomicUsize,
+    shutdown: AtomicBool,
+    work_stealing: bool,
+}
+
+/// Per-worker context handed to every task.
+pub struct WorkerCtx {
+    pub id: usize,
+    local: Worker<Task>,
+    shared: Arc<Shared>,
+    /// Reusable kernel scratch memory.
+    pub scratch: Vec<f32>,
+    pub recorder: Recorder,
+}
+
+impl WorkerCtx {
+    /// Spawn a continuation onto this worker's deque (LIFO).
+    pub fn spawn(&self, task: Task) {
+        self.local.push(task);
+    }
+
+    /// Mark one unit of tracked work finished.
+    pub fn completed(&self) {
+        self.shared.completed.fetch_add(1, Ordering::AcqRel);
+    }
+}
+
+pub struct Executor {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<Vec<ExecRecord>>>,
+}
+
+impl Executor {
+    pub fn new(workers: usize, work_stealing: bool, validate: bool, epoch: Epoch) -> Self {
+        let workers = workers.max(1);
+        let mut locals = Vec::with_capacity(workers);
+        let mut stealers = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (w, s) = Worker::new();
+            locals.push(w);
+            stealers.push(s);
+        }
+        let shared = Arc::new(Shared {
+            injector: RunQueue::new(),
+            stealers,
+            completed: AtomicUsize::new(0),
+            target: AtomicUsize::new(usize::MAX),
+            shutdown: AtomicBool::new(false),
+            work_stealing,
+        });
+        let handles = locals
+            .into_iter()
+            .enumerate()
+            .map(|(id, local)| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    let mut ctx = WorkerCtx {
+                        id,
+                        local,
+                        shared: Arc::clone(&shared),
+                        scratch: Vec::new(),
+                        recorder: Recorder::new(validate, epoch),
+                    };
+                    worker_loop(&mut ctx);
+                    ctx.recorder.into_records()
+                })
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Inject a task from outside the pool.
+    pub fn inject(&self, task: Task) {
+        self.shared.injector.push(task);
+    }
+
+    /// Block until `target` completions, then stop the pool and return the
+    /// per-worker traces.
+    pub fn run_until(self, target: usize) -> Vec<Vec<ExecRecord>> {
+        self.shared.target.store(target, Ordering::Release);
+        while self.shared.completed.load(Ordering::Acquire)
+            < self.shared.target.load(Ordering::Acquire)
+        {
+            std::thread::yield_now();
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.handles
+            .into_iter()
+            .map(|h| h.join().expect("executor worker panicked"))
+            .collect()
+    }
+}
+
+fn worker_loop(ctx: &mut WorkerCtx) {
+    let shared = Arc::clone(&ctx.shared);
+    let n = shared.stealers.len();
+    let mut next_victim = (ctx.id + 1) % n.max(1);
+    let mut idle_spins = 0u32;
+    loop {
+        // 1. Own deque (LIFO — continuation locality).
+        if let Some(t) = ctx.local.pop() {
+            idle_spins = 0;
+            t(ctx);
+            continue;
+        }
+        // 2. Global injector.
+        if let Some(t) = shared.injector.try_pop() {
+            idle_spins = 0;
+            t(ctx);
+            continue;
+        }
+        // 3. Steal (round-robin victim scan).
+        if shared.work_stealing && n > 1 {
+            let mut stolen = None;
+            for i in 0..n - 1 {
+                let v = (next_victim + i) % n;
+                if v == ctx.id {
+                    continue;
+                }
+                if let Some(t) = shared.stealers[v].steal() {
+                    next_victim = v;
+                    stolen = Some(t);
+                    break;
+                }
+            }
+            if let Some(t) = stolen {
+                idle_spins = 0;
+                t(ctx);
+                continue;
+            }
+        }
+        // 4. Idle.
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        idle_spins += 1;
+        if idle_spins > 64 {
+            std::thread::yield_now();
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn epoch() -> Epoch {
+        Epoch::now()
+    }
+
+    #[test]
+    fn runs_injected_tasks() {
+        let pool = Executor::new(4, true, false, epoch());
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.inject(Box::new(move |w| {
+                c.fetch_add(1, Ordering::SeqCst);
+                w.completed();
+            }));
+        }
+        pool.run_until(100);
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn continuations_spawned_from_tasks_run() {
+        let pool = Executor::new(2, true, false, epoch());
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        pool.inject(Box::new(move |w| {
+            for _ in 0..10 {
+                let c2 = c.clone();
+                w.spawn(Box::new(move |w2| {
+                    c2.fetch_add(1, Ordering::SeqCst);
+                    w2.completed();
+                }));
+            }
+            w.completed();
+        }));
+        pool.run_until(11);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn no_stealing_single_worker_chain() {
+        // Without stealing, a chain spawned on one worker still completes.
+        let pool = Executor::new(3, false, false, epoch());
+        let counter = Arc::new(AtomicUsize::new(0));
+        fn chain(c: Arc<AtomicUsize>, depth: usize, w: &mut WorkerCtx) {
+            c.fetch_add(1, Ordering::SeqCst);
+            if depth > 0 {
+                let c2 = c.clone();
+                w.spawn(Box::new(move |w2| chain(c2, depth - 1, w2)));
+            }
+            w.completed();
+        }
+        let c = counter.clone();
+        pool.inject(Box::new(move |w| chain(c, 49, w)));
+        pool.run_until(50);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn stealing_spreads_work() {
+        // One task fans out 1000 children; with stealing on, more than one
+        // worker should execute some of them.
+        let pool = Executor::new(4, true, false, epoch());
+        let seen = Arc::new((0..8).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let s = seen.clone();
+        pool.inject(Box::new(move |w| {
+            for _ in 0..1000 {
+                let s2 = s.clone();
+                w.spawn(Box::new(move |w2| {
+                    s2[w2.id].fetch_add(1, Ordering::SeqCst);
+                    // simulate a little work so thieves get a chance
+                    std::hint::black_box((0..500).sum::<u64>());
+                    w2.completed();
+                }));
+            }
+            w.completed();
+        }));
+        pool.run_until(1001);
+        let active = seen
+            .iter()
+            .filter(|c| c.load(Ordering::SeqCst) > 0)
+            .count();
+        assert!(active >= 2, "stealing never happened (active={active})");
+    }
+}

@@ -1,0 +1,128 @@
+//! A single-assignment future cell with continuations — the HPX
+//! `future`/`promise` shared state, minus the C++ ceremony.
+//!
+//! Used by the distributed flavour for locally-produced values; the cost
+//! profile (allocation per shared state, a lock crossing per set/get) is
+//! the "future plumbing" overhead the paper discusses.
+
+use std::sync::Mutex;
+
+type Continuation<T> = Box<dyn FnOnce(&T) + Send>;
+
+enum State<T> {
+    Empty(Vec<Continuation<T>>),
+    Set(T),
+}
+
+/// Single-assignment cell; `then` continuations run on the setting thread
+/// (HPX `future::then` launch policy `sync`).
+pub struct FutureCell<T> {
+    state: Mutex<State<T>>,
+}
+
+impl<T> Default for FutureCell<T> {
+    fn default() -> Self {
+        Self { state: Mutex::new(State::Empty(Vec::new())) }
+    }
+}
+
+impl<T: Clone> FutureCell<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fulfil the future; queued continuations run on this thread, outside
+    /// the lock. Panics on double-set (promise misuse).
+    pub fn set(&self, value: T) {
+        let conts = {
+            let mut st = self.state.lock().unwrap();
+            match &mut *st {
+                State::Set(_) => panic!("future set twice"),
+                State::Empty(c) => {
+                    let conts = std::mem::take(c);
+                    *st = State::Set(value.clone());
+                    conts
+                }
+            }
+        };
+        for c in conts {
+            c(&value);
+        }
+    }
+
+    /// Value if already set.
+    pub fn try_get(&self) -> Option<T> {
+        match &*self.state.lock().unwrap() {
+            State::Set(v) => Some(v.clone()),
+            State::Empty(_) => None,
+        }
+    }
+
+    pub fn is_set(&self) -> bool {
+        matches!(&*self.state.lock().unwrap(), State::Set(_))
+    }
+
+    /// Attach a continuation: runs immediately (on this thread) if the
+    /// value is already set, else when `set` is called.
+    pub fn then(&self, f: Continuation<T>) {
+        let mut st = self.state.lock().unwrap();
+        match &mut *st {
+            State::Set(v) => {
+                let v = v.clone();
+                drop(st);
+                f(&v);
+            }
+            State::Empty(c) => c.push(f),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn set_then_get() {
+        let f = FutureCell::new();
+        assert!(f.try_get().is_none());
+        f.set(7);
+        assert_eq!(f.try_get(), Some(7));
+        assert!(f.is_set());
+    }
+
+    #[test]
+    #[should_panic(expected = "set twice")]
+    fn double_set_panics() {
+        let f = FutureCell::new();
+        f.set(1);
+        f.set(2);
+    }
+
+    #[test]
+    fn continuation_runs_on_set() {
+        let f = FutureCell::new();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        f.then(Box::new(move |v: &i32| {
+            assert_eq!(*v, 9);
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 0);
+        f.set(9);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn cross_thread_set_get() {
+        let f = Arc::new(FutureCell::new());
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            f2.set(42);
+        });
+        h.join().unwrap();
+        assert_eq!(f.try_get(), Some(42));
+    }
+}

@@ -1,0 +1,404 @@
+//! HPX-like runtime: future/continuation dataflow over lightweight tasks.
+//!
+//! Two flavours, matching the paper's two implementations (§5.2):
+//!
+//! * **local** ([`execute_local`]) — one lightweight task per point,
+//!   scheduled on a work-stealing executor ([`executor`]). Dependencies
+//!   are dataflow counters: the last-arriving input schedules the task
+//!   (HPX `dataflow`/`when_all`). Every parallel execution runs on an
+//!   executor thread, so each point pays task allocation + queue traffic
+//!   + (when idle) stealing — the "overheads of the threading subsystem"
+//!   the paper attributes to HPX.
+//!
+//! * **distributed** ([`execute_distributed`]) — the row is sharded over
+//!   ranks (localities); cross-rank edges travel as marshalled parcels
+//!   over the in-process fabric, local edges through [`future::FutureCell`]s.
+//!   Each rank schedules its own points non-preemptively, so there is no
+//!   stealing contention; parcels add serialization cost instead.
+
+pub mod executor;
+pub mod future;
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::{marshal, Fabric, MsgPayload};
+use crate::core::{execute_point, ExecRecord, Payload, PointCoord, TaskGraph};
+
+use super::{merge_records, Epoch, ExecResult, Partition, Recorder, RunOptions, SlotVec};
+
+// ---------------------------------------------------------------- local
+
+struct LocalCtx {
+    graph: TaskGraph,
+    /// Output slot per point, whole grid.
+    slots: SlotVec,
+    /// Remaining unarrived inputs per point.
+    pending: Vec<AtomicU32>,
+}
+
+pub(crate) fn execute_local(graph: &TaskGraph, opts: &RunOptions) -> crate::Result<ExecResult> {
+    let width = graph.width();
+    let n = graph.num_points();
+    let pending: Vec<AtomicU32> = (0..n)
+        .map(|i| {
+            let (x, t) = (i % width, i / width);
+            AtomicU32::new(graph.dependencies(x, t).len() as u32)
+        })
+        .collect();
+    let ctx = Arc::new(LocalCtx {
+        graph: graph.clone(),
+        slots: SlotVec::new(n),
+        pending,
+    });
+    let epoch = Epoch::now();
+
+    let pool = executor::Executor::new(
+        opts.workers,
+        opts.hpx.work_stealing,
+        opts.validate,
+        epoch,
+    );
+
+    let start = Instant::now();
+    // Seed timestep 0 (no dependencies).
+    for x in 0..width {
+        let ctx = Arc::clone(&ctx);
+        pool.inject(Box::new(move |w| run_point(&ctx, PointCoord::new(x, 0), w)));
+    }
+    let traces = pool.run_until(n);
+    let elapsed = start.elapsed();
+
+    let finals = (0..width)
+        .map(|x| ctx.slots.get(PointCoord::new(x, graph.steps() - 1).index(width)).clone())
+        .collect();
+    Ok((elapsed, finals, merge_records(opts.validate, traces)))
+}
+
+/// Task body for the local flavour: execute the point, publish, notify
+/// consumers (spawning any that became ready onto this worker's deque —
+/// HPX continuations run on the completing thread).
+fn run_point(ctx: &Arc<LocalCtx>, coord: PointCoord, w: &mut executor::WorkerCtx) {
+    let width = ctx.graph.width();
+    let (x, t) = (coord.x as usize, coord.t as usize);
+    let deps = ctx.graph.dependencies(x, t);
+    let dep_bufs: Vec<&[f32]> = deps
+        .iter()
+        .map(|&d| &ctx.slots.get(PointCoord::new(d as usize, t - 1).index(width))[..])
+        .collect();
+    let kc = ctx.graph.config().kernel;
+    let s = w.recorder.start();
+    let out = execute_point(coord, &dep_bufs, &kc.kernel, kc.payload_elems, &mut w.scratch);
+    w.recorder.record(
+        coord,
+        || deps.iter().map(|&d| PointCoord::new(d as usize, t - 1)).collect(),
+        s,
+        &out,
+    );
+    ctx.slots.set(coord.index(width), out);
+
+    if t + 1 < ctx.graph.steps() {
+        // Zero-dependency successor (Trivial pattern): nothing will count
+        // it down, so the chain spawns it directly.
+        if ctx.graph.dependencies(x, t + 1).is_empty() {
+            let ctx2 = Arc::clone(ctx);
+            let cc = PointCoord::new(x, t + 1);
+            w.spawn(Box::new(move |w2| run_point(&ctx2, cc, w2)));
+        }
+        for &c in ctx.graph.reverse_dependencies(x, t) {
+            let cc = PointCoord::new(c as usize, t + 1);
+            if ctx.pending[cc.index(width)].fetch_sub(1, Ordering::AcqRel) == 1 {
+                let ctx = Arc::clone(ctx);
+                w.spawn(Box::new(move |w2| run_point(&ctx, cc, w2)));
+            }
+        }
+    }
+    w.completed();
+}
+
+// ---------------------------------------------------------- distributed
+
+/// A parcel: the marshalled output of `(x, t)` bound for a remote rank.
+struct Parcel {
+    t: u32,
+    x: u32,
+    body: MsgPayload,
+}
+
+pub(crate) fn execute_distributed(
+    graph: &TaskGraph,
+    opts: &RunOptions,
+) -> crate::Result<ExecResult> {
+    let width = graph.width();
+    let ranks = opts.workers.min(width);
+    let part = Partition::new(width, ranks);
+    let fabric: Fabric<Parcel> = Fabric::new(ranks);
+    let epoch = Epoch::now();
+    let graph = Arc::new(graph.clone());
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..ranks)
+        .map(|rank| {
+            let ep = fabric.endpoint(rank);
+            let graph = Arc::clone(&graph);
+            let validate = opts.validate;
+            std::thread::spawn(move || locality_main(rank, part, &graph, ep, validate, epoch))
+        })
+        .collect();
+
+    let mut finals: Vec<(usize, Payload)> = Vec::with_capacity(width);
+    let mut traces = Vec::new();
+    for h in handles {
+        let (f, rec) = h.join().expect("locality panicked");
+        finals.extend(f);
+        traces.push(rec);
+    }
+    let elapsed = start.elapsed();
+    finals.sort_by_key(|(x, _)| *x);
+    Ok((
+        elapsed,
+        finals.into_iter().map(|(_, p)| p).collect(),
+        merge_records(opts.validate, traces),
+    ))
+}
+
+/// Mutable scheduling state of one locality.
+struct LocalityState {
+    /// Futures for values produced or received by this rank, keyed (x, t).
+    cells: std::collections::HashMap<(u32, u32), future::FutureCell<Payload>>,
+    /// Remaining inputs per owned point, keyed (x, t).
+    pending: std::collections::HashMap<(u32, u32), u32>,
+    ready: std::collections::VecDeque<PointCoord>,
+    /// Next timestep to execute per owned point (index: x - shard start).
+    next_t: Vec<usize>,
+}
+
+impl LocalityState {
+    /// Credit one arrived input `(x, t_prev)` to its owned consumers at
+    /// `t_prev + 1`; consumers whose last input this was become ready.
+    fn credit(
+        &mut self,
+        graph: &TaskGraph,
+        my: &std::ops::Range<usize>,
+        x: usize,
+        t_prev: usize,
+    ) {
+        let t_next = t_prev + 1;
+        if t_next >= graph.steps() {
+            return;
+        }
+        for &c in graph.reverse_dependencies(x, t_prev) {
+            let c = c as usize;
+            if !my.contains(&c) {
+                continue;
+            }
+            let ck = (c as u32, t_next as u32);
+            let left = self
+                .pending
+                .entry(ck)
+                .or_insert_with(|| graph.dependencies(c, t_next).len() as u32);
+            *left -= 1;
+            if *left == 0 {
+                self.pending.remove(&ck);
+                self.ready.push_back(PointCoord::new(c, t_next));
+            }
+        }
+    }
+
+    /// Deposit a remote parcel into the future table and credit consumers.
+    fn deposit(&mut self, graph: &TaskGraph, my: &std::ops::Range<usize>, p: Parcel) {
+        self.cells.entry((p.x, p.t)).or_default().set(p.body.into_payload());
+        self.credit(graph, my, p.x as usize, p.t as usize);
+    }
+}
+
+/// One locality: a non-preemptive scheduler over its shard of points.
+///
+/// Local dependencies resolve through `FutureCell`s; remote ones arrive as
+/// parcels polled between task executions, HPX-parcelport style.
+fn locality_main(
+    rank: usize,
+    part: Partition,
+    graph: &TaskGraph,
+    ep: crate::comm::Endpoint<Parcel>,
+    validate: bool,
+    epoch: Epoch,
+) -> (Vec<(usize, Payload)>, Vec<ExecRecord>) {
+    let my = part.range(rank);
+    let steps = graph.steps();
+    let kc = graph.config().kernel;
+    let mut scratch = Vec::new();
+    let mut rec = Recorder::new(validate, epoch);
+
+    let mut st = LocalityState {
+        cells: Default::default(),
+        pending: Default::default(),
+        ready: my.clone().map(|x| PointCoord::new(x, 0)).collect(),
+        next_t: vec![0; my.len()],
+    };
+    let mut done = 0usize;
+    let total = my.len() * steps;
+    let mut finals: Vec<(usize, Payload)> = Vec::with_capacity(my.len());
+
+    while done < total {
+        // 1. Drain arrived parcels (non-blocking poll — the parcelport).
+        while let Some(p) = ep.try_recv() {
+            st.deposit(graph, &my, p);
+        }
+
+        // 2. Execute one ready point (non-preemptive), else block on the
+        //    next parcel.
+        let Some(coord) = st.ready.pop_front() else {
+            let p = ep.recv();
+            st.deposit(graph, &my, p);
+            continue;
+        };
+        let (x, t) = (coord.x as usize, coord.t as usize);
+        let deps = graph.dependencies(x, t);
+        let dep_payloads: Vec<Payload> = deps
+            .iter()
+            .map(|&d| {
+                st.cells
+                    .get(&(d, (t - 1) as u32))
+                    .and_then(|c| c.try_get())
+                    .unwrap_or_else(|| panic!("dep ({d},{}) not ready for ({x},{t})", t - 1))
+            })
+            .collect();
+        let dep_bufs: Vec<&[f32]> = dep_payloads.iter().map(|p| &p[..]).collect();
+        let s = rec.start();
+        let out = execute_point(coord, &dep_bufs, &kc.kernel, kc.payload_elems, &mut scratch);
+        rec.record(
+            coord,
+            || deps.iter().map(|&d| PointCoord::new(d as usize, t - 1)).collect(),
+            s,
+            &out,
+        );
+        done += 1;
+        st.next_t[x - my.start] = t + 1;
+
+        // 3. Publish: set the local future, send parcels to remote
+        //    consumer ranks (dedup per rank), credit local consumers.
+        st.cells.entry((coord.x, coord.t)).or_default().set(out.clone());
+        if t + 1 < steps {
+            let mut sent = vec![false; part.ranks];
+            for &c in graph.reverse_dependencies(x, t) {
+                let dst = part.owner(c as usize);
+                if dst != rank && !sent[dst] {
+                    sent[dst] = true;
+                    ep.send(
+                        dst,
+                        Parcel {
+                            t: t as u32,
+                            x: x as u32,
+                            body: MsgPayload::Marshalled(marshal(&out)),
+                        },
+                    );
+                }
+            }
+            st.credit(graph, &my, x, t);
+            if graph.dependencies(x, t + 1).is_empty() {
+                // Trivial pattern: self-schedule the next step.
+                st.ready.push_back(PointCoord::new(x, t + 1));
+            }
+        } else {
+            finals.push((x, out));
+        }
+
+        // 4. Garbage-collect futures no in-flight point can still read:
+        //    owned points can spread across timesteps (wavefront), so the
+        //    slowest owned point's next step governs what is dead.
+        let min_t = st.next_t.iter().copied().min().unwrap_or(0);
+        if min_t >= 2 && done % my.len().max(1) == 0 {
+            st.cells.retain(|(_, ct), _| *ct as usize + 1 >= min_t);
+        }
+    }
+
+    (finals, rec.into_records())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{
+        validate_execution, DependencePattern, GraphConfig, KernelConfig,
+    };
+
+    fn graph(dep: DependencePattern, width: usize, steps: usize) -> TaskGraph {
+        TaskGraph::new(GraphConfig {
+            width,
+            steps,
+            dependence: dep,
+            kernel: KernelConfig::compute_bound(8),
+            ..GraphConfig::default()
+        })
+    }
+
+    #[test]
+    fn local_stencil_validates() {
+        let g = graph(DependencePattern::Stencil1D, 8, 6);
+        let opts = RunOptions::new(4).with_validate(true);
+        let (_, finals, records) = execute_local(&g, &opts).unwrap();
+        assert_eq!(finals.len(), 8);
+        validate_execution(&g, &records.unwrap()).unwrap();
+    }
+
+    #[test]
+    fn local_all_patterns_validate() {
+        for dep in DependencePattern::all() {
+            let g = graph(dep, 6, 5);
+            let opts = RunOptions::new(3).with_validate(true);
+            let (_, _, records) = execute_local(&g, &opts).unwrap();
+            validate_execution(&g, &records.unwrap())
+                .unwrap_or_else(|e| panic!("{dep:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn local_without_stealing_still_completes() {
+        let g = graph(DependencePattern::Stencil1D, 8, 5);
+        let mut opts = RunOptions::new(4).with_validate(true);
+        opts.hpx.work_stealing = false;
+        let (_, _, records) = execute_local(&g, &opts).unwrap();
+        validate_execution(&g, &records.unwrap()).unwrap();
+    }
+
+    #[test]
+    fn distributed_stencil_validates() {
+        let g = graph(DependencePattern::Stencil1D, 8, 6);
+        let opts = RunOptions::new(4).with_validate(true);
+        let (_, finals, records) = execute_distributed(&g, &opts).unwrap();
+        assert_eq!(finals.len(), 8);
+        validate_execution(&g, &records.unwrap()).unwrap();
+    }
+
+    #[test]
+    fn distributed_all_patterns_validate() {
+        for dep in DependencePattern::all() {
+            let g = graph(dep, 6, 5);
+            let opts = RunOptions::new(3).with_validate(true);
+            let (_, _, records) = execute_distributed(&g, &opts).unwrap();
+            validate_execution(&g, &records.unwrap())
+                .unwrap_or_else(|e| panic!("{dep:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn distributed_long_run_gc_correct() {
+        // Long enough that the future GC must fire many times.
+        let g = graph(DependencePattern::Stencil1D, 6, 40);
+        let opts = RunOptions::new(3).with_validate(true);
+        let (_, _, records) = execute_distributed(&g, &opts).unwrap();
+        validate_execution(&g, &records.unwrap()).unwrap();
+    }
+
+    #[test]
+    fn local_and_distributed_agree_numerically() {
+        let g = graph(DependencePattern::Stencil1DPeriodic, 6, 7);
+        let a = execute_local(&g, &RunOptions::new(3)).unwrap();
+        let b = execute_distributed(&g, &RunOptions::new(3)).unwrap();
+        for (pa, pb) in a.1.iter().zip(b.1.iter()) {
+            assert_eq!(&pa[..], &pb[..]);
+        }
+    }
+}

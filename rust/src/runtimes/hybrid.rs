@@ -1,0 +1,340 @@
+//! MPI+OpenMP-like hybrid runtime: MPI-style ranks, each running an
+//! OpenMP-style team, with communication *funnelled* through the master
+//! thread (`MPI_THREAD_FUNNELED` — the configuration Task Bench's
+//! MPI+OpenMP implementation uses).
+//!
+//! Cost model (all real code paths):
+//! * master-serial message unpack before the parallel region and
+//!   marshal+send after it — team threads idle at the barrier meanwhile;
+//! * master-serial construction of the per-point dependency lists (the
+//!   "message handling" the funnel forces through one thread) — this is
+//!   `O(owned points)` serial work per step, which is why the hybrid's
+//!   METG *rises* under overdecomposition (Table 2: 50.9 → 152.5 → 258.6)
+//!   while pure OpenMP's stays flat;
+//! * dynamic chunk-1 scheduling inside the parallel region (a shared
+//!   atomic task counter), Task Bench's `schedule(dynamic)`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::{marshal, Fabric, MsgPayload};
+use crate::core::{execute_point, ExecRecord, Payload, PointCoord, TaskGraph};
+
+use super::openmplike::SpinBarrier;
+use super::{merge_records, Epoch, ExecResult, Partition, RacyVec, Recorder, RunOptions};
+
+struct HybridMsg {
+    t: u32,
+    x: u32,
+    body: MsgPayload,
+}
+
+/// Per-step shared state between a rank's master and its team.
+struct RankShared {
+    barrier: SpinBarrier,
+    /// prev/cur payloads, indexed by *global* x (only owned + halo slots
+    /// are ever touched).
+    bufs: [RacyVec; 2],
+    /// Dynamic-scheduling cursor for the current parallel region.
+    next_task: AtomicUsize,
+    /// Per-point dependency lists for the current step, built serially by
+    /// the master (the funnel): (x, deps-as-global-indices).
+    work: RacyVec2,
+}
+
+/// One writable slot per team handing work descriptors across the fork
+/// barrier; same safety discipline as [`RacyVec`].
+struct RacyVec2 {
+    inner: std::cell::UnsafeCell<Vec<(usize, Vec<u32>)>>,
+}
+unsafe impl Sync for RacyVec2 {}
+unsafe impl Send for RacyVec2 {}
+
+impl RacyVec2 {
+    fn new() -> Self {
+        Self { inner: std::cell::UnsafeCell::new(Vec::new()) }
+    }
+    /// Master-only, between barriers.
+    #[allow(clippy::mut_from_ref)]
+    fn set(&self, v: Vec<(usize, Vec<u32>)>) {
+        unsafe { *self.inner.get() = v }
+    }
+    /// Team, after the fork barrier.
+    fn get(&self) -> &Vec<(usize, Vec<u32>)> {
+        unsafe { &*self.inner.get() }
+    }
+}
+
+pub(crate) fn execute(graph: &TaskGraph, opts: &RunOptions) -> crate::Result<ExecResult> {
+    let width = graph.width();
+    let ranks = opts.effective_hybrid_ranks().min(width);
+    let threads_per_rank = (opts.workers / ranks).max(1);
+    let part = Partition::new(width, ranks);
+    let fabric: Fabric<HybridMsg> = Fabric::new(ranks);
+    let epoch = Epoch::now();
+    let graph = Arc::new(graph.clone());
+
+    let start = Instant::now();
+    let handles: Vec<_> = (0..ranks)
+        .map(|rank| {
+            let ep = fabric.endpoint(rank);
+            let graph = Arc::clone(&graph);
+            let validate = opts.validate;
+            std::thread::spawn(move || {
+                rank_main(rank, part, threads_per_rank, &graph, ep, validate, epoch)
+            })
+        })
+        .collect();
+
+    let mut finals: Vec<(usize, Payload)> = Vec::with_capacity(width);
+    let mut traces = Vec::new();
+    for h in handles {
+        let (f, rec) = h.join().expect("hybrid rank panicked");
+        finals.extend(f);
+        traces.extend(rec);
+    }
+    let elapsed = start.elapsed();
+    finals.sort_by_key(|(x, _)| *x);
+    Ok((
+        elapsed,
+        finals.into_iter().map(|(_, p)| p).collect(),
+        merge_records(opts.validate, traces),
+    ))
+}
+
+fn rank_main(
+    rank: usize,
+    part: Partition,
+    threads: usize,
+    graph: &TaskGraph,
+    ep: crate::comm::Endpoint<HybridMsg>,
+    validate: bool,
+    epoch: Epoch,
+) -> (Vec<(usize, Payload)>, Vec<Vec<ExecRecord>>) {
+    let my = part.range(rank);
+    let width = graph.width();
+    let steps = graph.steps();
+    let shared = Arc::new(RankShared {
+        barrier: SpinBarrier::new(threads),
+        bufs: [RacyVec::new(width), RacyVec::new(width)],
+        next_task: AtomicUsize::new(0),
+        work: RacyVec2::new(),
+    });
+
+    // Spawn the team (threads - 1 extras; master participates).
+    let team: Vec<_> = (1..threads)
+        .map(|tid| {
+            let shared = Arc::clone(&shared);
+            let graph = graph.clone();
+            std::thread::spawn(move || {
+                team_loop(tid, &graph, &shared, validate, epoch)
+            })
+        })
+        .collect();
+
+    // Master loop.
+    let mut rec = Recorder::new(validate, epoch);
+    let mut scratch = Vec::new();
+    let mut inbox: HashMap<(u32, u32), Payload> = HashMap::new();
+    let mut finals = Vec::new();
+
+    for t in 0..steps {
+        let (cur, prev) = (t % 2, (t + 1) % 2);
+
+        // --- serial: receive + unpack remote halos into prev ---
+        let expected = remote_dep_count(graph, &part, rank, t);
+        let mut have = inbox
+            .keys()
+            .filter(|(mt, _)| *mt as usize + 1 == t)
+            .count();
+        while have < expected {
+            let m = ep.recv();
+            inbox.insert((m.t, m.x), m.body.into_payload());
+            if m.t as usize + 1 == t {
+                have += 1;
+            }
+        }
+        if t > 0 {
+            for ((mt, mx), p) in inbox.iter() {
+                if *mt as usize + 1 == t {
+                    shared.bufs[prev].set(*mx as usize, p.clone());
+                }
+            }
+        }
+
+        // --- serial: build per-point work descriptors (the funnel) ---
+        let work: Vec<(usize, Vec<u32>)> = my
+            .clone()
+            .map(|x| (x, graph.dependencies(x, t).to_vec()))
+            .collect();
+        shared.work.set(work);
+        shared.next_task.store(0, Ordering::Release);
+
+        // --- parallel region ---
+        shared.barrier.wait(); // fork
+        run_chunk(graph, &shared, cur, prev, &mut scratch, &mut rec, t);
+        shared.barrier.wait(); // join
+
+        // --- serial: marshal + send boundary outputs ---
+        if t + 1 < steps {
+            for x in my.clone() {
+                let mut sent = vec![false; part.ranks];
+                for &c in graph.reverse_dependencies(x, t) {
+                    let dst = part.owner(c as usize);
+                    if dst != rank && !sent[dst] {
+                        sent[dst] = true;
+                        ep.send(
+                            dst,
+                            HybridMsg {
+                                t: t as u32,
+                                x: x as u32,
+                                body: MsgPayload::Marshalled(marshal(
+                                    shared.bufs[cur].get(x),
+                                )),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        inbox.retain(|(mt, _), _| *mt as usize + 1 >= t);
+    }
+
+    let last = (steps - 1) % 2;
+    for x in my.clone() {
+        finals.push((x, shared.bufs[last].get(x).clone()));
+    }
+    let mut traces = vec![rec.into_records()];
+    // Signal the team that the run is over by one more "step": the team
+    // loop iterates exactly `steps` times, so it has already exited.
+    for h in team {
+        traces.push(h.join().expect("team thread panicked"));
+    }
+    (finals, traces)
+}
+
+/// Team thread: participate in every step's parallel region.
+fn team_loop(
+    _tid: usize,
+    graph: &TaskGraph,
+    shared: &RankShared,
+    validate: bool,
+    epoch: Epoch,
+) -> Vec<ExecRecord> {
+    let mut rec = Recorder::new(validate, epoch);
+    let mut scratch = Vec::new();
+    for t in 0..graph.steps() {
+        let (cur, prev) = (t % 2, (t + 1) % 2);
+        shared.barrier.wait(); // fork
+        run_chunk(graph, shared, cur, prev, &mut scratch, &mut rec, t);
+        shared.barrier.wait(); // join
+    }
+    rec.into_records()
+}
+
+/// Dynamic chunk-1 self-scheduling over the step's work descriptors.
+fn run_chunk(
+    graph: &TaskGraph,
+    shared: &RankShared,
+    cur: usize,
+    prev: usize,
+    scratch: &mut Vec<f32>,
+    rec: &mut Recorder,
+    t: usize,
+) {
+    let kc = graph.config().kernel;
+    let work = shared.work.get();
+    loop {
+        let i = shared.next_task.fetch_add(1, Ordering::AcqRel);
+        if i >= work.len() {
+            return;
+        }
+        let (x, deps) = &work[i];
+        let coord = PointCoord::new(*x, t);
+        let bufs: Vec<&[f32]> = deps
+            .iter()
+            .map(|&d| &shared.bufs[prev].get(d as usize)[..])
+            .collect();
+        let s = rec.start();
+        let out = execute_point(coord, &bufs, &kc.kernel, kc.payload_elems, scratch);
+        rec.record(
+            coord,
+            || deps.iter().map(|&d| PointCoord::new(d as usize, t - 1)).collect(),
+            s,
+            &out,
+        );
+        shared.bufs[cur].set(*x, out);
+    }
+}
+
+fn remote_dep_count(graph: &TaskGraph, part: &Partition, rank: usize, t: usize) -> usize {
+    if t == 0 {
+        return 0;
+    }
+    let my = part.range(rank);
+    let mut remote: Vec<u32> = Vec::new();
+    for x in my.clone() {
+        for &d in graph.dependencies(x, t) {
+            if !my.contains(&(d as usize)) {
+                remote.push(d);
+            }
+        }
+    }
+    remote.sort_unstable();
+    remote.dedup();
+    remote.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{
+        validate_execution, DependencePattern, GraphConfig, KernelConfig,
+    };
+
+    fn run_and_validate(
+        dep: DependencePattern,
+        width: usize,
+        steps: usize,
+        workers: usize,
+        ranks: usize,
+    ) {
+        let g = TaskGraph::new(GraphConfig {
+            width,
+            steps,
+            dependence: dep,
+            kernel: KernelConfig::compute_bound(8),
+            ..GraphConfig::default()
+        });
+        let mut opts = RunOptions::new(workers).with_validate(true);
+        opts.hybrid_ranks = ranks;
+        let (_, finals, records) = execute(&g, &opts).unwrap();
+        assert_eq!(finals.len(), width);
+        validate_execution(&g, &records.unwrap())
+            .unwrap_or_else(|e| panic!("{dep:?}: {e}"));
+    }
+
+    #[test]
+    fn stencil_two_ranks() {
+        run_and_validate(DependencePattern::Stencil1D, 8, 6, 4, 2);
+    }
+
+    #[test]
+    fn all_patterns_validate() {
+        for dep in DependencePattern::all() {
+            run_and_validate(dep, 6, 5, 4, 2);
+        }
+    }
+
+    #[test]
+    fn single_rank_degenerates_to_openmp_shape() {
+        run_and_validate(DependencePattern::Stencil1D, 8, 5, 4, 1);
+    }
+
+    #[test]
+    fn many_ranks() {
+        run_and_validate(DependencePattern::Stencil1DPeriodic, 12, 5, 4, 4);
+    }
+}

@@ -1,0 +1,420 @@
+//! The runtime systems under test.
+//!
+//! Five execution models, each a real thread-based implementation of its
+//! system's scheduling discipline (DESIGN.md §2 maps each to the system it
+//! stands in for):
+//!
+//! * [`charmlike`] — message-driven chare array, PE-anchored, with the
+//!   §5.1 build-option ablations (priorities, scheduling path, SHMEM).
+//! * [`hpxlike`] — future/continuation dataflow on a work-stealing
+//!   executor; `HpxLocal` (pure shared memory) and `HpxDistributed`
+//!   (rank-sharded with marshalled parcels).
+//! * [`mpilike`] — rank-per-core two-sided message passing, BSP loop.
+//! * [`openmplike`] — persistent fork-join team, static chunking.
+//! * [`hybrid`] — MPI across ranks × OpenMP within, comm funnelled
+//!   through the master thread.
+
+pub mod charmlike;
+pub mod hpxlike;
+pub mod hybrid;
+pub mod mpilike;
+pub mod openmplike;
+mod slots;
+
+use std::time::{Duration, Instant};
+
+use crate::comm::IntranodeTransport;
+use crate::core::{checksum_final, ExecRecord, Payload, PointCoord, TaskGraph};
+pub use slots::{RacyVec, SlotVec};
+
+/// Which runtime system to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemKind {
+    CharmLike,
+    HpxLocal,
+    HpxDistributed,
+    MpiLike,
+    OpenMpLike,
+    Hybrid,
+}
+
+impl SystemKind {
+    pub fn all() -> Vec<SystemKind> {
+        use SystemKind::*;
+        vec![CharmLike, HpxDistributed, HpxLocal, MpiLike, OpenMpLike, Hybrid]
+    }
+
+    /// Display name matching the paper's tables.
+    pub fn name(&self) -> &'static str {
+        use SystemKind::*;
+        match self {
+            CharmLike => "Charm++ (like)",
+            HpxLocal => "HPX local (like)",
+            HpxDistributed => "HPX distributed (like)",
+            MpiLike => "MPI (like)",
+            OpenMpLike => "OpenMP (like)",
+            Hybrid => "MPI+OpenMP (like)",
+        }
+    }
+
+    /// CLI identifier.
+    pub fn id(&self) -> &'static str {
+        use SystemKind::*;
+        match self {
+            CharmLike => "charm",
+            HpxLocal => "hpx_local",
+            HpxDistributed => "hpx_dist",
+            MpiLike => "mpi",
+            OpenMpLike => "openmp",
+            Hybrid => "mpi_openmp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SystemKind> {
+        SystemKind::all().into_iter().find(|k| k.id() == s)
+    }
+
+    /// Shared-memory-only systems (the paper compares these separately).
+    pub fn is_shared_memory_only(&self) -> bool {
+        matches!(self, SystemKind::HpxLocal | SystemKind::OpenMpLike)
+    }
+}
+
+/// Charm++-like build options — the §5.1 / Fig 3 ablation knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CharmOptions {
+    /// Eight-byte message priorities instead of bit-vector priorities.
+    pub eight_byte_prio: bool,
+    /// Simplified scheduling path: no priorities at all, no idle
+    /// detection, no condition-based/periodic callbacks.
+    pub simplified_sched: bool,
+    /// Intranode transport: NIC-path marshalling (default) vs SHMEM.
+    pub intranode: IntranodeTransport,
+}
+
+impl Default for CharmOptions {
+    fn default() -> Self {
+        Self {
+            eight_byte_prio: false,
+            simplified_sched: false,
+            intranode: IntranodeTransport::Nic,
+        }
+    }
+}
+
+impl CharmOptions {
+    /// The five builds of Fig 3.
+    pub fn fig3_builds() -> Vec<(&'static str, CharmOptions)> {
+        use IntranodeTransport::*;
+        vec![
+            ("Default", CharmOptions::default()),
+            (
+                "Char. Priority",
+                CharmOptions { eight_byte_prio: true, ..Default::default() },
+            ),
+            (
+                "SHMEM",
+                CharmOptions { intranode: Shmem, ..Default::default() },
+            ),
+            (
+                "Simple Sched.",
+                CharmOptions { simplified_sched: true, ..Default::default() },
+            ),
+            (
+                "Combined",
+                CharmOptions {
+                    eight_byte_prio: true,
+                    simplified_sched: true,
+                    intranode: Shmem,
+                },
+            ),
+        ]
+    }
+}
+
+/// HPX-like executor options (§5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HpxOptions {
+    /// Enable work stealing between worker threads.
+    pub work_stealing: bool,
+}
+
+impl Default for HpxOptions {
+    fn default() -> Self {
+        Self { work_stealing: true }
+    }
+}
+
+/// Options common to a runtime execution.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    /// Worker threads ("cores" of the single real node).
+    pub workers: usize,
+    /// Record per-task execution traces for [`crate::core::validate_execution`].
+    pub validate: bool,
+    pub charm: CharmOptions,
+    pub hpx: HpxOptions,
+    /// MPI ranks for the hybrid runtime (threads split evenly across
+    /// ranks). 0 = auto (2 if workers >= 4, else 1).
+    pub hybrid_ranks: usize,
+}
+
+impl RunOptions {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            validate: false,
+            charm: CharmOptions::default(),
+            hpx: HpxOptions::default(),
+            hybrid_ranks: 0,
+        }
+    }
+
+    pub fn with_validate(mut self, v: bool) -> Self {
+        self.validate = v;
+        self
+    }
+
+    pub fn effective_hybrid_ranks(&self) -> usize {
+        if self.hybrid_ranks > 0 {
+            self.hybrid_ranks.min(self.workers)
+        } else if self.workers >= 4 {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+/// Outcome of one graph execution.
+#[derive(Debug)]
+pub struct RunReport {
+    pub system: SystemKind,
+    pub elapsed: Duration,
+    pub tasks: usize,
+    /// Order-independent checksum over the final timestep.
+    pub checksum: f64,
+    /// Execution trace (only when `RunOptions::validate`).
+    pub records: Option<Vec<ExecRecord>>,
+}
+
+impl RunReport {
+    /// Average task granularity: `wall · cores / tasks` (the paper's
+    /// definition in §6.1).
+    pub fn task_granularity_us(&self, cores: usize) -> f64 {
+        self.elapsed.as_secs_f64() * 1e6 * cores as f64 / self.tasks as f64
+    }
+
+    /// Achieved FLOP/s for a compute-bound graph.
+    pub fn flops_per_sec(&self, graph: &TaskGraph) -> f64 {
+        graph.total_flops() / self.elapsed.as_secs_f64()
+    }
+}
+
+/// Run `graph` on `kind` with default options.
+pub fn run(kind: SystemKind, graph: &TaskGraph, workers: usize) -> crate::Result<RunReport> {
+    run_with(kind, graph, &RunOptions::new(workers))
+}
+
+/// Run `graph` on `kind` with explicit options.
+pub fn run_with(
+    kind: SystemKind,
+    graph: &TaskGraph,
+    opts: &RunOptions,
+) -> crate::Result<RunReport> {
+    let (elapsed, finals, records) = match kind {
+        SystemKind::CharmLike => charmlike::execute(graph, opts)?,
+        SystemKind::HpxLocal => hpxlike::execute_local(graph, opts)?,
+        SystemKind::HpxDistributed => hpxlike::execute_distributed(graph, opts)?,
+        SystemKind::MpiLike => mpilike::execute(graph, opts)?,
+        SystemKind::OpenMpLike => openmplike::execute(graph, opts)?,
+        SystemKind::Hybrid => hybrid::execute(graph, opts)?,
+    };
+    Ok(RunReport {
+        system: kind,
+        elapsed,
+        tasks: graph.num_points(),
+        checksum: checksum_final(graph, finals.into_iter()),
+        records,
+    })
+}
+
+/// Per-runtime execution result before reporting: wall time, the
+/// final-timestep payloads (x ascending), and optional trace.
+pub(crate) type ExecResult = (Duration, Vec<Payload>, Option<Vec<ExecRecord>>);
+
+/// Contiguous block partition of `width` points over `ranks` owners —
+/// the decomposition every distributed flavour uses.
+#[derive(Debug, Clone, Copy)]
+pub struct Partition {
+    pub width: usize,
+    pub ranks: usize,
+}
+
+impl Partition {
+    pub fn new(width: usize, ranks: usize) -> Self {
+        Self { width, ranks: ranks.max(1).min(width.max(1)) }
+    }
+
+    /// Owner rank of point `x`.
+    pub fn owner(&self, x: usize) -> usize {
+        debug_assert!(x < self.width);
+        // Inverse of `range`: ranks r < rem own (base+1) points.
+        let base = self.width / self.ranks;
+        let rem = self.width % self.ranks;
+        let split = rem * (base + 1);
+        if x < split {
+            x / (base + 1)
+        } else {
+            rem + (x - split) / base
+        }
+    }
+
+    /// Half-open point range owned by `rank`.
+    pub fn range(&self, rank: usize) -> std::ops::Range<usize> {
+        debug_assert!(rank < self.ranks);
+        let base = self.width / self.ranks;
+        let rem = self.width % self.ranks;
+        let start = rank * base + rank.min(rem);
+        let len = base + usize::from(rank < rem);
+        start..start + len
+    }
+}
+
+/// Shared measurement epoch for `ExecRecord` timestamps.
+#[derive(Debug, Clone, Copy)]
+pub struct Epoch(pub Instant);
+
+impl Epoch {
+    pub fn now() -> Self {
+        Epoch(Instant::now())
+    }
+
+    pub fn ns(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+}
+
+/// Per-worker trace recorder — no-op unless validation is on.
+pub struct Recorder {
+    enabled: bool,
+    epoch: Epoch,
+    records: Vec<ExecRecord>,
+}
+
+impl Recorder {
+    pub fn new(enabled: bool, epoch: Epoch) -> Self {
+        Self { enabled, epoch, records: Vec::new() }
+    }
+
+    /// Timestamp to capture just before running a task body.
+    #[inline]
+    pub fn start(&self) -> u64 {
+        if self.enabled {
+            self.epoch.ns()
+        } else {
+            0
+        }
+    }
+
+    #[inline]
+    pub fn record(
+        &mut self,
+        coord: PointCoord,
+        deps_seen: impl FnOnce() -> Vec<PointCoord>,
+        start_ns: u64,
+        payload: &Payload,
+    ) {
+        if self.enabled {
+            self.records.push(ExecRecord {
+                coord,
+                deps_seen: deps_seen(),
+                start_ns,
+                end_ns: self.epoch.ns(),
+                payload: payload.clone(),
+            });
+        }
+    }
+
+    pub fn into_records(self) -> Vec<ExecRecord> {
+        self.records
+    }
+}
+
+/// Merge per-worker recorder outputs into one optional trace.
+pub(crate) fn merge_records(
+    validate: bool,
+    per_worker: Vec<Vec<ExecRecord>>,
+) -> Option<Vec<ExecRecord>> {
+    if validate {
+        Some(per_worker.into_iter().flatten().collect())
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly() {
+        for width in [1usize, 5, 16, 48, 97] {
+            for ranks in [1usize, 2, 3, 7, 16] {
+                let p = Partition::new(width, ranks);
+                let mut covered = vec![0u32; width];
+                for r in 0..p.ranks {
+                    for x in p.range(r) {
+                        covered[x] += 1;
+                        assert_eq!(p.owner(x), r, "w={width} r={ranks} x={x}");
+                    }
+                }
+                assert!(covered.iter().all(|&c| c == 1), "w={width} r={ranks}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_balanced() {
+        let p = Partition::new(10, 3);
+        let sizes: Vec<usize> = (0..3).map(|r| p.range(r).len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn partition_more_ranks_than_width() {
+        let p = Partition::new(3, 8);
+        assert_eq!(p.ranks, 3);
+    }
+
+    #[test]
+    fn system_kind_parse_round_trip() {
+        for k in SystemKind::all() {
+            assert_eq!(SystemKind::parse(k.id()), Some(k));
+        }
+        assert_eq!(SystemKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn hybrid_ranks_auto() {
+        let mut o = RunOptions::new(8);
+        assert_eq!(o.effective_hybrid_ranks(), 2);
+        o.workers = 2;
+        assert_eq!(o.effective_hybrid_ranks(), 1);
+        o.hybrid_ranks = 4;
+        o.workers = 8;
+        assert_eq!(o.effective_hybrid_ranks(), 4);
+    }
+
+    #[test]
+    fn fig3_has_five_builds() {
+        let builds = CharmOptions::fig3_builds();
+        assert_eq!(builds.len(), 5);
+        assert_eq!(builds[0].0, "Default");
+        assert!(builds.iter().any(|(n, o)| *n == "Combined"
+            && o.eight_byte_prio
+            && o.simplified_sched
+            && o.intranode == IntranodeTransport::Shmem));
+    }
+}

@@ -1,0 +1,175 @@
+//! `SlotVec`: a fixed-size vector of write-once payload slots shared
+//! across worker threads without per-slot locks.
+//!
+//! Safety contract (enforced by the runtimes' dataflow): each slot is
+//! written by exactly one task, and read only by tasks ordered after that
+//! write by a synchronizing operation (dependency counter, barrier, or
+//! message hand-off). The release/acquire pair on the slot's `ready` flag
+//! makes the payload publication sound even if a runtime's own
+//! synchronization is coarser.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::core::Payload;
+
+struct Slot {
+    ready: AtomicBool,
+    value: UnsafeCell<Option<Payload>>,
+}
+
+pub struct SlotVec {
+    slots: Vec<Slot>,
+}
+
+unsafe impl Sync for SlotVec {}
+unsafe impl Send for SlotVec {}
+
+impl SlotVec {
+    pub fn new(n: usize) -> Self {
+        Self {
+            slots: (0..n)
+                .map(|_| Slot {
+                    ready: AtomicBool::new(false),
+                    value: UnsafeCell::new(None),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Publish slot `i`. Panics if the slot was already written (a
+    /// duplicate-execution bug in the calling runtime).
+    pub fn set(&self, i: usize, p: Payload) {
+        let slot = &self.slots[i];
+        unsafe {
+            let v = &mut *slot.value.get();
+            assert!(v.is_none(), "slot {i} written twice");
+            *v = Some(p);
+        }
+        slot.ready.store(true, Ordering::Release);
+    }
+
+    /// Read slot `i`; panics if not yet published (a missing-dependency
+    /// bug in the calling runtime).
+    pub fn get(&self, i: usize) -> &Payload {
+        let slot = &self.slots[i];
+        assert!(
+            slot.ready.load(Ordering::Acquire),
+            "slot {i} read before it was written"
+        );
+        unsafe { (*slot.value.get()).as_ref().unwrap() }
+    }
+
+    pub fn is_set(&self, i: usize) -> bool {
+        self.slots[i].ready.load(Ordering::Acquire)
+    }
+}
+
+/// A reusable payload buffer synchronized *externally* (by a barrier).
+///
+/// Unlike [`SlotVec`], slots may be overwritten. Safety contract: between
+/// any write of slot `i` and any other access to slot `i` there is a full
+/// barrier (or equivalent happens-before edge) established by the caller.
+/// This is exactly the OpenMP double-buffer discipline: writes to the
+/// `cur` buffer in step `t` are separated from step `t+1`'s reads (and
+/// step `t+2`'s overwrites) by the implicit end-of-loop barrier.
+pub struct RacyVec {
+    slots: Vec<UnsafeCell<Payload>>,
+}
+
+unsafe impl Sync for RacyVec {}
+unsafe impl Send for RacyVec {}
+
+impl RacyVec {
+    pub fn new(n: usize) -> Self {
+        Self {
+            slots: (0..n).map(|_| UnsafeCell::new(Payload::from(vec![]))).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Overwrite slot `i`. Caller must guarantee exclusive access (each
+    /// slot is written by exactly one thread per phase).
+    #[allow(clippy::mut_from_ref)]
+    pub fn set(&self, i: usize, p: Payload) {
+        unsafe { *self.slots[i].get() = p }
+    }
+
+    /// Read slot `i`. Caller must guarantee a happens-before edge from the
+    /// write phase (a barrier).
+    pub fn get(&self, i: usize) -> &Payload {
+        unsafe { &*self.slots[i].get() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn racy_vec_single_thread_round_trip() {
+        let v = RacyVec::new(3);
+        v.set(1, Payload::from(vec![2.5f32]));
+        assert_eq!(v.get(1)[0], 2.5);
+        v.set(1, Payload::from(vec![3.5f32])); // overwrite allowed
+        assert_eq!(v.get(1)[0], 3.5);
+        assert_eq!(v.len(), 3);
+    }
+
+    #[test]
+    fn set_then_get() {
+        let s = SlotVec::new(4);
+        s.set(2, Payload::from(vec![1.0f32]));
+        assert!(s.is_set(2));
+        assert!(!s.is_set(0));
+        assert_eq!(&s.get(2)[..], &[1.0f32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "written twice")]
+    fn double_write_detected() {
+        let s = SlotVec::new(1);
+        s.set(0, Payload::from(vec![1.0f32]));
+        s.set(0, Payload::from(vec![2.0f32]));
+    }
+
+    #[test]
+    #[should_panic(expected = "read before")]
+    fn early_read_detected() {
+        let s = SlotVec::new(1);
+        let _ = s.get(0);
+    }
+
+    #[test]
+    fn cross_thread_publication() {
+        let s = Arc::new(SlotVec::new(100));
+        let writer = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                for i in 0..100 {
+                    s.set(i, Payload::from(vec![i as f32]));
+                }
+            })
+        };
+        writer.join().unwrap();
+        for i in 0..100 {
+            assert_eq!(s.get(i)[0], i as f32);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Blocking MPSC run queue — the Charm++-like PE scheduler's message queue.
+//!
+//! Many producers (other PEs delivering entry-method messages), one
+//! consumer (the PE's scheduler loop). Blocking `pop` parks on a condvar;
+//! `pop_spin_then_block` first spins briefly, modelling Charm++'s
+//! scheduler which polls the network before idling.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct RunQueue<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for RunQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> RunQueue<T> {
+    pub fn new() -> Self {
+        Self { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    pub fn push(&self, v: T) {
+        let mut q = self.q.lock().unwrap();
+        q.push_back(v);
+        drop(q);
+        self.cv.notify_one();
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.q.lock().unwrap().pop_front()
+    }
+
+    /// Spin for `spins` iterations, then block until an item arrives.
+    pub fn pop_spin_then_block(&self, spins: u32) -> T {
+        for _ in 0..spins {
+            if let Some(v) = self.try_pop() {
+                return v;
+            }
+            std::hint::spin_loop();
+        }
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(v) = q.pop_front() {
+                return v;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = RunQueue::new();
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let q = Arc::new(RunQueue::new());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_spin_then_block(10));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(99);
+        assert_eq!(h.join().unwrap(), 99);
+    }
+
+    #[test]
+    fn mpsc_no_loss() {
+        let q = Arc::new(RunQueue::new());
+        let producers = 4;
+        let per = 10_000;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    q.push(p * per + i);
+                }
+            }));
+        }
+        let mut seen = vec![false; producers * per];
+        for _ in 0..producers * per {
+            let v = q.pop_spin_then_block(100);
+            assert!(!seen[v], "duplicate {v}");
+            seen[v] = true;
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,16 @@
+//! Scheduling substrates shared by the runtime systems.
+//!
+//! Each runtime's overhead *is* the paper's measurand, so these are real
+//! data structures with real costs, not models: a Chase–Lev work-stealing
+//! deque (HPX-like executor), a blocking MPSC run queue (Charm++ PE
+//! scheduler), and message priority queues in the two flavours the
+//! Charm++ ablation of §5.1/Fig 3 toggles (arbitrary bit-vector priorities
+//! vs eight-byte priorities).
+
+mod fifo;
+mod prio;
+mod wsdeque;
+
+pub use fifo::RunQueue;
+pub use prio::{BitvecPrioQueue, EightBytePrioQueue, PrioQueue};
+pub use wsdeque::{Stealer, Worker};

@@ -1,0 +1,194 @@
+//! Message priority queues — the §5.1 "Eight-Byte Message Priority" knob.
+//!
+//! Charm++ historically supports arbitrary-length *bit-vector* message
+//! priorities, which puts a variable-length lexicographic compare on the
+//! message receive path. The ablation build replaces them with fixed
+//! eight-byte priorities (a single u64 compare). Both paths are real here,
+//! and `benches/micro.rs` measures the difference Fig 3 probes.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+
+/// Common interface so the Charm++-like scheduler can hold either flavour.
+pub trait PrioQueue<T>: Send {
+    fn push(&mut self, prio_bits: &[u8], v: T);
+    fn pop(&mut self) -> Option<T>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+struct BitvecEntry<T> {
+    /// Lexicographic bit-vector priority (lower sorts first), heap-inverted.
+    prio: Vec<u8>,
+    seq: u64,
+    v: T,
+}
+
+impl<T> PartialEq for BitvecEntry<T> {
+    fn eq(&self, o: &Self) -> bool {
+        self.prio == o.prio && self.seq == o.seq
+    }
+}
+impl<T> Eq for BitvecEntry<T> {}
+impl<T> PartialOrd for BitvecEntry<T> {
+    fn partial_cmp(&self, o: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(o))
+    }
+}
+impl<T> Ord for BitvecEntry<T> {
+    fn cmp(&self, o: &Self) -> CmpOrdering {
+        // BinaryHeap is a max-heap; invert for min-priority-first, FIFO tie.
+        o.prio
+            .cmp(&self.prio)
+            .then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// Arbitrary-length bit-vector priorities (the default Charm++ build).
+pub struct BitvecPrioQueue<T> {
+    heap: BinaryHeap<BitvecEntry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for BitvecPrioQueue<T> {
+    fn default() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<T: Send> PrioQueue<T> for BitvecPrioQueue<T> {
+    fn push(&mut self, prio_bits: &[u8], v: T) {
+        self.seq += 1;
+        // The allocation + variable-length copy is the point: this is the
+        // cost the eight-byte build removes.
+        self.heap.push(BitvecEntry { prio: prio_bits.to_vec(), seq: self.seq, v });
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        self.heap.pop().map(|e| e.v)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+struct U64Entry<T> {
+    prio: u64,
+    seq: u64,
+    v: T,
+}
+
+impl<T> PartialEq for U64Entry<T> {
+    fn eq(&self, o: &Self) -> bool {
+        self.prio == o.prio && self.seq == o.seq
+    }
+}
+impl<T> Eq for U64Entry<T> {}
+impl<T> PartialOrd for U64Entry<T> {
+    fn partial_cmp(&self, o: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(o))
+    }
+}
+impl<T> Ord for U64Entry<T> {
+    fn cmp(&self, o: &Self) -> CmpOrdering {
+        o.prio.cmp(&self.prio).then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// Fixed eight-byte priorities (the ablation build).
+pub struct EightBytePrioQueue<T> {
+    heap: BinaryHeap<U64Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EightBytePrioQueue<T> {
+    fn default() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+}
+
+impl<T: Send> PrioQueue<T> for EightBytePrioQueue<T> {
+    fn push(&mut self, prio_bits: &[u8], v: T) {
+        let mut b = [0u8; 8];
+        let n = prio_bits.len().min(8);
+        b[..n].copy_from_slice(&prio_bits[..n]);
+        self.seq += 1;
+        self.heap.push(U64Entry { prio: u64::from_be_bytes(b), seq: self.seq, v });
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        self.heap.pop().map(|e| e.v)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(q: &mut dyn PrioQueue<i32>) {
+        q.push(&[2], 20);
+        q.push(&[1], 10);
+        q.push(&[3], 30);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(20));
+        assert_eq!(q.pop(), Some(30));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bitvec_orders_by_priority() {
+        exercise(&mut BitvecPrioQueue::default());
+    }
+
+    #[test]
+    fn eightbyte_orders_by_priority() {
+        exercise(&mut EightBytePrioQueue::default());
+    }
+
+    #[test]
+    fn fifo_within_equal_priority() {
+        let mut q = BitvecPrioQueue::default();
+        for i in 0..10 {
+            q.push(&[5], i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        let mut q = EightBytePrioQueue::default();
+        for i in 0..10 {
+            q.push(&[5], i);
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn bitvec_lexicographic() {
+        let mut q = BitvecPrioQueue::default();
+        q.push(&[1, 2, 3], 123);
+        q.push(&[1, 2], 12);
+        q.push(&[0, 9, 9, 9], 999);
+        assert_eq!(q.pop(), Some(999));
+        assert_eq!(q.pop(), Some(12)); // prefix sorts before extension
+        assert_eq!(q.pop(), Some(123));
+    }
+
+    #[test]
+    fn eightbyte_truncates_long_priorities() {
+        let mut q = EightBytePrioQueue::default();
+        q.push(&[1, 0, 0, 0, 0, 0, 0, 0, 255], 1); // 9 bytes: tail ignored
+        q.push(&[1, 0, 0, 0, 0, 0, 0, 0, 0], 2);
+        // identical after truncation -> FIFO
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+}

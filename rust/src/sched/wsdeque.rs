@@ -1,0 +1,276 @@
+//! Chase–Lev work-stealing deque (Le et al., PPoPP'13 memory orderings).
+//!
+//! The owner pushes/pops at the bottom without contention; thieves steal
+//! from the top with a CAS. This is the core of the HPX-like executor —
+//! `crossbeam-deque` is not in the offline vendor set, so it is
+//! implemented here, with a growable circular buffer.
+
+use std::sync::atomic::{AtomicIsize, AtomicPtr, Ordering};
+use std::sync::Arc;
+
+struct Buffer<T> {
+    cap: usize,
+    mask: usize,
+    slots: Box<[AtomicPtr<T>]>,
+}
+
+impl<T> Buffer<T> {
+    fn new(cap: usize) -> Self {
+        assert!(cap.is_power_of_two());
+        let slots = (0..cap)
+            .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Self { cap, mask: cap - 1, slots }
+    }
+
+    fn put(&self, i: isize, p: *mut T) {
+        self.slots[(i as usize) & self.mask].store(p, Ordering::Relaxed);
+    }
+
+    fn get(&self, i: isize) -> *mut T {
+        self.slots[(i as usize) & self.mask].load(Ordering::Relaxed)
+    }
+}
+
+struct Inner<T> {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: AtomicPtr<Buffer<T>>,
+    /// Retired buffers kept until the deque drops (simple safe reclamation:
+    /// grows only on resize, which is rare and bounded by log2(max_len)).
+    retired: crossbeam_utils::sync::ShardedLock<Vec<*mut Buffer<T>>>,
+}
+
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+/// Owner handle: push/pop at the bottom.
+pub struct Worker<T> {
+    inner: Arc<Inner<T>>,
+}
+
+/// Thief handle: steal from the top. Cloneable across threads.
+pub struct Stealer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Stealer<T> {
+    fn clone(&self) -> Self {
+        Self { inner: self.inner.clone() }
+    }
+}
+
+impl<T: Send> Worker<T> {
+    pub fn new() -> (Worker<T>, Stealer<T>) {
+        let buf = Box::into_raw(Box::new(Buffer::new(64)));
+        let inner = Arc::new(Inner {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(buf),
+            retired: crossbeam_utils::sync::ShardedLock::new(Vec::new()),
+        });
+        (Worker { inner: inner.clone() }, Stealer { inner })
+    }
+
+    pub fn push(&self, value: T) {
+        let inner = &self.inner;
+        let b = inner.bottom.load(Ordering::Relaxed);
+        let t = inner.top.load(Ordering::Acquire);
+        let mut buf = inner.buf.load(Ordering::Relaxed);
+        unsafe {
+            if b - t >= (*buf).cap as isize {
+                buf = self.grow(b, t, buf);
+            }
+            (*buf).put(b, Box::into_raw(Box::new(value)));
+        }
+        std::sync::atomic::fence(Ordering::Release);
+        inner.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Double the buffer, copying live entries. Called only by the owner.
+    unsafe fn grow(&self, b: isize, t: isize, old: *mut Buffer<T>) -> *mut Buffer<T> {
+        let new = Box::into_raw(Box::new(Buffer::new((*old).cap * 2)));
+        let mut i = t;
+        while i < b {
+            (*new).put(i, (*old).get(i));
+            i += 1;
+        }
+        self.inner.buf.store(new, Ordering::Release);
+        self.inner.retired.write().unwrap().push(old);
+        new
+    }
+
+    pub fn pop(&self) -> Option<T> {
+        let inner = &self.inner;
+        let b = inner.bottom.load(Ordering::Relaxed) - 1;
+        let buf = inner.buf.load(Ordering::Relaxed);
+        inner.bottom.store(b, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = inner.top.load(Ordering::Relaxed);
+        if t > b {
+            // empty: restore
+            inner.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let p = unsafe { (*buf).get(b) };
+        if t == b {
+            // last element: race with thieves
+            let won = inner
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            inner.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                return None;
+            }
+        }
+        Some(unsafe { *Box::from_raw(p) })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        let b = self.inner.bottom.load(Ordering::Relaxed);
+        let t = self.inner.top.load(Ordering::Relaxed);
+        b <= t
+    }
+}
+
+impl<T: Send> Stealer<T> {
+    pub fn steal(&self) -> Option<T> {
+        let inner = &self.inner;
+        let t = inner.top.load(Ordering::Acquire);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = inner.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return None;
+        }
+        let buf = inner.buf.load(Ordering::Acquire);
+        let p = unsafe { (*buf).get(t) };
+        if inner
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_err()
+        {
+            return None; // lost the race
+        }
+        Some(unsafe { *Box::from_raw(p) })
+    }
+}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // Drain remaining items.
+        let t = *self.top.get_mut();
+        let b = *self.bottom.get_mut();
+        let buf = *self.buf.get_mut();
+        unsafe {
+            let mut i = t;
+            while i < b {
+                drop(Box::from_raw((*buf).get(i)));
+                i += 1;
+            }
+            drop(Box::from_raw(buf));
+            for old in self.retired.write().unwrap().drain(..) {
+                drop(Box::from_raw(old));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn lifo_for_owner() {
+        let (w, _s) = Worker::new();
+        w.push(1);
+        w.push(2);
+        w.push(3);
+        assert_eq!(w.pop(), Some(3));
+        assert_eq!(w.pop(), Some(2));
+        assert_eq!(w.pop(), Some(1));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn fifo_for_thief() {
+        let (w, s) = Worker::new();
+        w.push(1);
+        w.push(2);
+        assert_eq!(s.steal(), Some(1));
+        assert_eq!(s.steal(), Some(2));
+        assert_eq!(s.steal(), None);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let (w, _s) = Worker::new();
+        for i in 0..1000 {
+            w.push(i);
+        }
+        for i in (0..1000).rev() {
+            assert_eq!(w.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn drop_reclaims_unpopped_items() {
+        let (w, _s) = Worker::new();
+        for i in 0..100 {
+            w.push(Arc::new(i));
+        }
+        drop(w);
+        drop(_s);
+        // miri/asan would flag leaks; structurally we just ensure no panic.
+    }
+
+    #[test]
+    fn concurrent_steal_no_loss_no_dup() {
+        let (w, s) = Worker::<usize>::new();
+        let n = 100_000usize;
+        let seen = Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect::<Vec<_>>());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let s = s.clone();
+            let seen = seen.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                loop {
+                    match s.steal() {
+                        Some(v) => {
+                            seen[v].fetch_add(1, Ordering::Relaxed);
+                            got += 1;
+                        }
+                        None => {
+                            if seen.iter().map(|a| a.load(Ordering::Relaxed)).sum::<usize>() >= n {
+                                break;
+                            }
+                            std::hint::spin_loop();
+                        }
+                    }
+                }
+                got
+            }));
+        }
+        for v in 0..n {
+            w.push(v);
+            if v % 64 == 0 {
+                if let Some(x) = w.pop() {
+                    seen[x].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        // Owner drains what's left.
+        while let Some(x) = w.pop() {
+            seen[x].fetch_add(1, Ordering::Relaxed);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for (i, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "item {i}");
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! Simulated machine topology: `nodes × cores_per_node`.
+
+/// The simulated cluster (paper testbed: 8 Buran nodes × 48 cores).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Machine {
+    pub nodes: usize,
+    pub cores_per_node: usize,
+}
+
+impl Machine {
+    pub fn new(nodes: usize, cores_per_node: usize) -> Self {
+        assert!(nodes > 0 && cores_per_node > 0);
+        Self { nodes, cores_per_node }
+    }
+
+    /// The paper's testbed (Table 1): 48 cores per Buran node.
+    pub fn rostam(nodes: usize) -> Self {
+        Self::new(nodes, 48)
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+
+    pub fn node_of(&self, core: usize) -> usize {
+        core / self.cores_per_node
+    }
+
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology() {
+        let m = Machine::rostam(8);
+        assert_eq!(m.total_cores(), 384);
+        assert_eq!(m.node_of(0), 0);
+        assert_eq!(m.node_of(47), 0);
+        assert_eq!(m.node_of(48), 1);
+        assert!(m.same_node(0, 47));
+        assert!(!m.same_node(47, 48));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rejected() {
+        Machine::new(0, 4);
+    }
+}

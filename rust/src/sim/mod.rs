@@ -1,0 +1,25 @@
+//! Cluster discrete-event simulator.
+//!
+//! The paper's multi-node experiments (Fig 2, Fig 3) ran on 8×48-core
+//! nodes over EDR InfiniBand. This testbed has a single core, so those
+//! experiments are reproduced by simulation: each runtime system's
+//! coordination structure is replayed event-by-event over an
+//! `N nodes × C cores` machine with
+//!
+//! * per-task / per-message CPU overheads **measured from the real
+//!   in-process runtime implementations** ([`params::calibrate`] runs them
+//!   single-threaded, where per-event cost is exact), and
+//! * the Table 1 interconnect model
+//!   ([`crate::comm::NetworkModel`]).
+//!
+//! Absolute numbers are testbed-scaled; the paper's *shapes* (system
+//! ordering, flat-vs-rising node trends, ablation deltas) are what the
+//! simulator reproduces — see EXPERIMENTS.md.
+
+mod des;
+mod machine;
+mod params;
+
+pub use des::{simulate, SimResult};
+pub use machine::Machine;
+pub use params::{calibrate, SimParams};

@@ -1,0 +1,281 @@
+//! Simulation cost parameters, and their calibration from the real
+//! runtime implementations.
+//!
+//! Each constant is the CPU cost of one *event* of the corresponding real
+//! code path (scheduler pop, parcel marshal, barrier phase, …).
+//! `calibrate()` measures them by running the actual runtimes
+//! single-threaded with the Empty kernel — on one core the per-task wall
+//! time *is* the code-path cost, no parallel noise involved.
+
+use std::time::Instant;
+
+use crate::comm::NetworkModel;
+use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use crate::runtimes::{run_with, RunOptions, SystemKind};
+
+/// Per-event CPU costs (ns) + the interconnect model.
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    /// Compute: ns per FMA iteration over one payload (grain unit).
+    pub ns_per_iter: f64,
+    /// Task output size on the wire.
+    pub payload_bytes: usize,
+    /// Marshalling cost (both sides combined), ns per byte.
+    pub marshal_ns_per_byte: f64,
+
+    // MPI-like: almost no runtime — per-task loop cost and per-message
+    // two-sided send+recv CPU cost.
+    pub mpi_task_ns: f64,
+    pub mpi_msg_ns: f64,
+
+    // Charm++-like: per-message scheduler cost (mailbox + priority queue,
+    // the §5.1 knobs change it) and per-invocation dispatch cost.
+    pub charm_msg_default_ns: f64,
+    pub charm_msg_eightbyte_ns: f64,
+    pub charm_msg_simplified_ns: f64,
+    pub charm_task_ns: f64,
+    /// Extra receiver CPU when an intra-node message takes the NIC path
+    /// (default build) instead of SHMEM — the copy in/out of the NIC
+    /// buffers. This is what the Fig 3 SHMEM build removes.
+    pub charm_nic_intranode_cpu_ns: f64,
+
+    // HPX-like local: per-task spawn/schedule cost on the work-stealing
+    // executor, plus the cost of a steal when a task runs away from its
+    // producer.
+    pub hpx_local_task_ns: f64,
+    pub hpx_steal_ns: f64,
+
+    // HPX-like distributed: per-task scheduling on the locality scheduler
+    // and per-parcel serialization + AGAS cost.
+    pub hpx_dist_task_ns: f64,
+    pub hpx_parcel_ns: f64,
+
+    // Overdecomposition scaling: scheduler state (queue depth, chare
+    // tables, future maps, cache footprint) grows with tasks-per-core, so
+    // per-event costs scale by `1 + factor * (tasks_per_core - 1)`. The
+    // factors are fitted to Table 2's measured degradation (see
+    // EXPERIMENTS.md §Calibration).
+    pub mpi_queue_factor: f64,
+    pub charm_queue_factor: f64,
+    pub hpx_dist_queue_factor: f64,
+    pub hpx_local_queue_factor: f64,
+
+    /// Node-count scaling: HPX's parcelport progress and AGAS resolution
+    /// work grows with the number of localities, and the hybrid master's
+    /// MPI progression with the number of ranks — per-task CPU scales by
+    /// `1 + factor * (nodes - 1)` (the paper's "higher and rising
+    /// tendencies" in Fig 2).
+    pub hpx_dist_node_factor: f64,
+    pub hybrid_node_factor: f64,
+
+    // OpenMP-like: fork-join barrier cost, affine in team size.
+    pub omp_barrier_base_ns: f64,
+    pub omp_barrier_per_core_ns: f64,
+    pub omp_task_ns: f64,
+
+    // Hybrid: master-serial funnel cost per owned point per step (linear
+    // + quadratic term — the master's per-message matching scan walks
+    // state that grows with the owned-point count), dynamic chunk-1
+    // scheduling cost per task, per-message cost.
+    pub hybrid_funnel_per_task_ns: f64,
+    pub hybrid_funnel_quad_ns: f64,
+    pub hybrid_dynamic_ns: f64,
+    pub hybrid_msg_ns: f64,
+
+    pub network: NetworkModel,
+}
+
+impl Default for SimParams {
+    /// Plausible defaults shaped by single-core calibration of the real
+    /// implementations in this repo (see EXPERIMENTS.md §Calibration for
+    /// the measured values on the build machine; use [`calibrate`] to
+    /// re-measure).
+    fn default() -> Self {
+        Self {
+            ns_per_iter: 12.0, // 16-elem f32 FMA round, one core
+            payload_bytes: 64,
+            marshal_ns_per_byte: 0.25,
+            // Fitted so METG(50%) on the simulated 48-core node lands on
+            // Table 2's column 1 (see EXPERIMENTS.md): per-task overhead
+            // o gives METG ~= 2o for the stencil.
+            mpi_task_ns: 400.0,
+            mpi_msg_ns: 700.0,
+            charm_task_ns: 600.0,
+            charm_msg_default_ns: 1000.0,
+            charm_msg_eightbyte_ns: 980.0,
+            charm_msg_simplified_ns: 930.0,
+            charm_nic_intranode_cpu_ns: 1000.0,
+            hpx_local_task_ns: 11_000.0,
+            hpx_steal_ns: 600.0,
+            hpx_dist_task_ns: 9_500.0,
+            hpx_parcel_ns: 900.0,
+            mpi_queue_factor: 0.35,
+            charm_queue_factor: 0.45,
+            hpx_dist_queue_factor: 0.147,
+            hpx_local_queue_factor: 0.204,
+            hpx_dist_node_factor: 0.06,
+            hybrid_node_factor: 0.08,
+            omp_barrier_base_ns: 12_000.0,
+            omp_barrier_per_core_ns: 125.0,
+            omp_task_ns: 60.0,
+            hybrid_funnel_per_task_ns: 100.0,
+            hybrid_funnel_quad_ns: 3.0,
+            hybrid_dynamic_ns: 150.0,
+            hybrid_msg_ns: 500.0,
+            network: NetworkModel::default(),
+        }
+    }
+}
+
+impl SimParams {
+    /// Charm++ per-message cost under the given build options.
+    pub fn charm_msg_ns(&self, opts: &crate::runtimes::CharmOptions) -> f64 {
+        if opts.simplified_sched {
+            self.charm_msg_simplified_ns
+        } else if opts.eight_byte_prio {
+            self.charm_msg_eightbyte_ns
+        } else {
+            self.charm_msg_default_ns
+        }
+    }
+}
+
+/// Measured per-task cost of one system, single-threaded, empty kernel.
+fn per_task_overhead_ns(system: SystemKind, width: usize, steps: usize) -> f64 {
+    let graph = TaskGraph::new(GraphConfig {
+        width,
+        steps,
+        dependence: DependencePattern::Stencil1D,
+        kernel: KernelConfig::empty(),
+        ..GraphConfig::default()
+    });
+    let opts = RunOptions::new(1);
+    // Warm-up + best-of-3 (single core: min is the clean signal).
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let r = run_with(system, &graph, &opts).expect("calibration run failed");
+        best = best.min(r.elapsed.as_secs_f64());
+    }
+    best * 1e9 / graph.num_points() as f64
+}
+
+/// Calibrate [`SimParams`] from the real implementations on this machine.
+///
+/// Single-threaded empty-kernel runs expose each system's per-task
+/// code-path cost; the FMA unit cost comes from the peak calibration.
+pub fn calibrate(payload_elems: usize) -> SimParams {
+    let mut p = SimParams { payload_bytes: payload_elems * 4, ..Default::default() };
+
+    // Compute unit: time the FMA loop directly.
+    let mut buf = vec![1.0f32; payload_elems];
+    let iters = 1u64 << 22;
+    let t0 = Instant::now();
+    crate::core::fma_loop(&mut buf, iters);
+    std::hint::black_box(&buf);
+    p.ns_per_iter = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+
+    // Width/steps sized so each run is ~tens of ms.
+    let (w, s) = (16, 400);
+    p.mpi_task_ns = per_task_overhead_ns(SystemKind::MpiLike, w, s);
+    p.omp_task_ns = per_task_overhead_ns(SystemKind::OpenMpLike, w, s);
+    p.hpx_local_task_ns = per_task_overhead_ns(SystemKind::HpxLocal, w, s);
+    p.hpx_dist_task_ns = per_task_overhead_ns(SystemKind::HpxDistributed, w, s);
+    let hybrid = per_task_overhead_ns(SystemKind::Hybrid, w, s);
+    p.hybrid_funnel_per_task_ns = hybrid * 0.5;
+    p.hybrid_dynamic_ns = hybrid * 0.2;
+    p.hybrid_msg_ns = hybrid * 0.3;
+
+    // Queue-depth degradation factors: compare per-task cost at 1 vs 8
+    // tasks-per-worker on the real implementations.
+    for (sys, slot) in [
+        (SystemKind::MpiLike, 0usize),
+        (SystemKind::HpxDistributed, 1),
+        (SystemKind::HpxLocal, 2),
+    ] {
+        let o1 = per_task_overhead_ns(sys, 1, s);
+        let o8 = per_task_overhead_ns(sys, 8, s);
+        let factor = ((o8 / o1 - 1.0) / 7.0).max(0.0);
+        match slot {
+            0 => p.mpi_queue_factor = factor,
+            1 => p.hpx_dist_queue_factor = factor,
+            _ => p.hpx_local_queue_factor = factor,
+        }
+    }
+
+    // Charm: measure each build flavour; per-task share split between the
+    // message path (3 msgs/task for stencil) and the dispatch.
+    for (name, copts) in crate::runtimes::CharmOptions::fig3_builds() {
+        let graph = TaskGraph::new(GraphConfig {
+            width: w,
+            steps: s,
+            dependence: DependencePattern::Stencil1D,
+            kernel: KernelConfig::empty(),
+            ..GraphConfig::default()
+        });
+        let mut opts = RunOptions::new(1);
+        opts.charm = copts;
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let r = run_with(SystemKind::CharmLike, &graph, &opts)
+                .expect("charm calibration failed");
+            best = best.min(r.elapsed.as_secs_f64());
+        }
+        let per_task = best * 1e9 / graph.num_points() as f64;
+        let per_msg = (per_task - p.charm_task_ns).max(50.0) / 3.0;
+        match name {
+            "Default" => p.charm_msg_default_ns = per_msg,
+            "Char. Priority" => p.charm_msg_eightbyte_ns = per_msg,
+            "Simple Sched." => p.charm_msg_simplified_ns = per_msg,
+            _ => {}
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_order_systems_like_the_paper() {
+        let p = SimParams::default();
+        // Per-task overheads for the stencil (3 inputs), Table 2 col 1:
+        // MPI < Charm++ < HPX dist < HPX local.
+        let mpi = p.mpi_task_ns + 2.0 * p.mpi_msg_ns;
+        let charm = p.charm_task_ns + 3.0 * p.charm_msg_default_ns;
+        assert!(mpi < charm);
+        assert!(charm < p.hpx_dist_task_ns);
+        assert!(p.hpx_dist_task_ns < p.hpx_local_task_ns);
+        // Ablation: simplified < eight-byte < default message path.
+        assert!(p.charm_msg_simplified_ns < p.charm_msg_eightbyte_ns);
+        assert!(p.charm_msg_eightbyte_ns < p.charm_msg_default_ns);
+        // Charm degrades fastest under overdecomposition (Table 2 row 1).
+        // (MPI's raw factor is not comparable: its messaging amortizes
+        // under overdecomposition, so its factor compensates for that.)
+        assert!(p.charm_queue_factor > p.hpx_local_queue_factor);
+        assert!(p.hpx_local_queue_factor > p.hpx_dist_queue_factor);
+    }
+
+    #[test]
+    fn charm_msg_ns_selects_by_options() {
+        use crate::comm::IntranodeTransport;
+        let p = SimParams::default();
+        let mut o = crate::runtimes::CharmOptions::default();
+        assert_eq!(p.charm_msg_ns(&o), p.charm_msg_default_ns);
+        o.eight_byte_prio = true;
+        assert_eq!(p.charm_msg_ns(&o), p.charm_msg_eightbyte_ns);
+        o.simplified_sched = true;
+        assert_eq!(p.charm_msg_ns(&o), p.charm_msg_simplified_ns);
+        o.intranode = IntranodeTransport::Shmem; // transport doesn't alter CPU cost
+        assert_eq!(p.charm_msg_ns(&o), p.charm_msg_simplified_ns);
+    }
+
+    #[test]
+    #[ignore = "slow: runs every real runtime; exercised by `repro calibrate`"]
+    fn calibration_produces_positive_costs() {
+        let p = calibrate(16);
+        assert!(p.ns_per_iter > 0.0);
+        assert!(p.mpi_task_ns > 0.0);
+        assert!(p.hpx_local_task_ns > 0.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree utilities replacing crates unavailable in the offline vendor
+//! set: a PRNG (no `rand`), a property-testing helper (no `proptest`), and
+//! a tiny arg parser (no `clap`) lives in `main.rs`'s `cli` module.
+
+mod prng;
+pub mod propcheck;
+
+pub use prng::Prng;

@@ -1,0 +1,70 @@
+//! Minimal property-based testing helper (no `proptest` offline).
+//!
+//! `check(cases, gen, prop)` runs `prop` over `cases` randomly generated
+//! inputs from a fixed-seed [`Prng`]; on failure it reports the failing
+//! case and the seed index so the case is reproducible. Deliberately tiny:
+//! no shrinking, but deterministic replay by construction.
+
+use super::Prng;
+
+/// Run `prop` on `cases` generated inputs; panic with context on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cases {
+        // Seed per-case so a failure names a single self-contained case.
+        let mut rng = Prng::seed_from_u64(0xC0FFEE ^ (i as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {i}/{cases}: {msg}\n\
+                 input: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            50,
+            |rng| (rng.gen_range(100), rng.gen_range(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_name() {
+        check("always-fails", 3, |rng| rng.gen_range(10), |_| Err("no".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen_a = Vec::new();
+        check("collect-a", 5, |rng| rng.next_u64(), |&v| {
+            seen_a.push(v);
+            Ok(())
+        });
+        let mut seen_b = Vec::new();
+        check("collect-b", 5, |rng| rng.next_u64(), |&v| {
+            seen_b.push(v);
+            Ok(())
+        });
+        assert_eq!(seen_a, seen_b);
+    }
+}

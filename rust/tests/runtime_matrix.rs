@@ -1,0 +1,165 @@
+//! Integration matrix: every runtime × every dependence pattern, full
+//! trace validation, cross-runtime numerical agreement, and randomized
+//! property sweeps (in-tree propcheck — no proptest offline).
+
+use taskbench_amt::core::{
+    checksum_final, oracle_outputs, validate_execution, DependencePattern,
+    GraphConfig, KernelConfig, TaskGraph,
+};
+use taskbench_amt::runtimes::{run_with, RunOptions, SystemKind};
+use taskbench_amt::util::propcheck;
+
+fn graph(dep: DependencePattern, width: usize, steps: usize, seed: u64) -> TaskGraph {
+    TaskGraph::new(GraphConfig {
+        width,
+        steps,
+        dependence: dep,
+        kernel: KernelConfig::compute_bound(8),
+        seed,
+        ..GraphConfig::default()
+    })
+}
+
+#[test]
+fn every_system_validates_on_every_pattern() {
+    for system in SystemKind::all() {
+        for dep in DependencePattern::all() {
+            let g = graph(dep, 8, 6, 1);
+            let opts = RunOptions::new(3).with_validate(true);
+            let report = run_with(system, &g, &opts)
+                .unwrap_or_else(|e| panic!("{system:?} {dep:?}: {e:#}"));
+            validate_execution(&g, report.records.as_ref().unwrap())
+                .unwrap_or_else(|e| panic!("{system:?} {dep:?}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn all_systems_agree_with_oracle_checksum() {
+    let g = graph(DependencePattern::Stencil1DPeriodic, 6, 8, 2);
+    let oracle = oracle_outputs(&g).final_checksum(&g);
+    for system in SystemKind::all() {
+        let report = run_with(system, &g, &RunOptions::new(3)).unwrap();
+        assert_eq!(
+            report.checksum, oracle,
+            "{system:?} diverged from the oracle"
+        );
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let g = graph(DependencePattern::Fft, 8, 6, 3);
+    let oracle = oracle_outputs(&g).final_checksum(&g);
+    for system in SystemKind::all() {
+        for workers in [1usize, 2, 5, 8, 12] {
+            let report = run_with(system, &g, &RunOptions::new(workers)).unwrap();
+            assert_eq!(
+                report.checksum, oracle,
+                "{system:?} with {workers} workers diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_random_graphs_validate_everywhere() {
+    propcheck::check(
+        "random graph validates on every runtime",
+        12,
+        |rng| {
+            let deps = DependencePattern::all();
+            let dep = deps[rng.gen_range(deps.len())];
+            let width = 2 + rng.gen_range(8);
+            let steps = 2 + rng.gen_range(6);
+            let workers = 1 + rng.gen_range(4);
+            let seed = rng.next_u64();
+            (dep, width, steps, workers, seed)
+        },
+        |&(dep, width, steps, workers, seed)| {
+            let g = graph(dep, width, steps, seed);
+            for system in SystemKind::all() {
+                let opts = RunOptions::new(workers).with_validate(true);
+                let report = run_with(system, &g, &opts)
+                    .map_err(|e| format!("{system:?}: {e:#}"))?;
+                validate_execution(&g, report.records.as_ref().unwrap())
+                    .map_err(|e| format!("{system:?}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_checksum_is_runtime_invariant() {
+    propcheck::check(
+        "checksum identical across runtimes",
+        8,
+        |rng| {
+            let deps = DependencePattern::all();
+            (
+                deps[rng.gen_range(deps.len())],
+                2 + rng.gen_range(6),
+                2 + rng.gen_range(5),
+                rng.next_u64(),
+            )
+        },
+        |&(dep, width, steps, seed)| {
+            let g = graph(dep, width, steps, seed);
+            let mut checksums = Vec::new();
+            for system in SystemKind::all() {
+                let r = run_with(system, &g, &RunOptions::new(2))
+                    .map_err(|e| format!("{system:?}: {e:#}"))?;
+                checksums.push((system, r.checksum));
+            }
+            let first = checksums[0].1;
+            for (sys, c) in &checksums {
+                if *c != first {
+                    return Err(format!("{sys:?} checksum {c} != {first}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_kernel_and_degenerate_widths() {
+    // Empty kernel (pure overhead measurement path).
+    let g = TaskGraph::new(GraphConfig {
+        width: 16,
+        steps: 4,
+        dependence: DependencePattern::Stencil1D,
+        kernel: KernelConfig::empty(),
+        ..GraphConfig::default()
+    });
+    for system in SystemKind::all() {
+        let opts = RunOptions::new(4).with_validate(true);
+        let report = run_with(system, &g, &opts).unwrap();
+        validate_execution(&g, report.records.as_ref().unwrap())
+            .unwrap_or_else(|e| panic!("{system:?}: {e}"));
+    }
+    // Width 1 (degenerate row).
+    let g1 = graph(DependencePattern::Stencil1D, 1, 5, 0);
+    for system in SystemKind::all() {
+        let r = run_with(system, &g1, &RunOptions::new(4)).unwrap();
+        assert_eq!(r.tasks, 5, "{system:?}");
+    }
+}
+
+#[test]
+fn checksum_final_is_order_independent() {
+    let g = graph(DependencePattern::NoComm, 5, 3, 0);
+    let oracle = oracle_outputs(&g);
+    let mut finals: Vec<_> = (0..5)
+        .map(|x| {
+            oracle
+                .output(taskbench_amt::core::PointCoord::new(x, 2))
+                .clone()
+        })
+        .collect();
+    let a = checksum_final(&g, finals.clone().into_iter());
+    finals.reverse();
+    let b = checksum_final(&g, finals.into_iter());
+    assert_eq!(a, b);
+}

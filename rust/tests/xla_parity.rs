@@ -1,0 +1,174 @@
+//! Cross-layer numerical parity: the PJRT-executed AOT artifacts (L1/L2)
+//! against the Rust native kernel (L3 fast path) and the task-graph
+//! oracle.
+//!
+//! Requires `make artifacts` (the Makefile `test` target runs it first).
+//! If artifacts are absent the tests are skipped with a notice rather
+//! than failing, so `cargo test` works in a fresh checkout too.
+
+use taskbench_amt::core::{
+    execute_point, mix_deps, oracle_outputs, DependencePattern, GraphConfig,
+    Kernel, KernelConfig, PointCoord, TaskGraph, TILE_ELEMS,
+};
+use taskbench_amt::runtime::{XlaTaskRuntime, K_MAX};
+
+fn runtime() -> Option<XlaTaskRuntime> {
+    let dir = XlaTaskRuntime::default_dir();
+    match XlaTaskRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP xla_parity: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn tile(seed: u64) -> Vec<f32> {
+    let mut rng = taskbench_amt::util::Prng::seed_from_u64(seed);
+    (0..TILE_ELEMS).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect()
+}
+
+/// Tolerance for FMA-contraction divergence (one ulp per iteration).
+fn tol(iters: i32) -> f32 {
+    1e-5 + 2.5e-7 * iters as f32
+}
+
+fn assert_close(a: &[f32], b: &[f32], iters: i32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let rel = (x - y).abs() / y.abs().max(1e-3);
+        assert!(
+            rel <= tol(iters),
+            "{what}: elem {i}: {x} vs {y} (rel {rel:.2e}, tol {:.2e})",
+            tol(iters)
+        );
+    }
+}
+
+#[test]
+fn compute_kernel_matches_native_fma() {
+    let Some(rt) = runtime() else { return };
+    for iters in [0i32, 1, 7, 100, 1000] {
+        let x = tile(iters as u64 + 1);
+        let got = rt.compute_kernel(&x, iters).unwrap();
+        let mut want = x.clone();
+        taskbench_amt::core::fma_loop(&mut want, iters as u64);
+        assert_close(&got, &want, iters, &format!("iters={iters}"));
+    }
+}
+
+#[test]
+fn task_body_matches_native_execute_point_all_dep_counts() {
+    let Some(rt) = runtime() else { return };
+    let iters = 25i32;
+    for ndeps in 0..=K_MAX {
+        let deps: Vec<Vec<f32>> = (0..ndeps).map(|k| tile(100 + k as u64)).collect();
+        let dep_refs: Vec<&[f32]> = deps.iter().map(|d| &d[..]).collect();
+        let coord = (3u32, 5u32);
+        let got = rt.task_body(&dep_refs, coord, iters).unwrap();
+
+        let mut scratch = Vec::new();
+        let want = execute_point(
+            PointCoord::new(coord.0 as usize, coord.1 as usize),
+            &dep_refs,
+            &Kernel::ComputeBound { iterations: iters as u64 },
+            TILE_ELEMS,
+            &mut scratch,
+        );
+        assert_close(&got, &want, iters, &format!("ndeps={ndeps}"));
+    }
+}
+
+#[test]
+fn task_body_mixing_rule_matches_l3() {
+    // Zero-iteration task body isolates the dependency-mixing rule.
+    let Some(rt) = runtime() else { return };
+    let deps = [tile(1), tile(2), tile(3)];
+    let dep_refs: Vec<&[f32]> = deps.iter().map(|d| &d[..]).collect();
+    let got = rt.task_body(&dep_refs, (7, 9), 0).unwrap();
+    let want = mix_deps(&dep_refs, PointCoord::new(7, 9), TILE_ELEMS);
+    assert_close(&got, &want, 0, "mixing");
+}
+
+#[test]
+fn memory_kernel_runs_and_preserves_shape() {
+    let Some(rt) = runtime() else { return };
+    let x: Vec<f32> = (0..64 * 128).map(|i| (i % 97) as f32 * 0.01).collect();
+    let out = rt.memory_kernel(&x, 64).unwrap();
+    assert_eq!(out.len(), 64 * 128);
+    // 64 rotations over 64 sublanes = identity permutation × scale^64.
+    let scale = 1.000_000_1f64.powi(64);
+    for (i, (a, b)) in out.iter().zip(x.iter()).enumerate() {
+        let want = *b as f64 * scale;
+        assert!(
+            (*a as f64 - want).abs() <= want.abs() * 1e-4 + 1e-4,
+            "elem {i}: {a} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn whole_graph_through_xla_matches_oracle() {
+    // The full e2e composition: run a small stencil graph where every
+    // task body executes through PJRT, and compare against the pure-Rust
+    // sequential oracle.
+    let Some(rt) = runtime() else { return };
+    let iters = 10u64;
+    let graph = TaskGraph::new(GraphConfig {
+        width: 4,
+        steps: 5,
+        dependence: DependencePattern::Stencil1D,
+        kernel: KernelConfig {
+            kernel: Kernel::ComputeBound { iterations: iters },
+            payload_elems: TILE_ELEMS,
+        },
+        ..GraphConfig::default()
+    });
+    let oracle = oracle_outputs(&graph);
+
+    // Sequential XLA-driven execution.
+    let mut outputs: Vec<Vec<f32>> = Vec::new();
+    for t in 0..graph.steps() {
+        for x in 0..graph.width() {
+            let deps: Vec<&[f32]> = graph
+                .dependencies(x, t)
+                .iter()
+                .map(|&d| {
+                    &outputs[PointCoord::new(d as usize, t - 1).index(graph.width())][..]
+                })
+                .collect();
+            let out = rt
+                .task_body(&deps, (x as u32, t as u32), iters as i32)
+                .unwrap();
+            outputs.push(out);
+        }
+    }
+    let total_iters = (iters * graph.steps() as u64) as i32;
+    for t in 0..graph.steps() {
+        for x in 0..graph.width() {
+            let c = PointCoord::new(x, t);
+            assert_close(
+                &outputs[c.index(graph.width())],
+                oracle.output(c),
+                total_iters,
+                &format!("point ({x},{t})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn rejects_oversized_dep_lists() {
+    let Some(rt) = runtime() else { return };
+    let deps: Vec<Vec<f32>> = (0..K_MAX + 1).map(|k| tile(k as u64)).collect();
+    let dep_refs: Vec<&[f32]> = deps.iter().map(|d| &d[..]).collect();
+    assert!(rt.task_body(&dep_refs, (0, 0), 1).is_err());
+}
+
+#[test]
+fn rejects_wrong_tile_shape() {
+    let Some(rt) = runtime() else { return };
+    let short = vec![1.0f32; 10];
+    assert!(rt.compute_kernel(&short, 1).is_err());
+    assert!(rt.task_body(&[&short], (0, 0), 1).is_err());
+}
