@@ -3,6 +3,9 @@
 //! in-process runtimes).
 //!
 //! `cargo bench --bench fig1_grain_sweep`
+//!
+//! Runs through the experiment engine (one content-hashed job per cell);
+//! for cached/sharded campaigns use `repro jobs run --campaign fig1`.
 
 use taskbench_amt::experiments::{fig1, fig1_table};
 use taskbench_amt::runtimes::SystemKind;

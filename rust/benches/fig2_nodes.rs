@@ -2,6 +2,9 @@
 //! overdecomposition 8 and 16 (simulated Rostam cluster, EDR IB model).
 //!
 //! `cargo bench --bench fig2_nodes`
+//!
+//! Runs through the experiment engine (one content-hashed job per cell);
+//! for cached/sharded campaigns use `repro jobs run --campaign fig2`.
 
 use taskbench_amt::experiments::fig2;
 use taskbench_amt::runtimes::SystemKind;

@@ -2,6 +2,9 @@
 //! without/with overdecomposition (1, 8, 16 tasks per core), 1 node.
 //!
 //! `cargo bench --bench table2_metg`
+//!
+//! Runs through the experiment engine (one content-hashed job per cell);
+//! for cached/sharded campaigns use `repro jobs run --campaign table2`.
 
 use taskbench_amt::experiments::table2;
 use taskbench_amt::runtimes::SystemKind;

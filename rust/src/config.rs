@@ -32,6 +32,12 @@ pub struct ExperimentConfig {
     /// recorded defaults.
     pub calibrate: bool,
     pub output_csv: Option<String>,
+    /// Engine result-store directory (`repro jobs run`).
+    pub results_dir: String,
+    /// Engine shard spec `k/N` (None = the whole job list).
+    pub shard: Option<String>,
+    /// Engine worker threads for sim jobs (0 = one per core).
+    pub threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -51,6 +57,9 @@ impl Default for ExperimentConfig {
             simulate: false,
             calibrate: false,
             output_csv: None,
+            results_dir: "results".to_string(),
+            shard: None,
+            threads: 0,
         }
     }
 }
@@ -138,6 +147,13 @@ impl ExperimentConfig {
                 "simulate" => self.simulate = v.parse().context("simulate")?,
                 "calibrate" => self.calibrate = v.parse().context("calibrate")?,
                 "output_csv" => self.output_csv = Some(v.clone()),
+                "results_dir" => self.results_dir = v.clone(),
+                "shard" => {
+                    // Validate eagerly so a bad config fails at load time.
+                    crate::coordinator::Shard::parse(v).context("shard")?;
+                    self.shard = Some(v.clone());
+                }
+                "threads" => self.threads = v.parse().context("threads")?,
                 other => bail!("unknown config key `{other}`"),
             }
         }
@@ -178,6 +194,23 @@ mod tests {
         assert_eq!(cfg.grains, vec![16, 256, 4096]);
         assert_eq!(cfg.systems, vec![SystemKind::MpiLike, SystemKind::CharmLike]);
         assert!(cfg.simulate);
+    }
+
+    #[test]
+    fn engine_keys_parse_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        let mut m = HashMap::new();
+        m.insert("results_dir".to_string(), "out/res".to_string());
+        m.insert("shard".to_string(), "2/4".to_string());
+        m.insert("threads".to_string(), "3".to_string());
+        cfg.apply(&m).unwrap();
+        assert_eq!(cfg.results_dir, "out/res");
+        assert_eq!(cfg.shard.as_deref(), Some("2/4"));
+        assert_eq!(cfg.threads, 3);
+
+        let mut bad = HashMap::new();
+        bad.insert("shard".to_string(), "5/2".to_string());
+        assert!(ExperimentConfig::default().apply(&bad).is_err());
     }
 
     #[test]

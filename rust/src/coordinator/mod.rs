@@ -1,1 +1,232 @@
-// paper's L3 coordination contribution
+//! The engine's job coordinator — the paper's L3 coordination layer,
+//! generalized from "run one graph" to "run a campaign".
+//!
+//! Responsibilities:
+//!
+//! * **Sharding** — [`Shard`] splits a job list across repeated
+//!   invocations (`--shard k/N`): round-robin by position, so any prefix
+//!   of a campaign spreads evenly and the N shards form a disjoint cover.
+//! * **Caching** — jobs whose content hash already has a record in the
+//!   [`ResultStore`] are skipped outright (zero graph executions); an
+//!   interrupted campaign resumes from its last persisted cell.
+//! * **Scheduling** — simulator-backed and validation-only jobs are safe
+//!   to overlap and run concurrently on a scoped thread pool;
+//!   wall-clock-sensitive native jobs run afterwards, serially, with the
+//!   whole machine to themselves so the timing they report is clean.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+use crate::engine::exec::execute_job;
+use crate::engine::job::{job_fingerprint_with, params_fingerprint, Job, JobResult};
+use crate::engine::store::ResultStore;
+use crate::sim::SimParams;
+
+/// One of `count` disjoint, covering slices of a job list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// 1-based shard index.
+    pub index: usize,
+    pub count: usize,
+}
+
+impl Shard {
+    /// The whole job list.
+    pub fn full() -> Shard {
+        Shard { index: 1, count: 1 }
+    }
+
+    /// Parse `k/N` (1-based, `1 <= k <= N`).
+    pub fn parse(s: &str) -> anyhow::Result<Shard> {
+        let (k, n) = s
+            .split_once('/')
+            .with_context(|| format!("shard `{s}` is not of the form k/N"))?;
+        let index: usize = k.trim().parse().context("shard index")?;
+        let count: usize = n.trim().parse().context("shard count")?;
+        anyhow::ensure!(
+            count >= 1 && index >= 1 && index <= count,
+            "shard `{s}` out of range (want 1 <= k <= N)"
+        );
+        Ok(Shard { index, count })
+    }
+
+    /// Does this shard own position `i` of the job list?
+    pub fn owns(&self, i: usize) -> bool {
+        i % self.count == self.index - 1
+    }
+
+    /// The positions of `jobs` this shard owns, in order.
+    pub fn select<'a>(&self, jobs: &'a [Job]) -> Vec<&'a Job> {
+        jobs.iter()
+            .enumerate()
+            .filter(|(i, _)| self.owns(*i))
+            .map(|(_, j)| j)
+            .collect()
+    }
+}
+
+impl std::fmt::Display for Shard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+/// What a [`run_jobs`] invocation did.
+#[derive(Debug)]
+pub struct RunSummary {
+    /// Jobs actually executed this invocation.
+    pub executed: usize,
+    /// Jobs satisfied from the store without touching a task graph.
+    pub cached: usize,
+    /// Every owned job's result, in job-list order (cached + executed).
+    pub results: Vec<(Job, JobResult)>,
+}
+
+/// Run this shard's slice of `jobs`: consult the store, execute the
+/// misses (sim jobs on `threads` workers, native jobs serially with the
+/// machine reserved), persist, and return everything in order.
+///
+/// `threads == 0` means one worker per available core.
+pub fn run_jobs(
+    jobs: &[Job],
+    store: Option<&ResultStore>,
+    shard: Shard,
+    threads: usize,
+    params: &SimParams,
+) -> crate::Result<RunSummary> {
+    let sim_fp = params_fingerprint(params);
+    let job_fp = |job: &Job| job_fingerprint_with(job, sim_fp);
+    let mine = shard.select(jobs);
+    let mut slots: Vec<Option<JobResult>> = vec![None; mine.len()];
+    let (mut todo_sim, mut todo_native) = (Vec::new(), Vec::new());
+    for (i, job) in mine.iter().enumerate() {
+        // A record counts as a hit only if it was computed under the
+        // params its mode depends on; anything else re-runs + overwrites.
+        if let Some(r) = store.and_then(|s| s.load_if(job, job_fp(job))) {
+            slots[i] = Some(r);
+        } else if job.spec.mode.is_concurrent_safe() {
+            todo_sim.push(i);
+        } else {
+            todo_native.push(i);
+        }
+    }
+    let executed = todo_sim.len() + todo_native.len();
+    let cached = mine.len() - executed;
+
+    // Execute one cell and persist it immediately, so an interrupted or
+    // partially-failed campaign keeps every completed record on disk.
+    let run_one = |i: usize| -> crate::Result<JobResult> {
+        let r = execute_job(mine[i], params)?;
+        if let Some(s) = store {
+            s.save(mine[i], &r, job_fp(mine[i]))?;
+        }
+        Ok(r)
+    };
+
+    // Simulator-backed jobs: deterministic pure functions, run them wide.
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads =
+        (if threads == 0 { auto } else { threads }).min(todo_sim.len().max(1));
+    if threads <= 1 {
+        for &i in &todo_sim {
+            slots[i] = Some(run_one(i)?);
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, crate::Result<JobResult>)>> =
+            Mutex::new(Vec::with_capacity(todo_sim.len()));
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&i) = todo_sim.get(k) else { break };
+                    let r = run_one(i);
+                    done.lock().unwrap().push((i, r));
+                });
+            }
+        });
+        for (i, r) in done.into_inner().unwrap() {
+            slots[i] = Some(r?);
+        }
+    }
+
+    // Native jobs: exclusive, serial — their wall times are the data.
+    for &i in &todo_native {
+        slots[i] = Some(run_one(i)?);
+    }
+
+    // Assemble the ordered summary (everything already persisted above).
+    let mut results = Vec::with_capacity(mine.len());
+    for (i, job) in mine.iter().enumerate() {
+        let r = slots[i].take().expect("every owned job has a result");
+        results.push(((*job).clone(), r));
+    }
+    Ok(RunSummary { executed, cached, results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DependencePattern;
+    use crate::engine::job::{ExecMode, JobSpec};
+    use crate::runtimes::SystemKind;
+
+    fn sim_jobs(n: usize) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                Job::new(JobSpec {
+                    system: SystemKind::MpiLike,
+                    pattern: DependencePattern::Stencil1D,
+                    nodes: 1,
+                    cores_per_node: 4,
+                    tasks_per_core: 1,
+                    steps: 6,
+                    grain: 1 << (4 + i as u32),
+                    mode: ExecMode::Sim,
+                    reps: 1,
+                    warmup: 0,
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_parse_accepts_and_rejects() {
+        assert_eq!(Shard::parse("1/1").unwrap(), Shard::full());
+        assert_eq!(Shard::parse("2/3").unwrap(), Shard { index: 2, count: 3 });
+        for bad in ["0/2", "3/2", "x/2", "2", "2/", "/2", "1/0"] {
+            assert!(Shard::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_job_list() {
+        let jobs = sim_jobs(7);
+        let a = Shard { index: 1, count: 2 }.select(&jobs);
+        let b = Shard { index: 2, count: 2 }.select(&jobs);
+        assert_eq!(a.len() + b.len(), jobs.len());
+        let mut ids: Vec<String> =
+            a.iter().chain(b.iter()).map(|j| j.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), jobs.len(), "overlap between shards");
+    }
+
+    #[test]
+    fn concurrent_and_serial_runs_agree() {
+        let jobs = sim_jobs(5);
+        let p = SimParams::default();
+        let serial = run_jobs(&jobs, None, Shard::full(), 1, &p).unwrap();
+        let wide = run_jobs(&jobs, None, Shard::full(), 4, &p).unwrap();
+        assert_eq!(serial.executed, 5);
+        assert_eq!(wide.executed, 5);
+        for ((ja, ra), (jb, rb)) in
+            serial.results.iter().zip(wide.results.iter())
+        {
+            assert_eq!(ja, jb);
+            assert_eq!(ra, rb);
+        }
+    }
+}

@@ -1,0 +1,524 @@
+//! Campaigns: the paper's artifacts expressed as job sets.
+//!
+//! A campaign enumerates every benchmark cell of one artifact (Fig 1
+//! grain sweep, Table 2 METG × overdecomposition, Fig 2 node scaling, the
+//! beyond-the-paper pattern ablation) as [`Job`]s, and renders tables /
+//! gnuplot data from whatever subset of results a store holds. Rendering
+//! never executes anything — `jobs table` after a partial `jobs run`
+//! shows `?` for the missing cells instead of recomputing them.
+
+use std::collections::HashMap;
+
+use crate::core::DependencePattern;
+use crate::harness::report::Table;
+use crate::metg::{metg_from_curve, GrainRun};
+use crate::runtimes::SystemKind;
+
+use super::job::{ExecMode, Job, JobResult, JobSpec};
+
+/// Which paper artifact a campaign regenerates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CampaignKind {
+    /// Fig 1a/1b: FLOP/s + efficiency vs grain, 1 node, 1 task/core.
+    Fig1,
+    /// Table 2: METG per system × tasks-per-core, 1 node.
+    Table2,
+    /// Fig 2: METG per system × node count, fixed overdecomposition.
+    Fig2,
+    /// §6.3 outlook: METG per system × dependence pattern, 1 node.
+    Patterns,
+}
+
+impl CampaignKind {
+    pub fn all() -> Vec<CampaignKind> {
+        use CampaignKind::*;
+        vec![Fig1, Table2, Fig2, Patterns]
+    }
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            CampaignKind::Fig1 => "fig1",
+            CampaignKind::Table2 => "table2",
+            CampaignKind::Fig2 => "fig2",
+            CampaignKind::Patterns => "patterns",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CampaignKind> {
+        CampaignKind::all().into_iter().find(|k| k.id() == s)
+    }
+
+    /// Steps the paper-matching drivers use for this artifact.
+    pub fn default_steps(&self) -> usize {
+        match self {
+            CampaignKind::Fig1 | CampaignKind::Table2 => 100,
+            CampaignKind::Fig2 => 50,
+            CampaignKind::Patterns => 60,
+        }
+    }
+}
+
+/// A fully-parameterized campaign over one artifact.
+#[derive(Debug, Clone)]
+pub struct Campaign {
+    pub kind: CampaignKind,
+    pub systems: Vec<SystemKind>,
+    /// Simulated cores per node (Table 1's machine: 48).
+    pub cores_per_node: usize,
+    pub steps: usize,
+    /// Grain ladder, held sorted descending (the sweep order).
+    pub grains: Vec<u64>,
+    /// Node counts (Fig 2; `[1]` elsewhere).
+    pub nodes: Vec<usize>,
+    /// Overdecomposition factors (Table 2; `[1]` or `[tpc]` elsewhere).
+    pub tasks_per_core: Vec<usize>,
+}
+
+impl Campaign {
+    /// Campaign with the paper-matching defaults for `kind`.
+    pub fn new(
+        kind: CampaignKind,
+        systems: Vec<SystemKind>,
+        steps: usize,
+        grains: &[u64],
+    ) -> Campaign {
+        let mut grains = grains.to_vec();
+        grains.sort_unstable_by(|a, b| b.cmp(a));
+        grains.dedup();
+        Campaign {
+            kind,
+            systems,
+            cores_per_node: 48,
+            steps,
+            grains,
+            nodes: match kind {
+                CampaignKind::Fig2 => vec![1, 2, 4, 8],
+                _ => vec![1],
+            },
+            tasks_per_core: match kind {
+                CampaignKind::Table2 => vec![1, 8, 16],
+                CampaignKind::Fig2 => vec![8],
+                _ => vec![1],
+            },
+        }
+    }
+
+    /// Dependence patterns this campaign sweeps.
+    fn patterns(&self) -> Vec<DependencePattern> {
+        match self.kind {
+            CampaignKind::Patterns => DependencePattern::all(),
+            _ => vec![DependencePattern::Stencil1D],
+        }
+    }
+
+    /// The node count a single-column renderer addresses — must agree
+    /// with [`Campaign::jobs`] when the default axes were overridden.
+    /// `pub(crate)` so out-of-module callers that feed the renderer
+    /// (e.g. `experiments::fig1_table`) key their inserts identically.
+    pub(crate) fn render_nodes(&self) -> usize {
+        self.nodes.first().copied().unwrap_or(1)
+    }
+
+    /// The overdecomposition a single-column renderer addresses.
+    pub(crate) fn render_tpc(&self) -> usize {
+        self.tasks_per_core.first().copied().unwrap_or(1)
+    }
+
+    /// The job for one cell. Every caller (enumeration, rendering, the
+    /// experiments drivers) builds cells through here so ids always agree.
+    pub fn job_for(
+        &self,
+        system: SystemKind,
+        pattern: DependencePattern,
+        nodes: usize,
+        tasks_per_core: usize,
+        grain: u64,
+    ) -> Job {
+        Job::new(JobSpec {
+            system,
+            pattern,
+            nodes,
+            cores_per_node: self.cores_per_node,
+            tasks_per_core,
+            steps: self.steps,
+            grain,
+            mode: ExecMode::Sim,
+            reps: 1,
+            warmup: 0,
+        })
+    }
+
+    /// Node counts [`Campaign::jobs`] enumerates — only Fig 2 sweeps the
+    /// node axis; every other kind pins it to the rendered value so the
+    /// job set and the rendered table always address the same cells.
+    fn job_nodes(&self) -> Vec<usize> {
+        match self.kind {
+            CampaignKind::Fig2 => self.nodes.clone(),
+            _ => vec![self.render_nodes()],
+        }
+    }
+
+    /// Overdecomposition factors [`Campaign::jobs`] enumerates — only
+    /// Table 2 sweeps the tpc axis (same reasoning as [`Self::job_nodes`]).
+    fn job_tpcs(&self) -> Vec<usize> {
+        match self.kind {
+            CampaignKind::Table2 => self.tasks_per_core.clone(),
+            _ => vec![self.render_tpc()],
+        }
+    }
+
+    /// Enumerate every cell, deterministically: systems outer (paper row
+    /// order), then columns, then grains descending. The set is exactly
+    /// what the renderers address — no executed-but-invisible cells.
+    pub fn jobs(&self) -> Vec<Job> {
+        let mut out = Vec::new();
+        for &system in &self.systems {
+            for pattern in self.patterns() {
+                for &nodes in &self.job_nodes() {
+                    if nodes > 1 && system.is_shared_memory_only() {
+                        continue; // the paper compares these on 1 node only
+                    }
+                    for &tpc in &self.job_tpcs() {
+                        for &grain in &self.grains {
+                            out.push(
+                                self.job_for(system, pattern, nodes, tpc, grain),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// METG(50%) for one (system, pattern, nodes, tpc) group, from cached
+    /// results. `None` if any grain is missing; `Some(None)` if the curve
+    /// never reaches the threshold.
+    fn group_metg(
+        &self,
+        results: &HashMap<String, JobResult>,
+        system: SystemKind,
+        pattern: DependencePattern,
+        nodes: usize,
+        tpc: usize,
+    ) -> Option<Option<f64>> {
+        let mut runs: Vec<GrainRun> = Vec::with_capacity(self.grains.len());
+        let mut peak = 0.0;
+        for &grain in &self.grains {
+            let id = self.job_for(system, pattern, nodes, tpc, grain).id();
+            let r = results.get(&id)?;
+            peak = r.peak_flops;
+            runs.push(r.to_grain_run(grain));
+        }
+        Some(metg_from_curve(&runs, peak, 0.5))
+    }
+
+    fn metg_cell(
+        &self,
+        results: &HashMap<String, JobResult>,
+        system: SystemKind,
+        pattern: DependencePattern,
+        nodes: usize,
+        tpc: usize,
+    ) -> String {
+        match self.group_metg(results, system, pattern, nodes, tpc) {
+            None => "?".into(),
+            Some(None) => "—".into(),
+            Some(Some(us)) => format!("{us:.1}"),
+        }
+    }
+
+    /// Render the artifact's table from cached results (`?` = cell not in
+    /// the store yet).
+    pub fn table(&self, results: &HashMap<String, JobResult>) -> Table {
+        match self.kind {
+            CampaignKind::Fig1 => self.fig1_table(results),
+            CampaignKind::Table2 => self.table2_table(results),
+            CampaignKind::Fig2 => self.fig2_table(results),
+            CampaignKind::Patterns => self.patterns_table(results),
+        }
+    }
+
+    fn fig1_table(&self, results: &HashMap<String, JobResult>) -> Table {
+        let mut headers = vec!["grain".to_string()];
+        for s in &self.systems {
+            headers.push(format!("{} TFLOP/s", s.id()));
+            headers.push(format!("{} eff%", s.id()));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+        for &grain in &self.grains {
+            let mut row = vec![grain.to_string()];
+            for &system in &self.systems {
+                let id = self
+                    .job_for(
+                        system,
+                        DependencePattern::Stencil1D,
+                        self.render_nodes(),
+                        self.render_tpc(),
+                        grain,
+                    )
+                    .id();
+                match results.get(&id) {
+                    Some(r) => {
+                        row.push(format!("{:.4}", r.flops_per_sec / 1e12));
+                        row.push(format!(
+                            "{:.1}",
+                            100.0 * r.flops_per_sec / r.peak_flops
+                        ));
+                    }
+                    None => {
+                        row.push("?".into());
+                        row.push("?".into());
+                    }
+                }
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    fn table2_table(&self, results: &HashMap<String, JobResult>) -> Table {
+        let mut headers = vec!["System".to_string()];
+        for &n in &self.tasks_per_core {
+            headers.push(if n == 1 {
+                "single task per core".into()
+            } else {
+                format!("{n} tasks per core")
+            });
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+        for &system in &self.systems {
+            let mut row = vec![system.name().to_string()];
+            for &tpc in &self.tasks_per_core {
+                row.push(self.metg_cell(
+                    results,
+                    system,
+                    DependencePattern::Stencil1D,
+                    self.render_nodes(),
+                    tpc,
+                ));
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    fn fig2_table(&self, results: &HashMap<String, JobResult>) -> Table {
+        let tpc = self.render_tpc();
+        let mut headers = vec!["System".to_string()];
+        for &n in &self.nodes {
+            headers.push(format!("{n} node{}", if n == 1 { "" } else { "s" }));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+        for &system in &self.systems {
+            let mut row = vec![system.name().to_string()];
+            for &nodes in &self.nodes {
+                if nodes > 1 && system.is_shared_memory_only() {
+                    row.push("n/a".into());
+                    continue;
+                }
+                row.push(self.metg_cell(
+                    results,
+                    system,
+                    DependencePattern::Stencil1D,
+                    nodes,
+                    tpc,
+                ));
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    fn patterns_table(&self, results: &HashMap<String, JobResult>) -> Table {
+        let patterns = self.patterns();
+        let mut headers = vec!["System".to_string()];
+        for p in &patterns {
+            headers.push(p.name().to_string());
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+        for &system in &self.systems {
+            let mut row = vec![system.name().to_string()];
+            for &pattern in &patterns {
+                row.push(self.metg_cell(
+                    results,
+                    system,
+                    pattern,
+                    self.render_nodes(),
+                    self.render_tpc(),
+                ));
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    /// Gnuplot-ready data (`.dat`) for the artifact: one block per system
+    /// (blank-line separated, `index`-addressable), columns commented in
+    /// the header line.
+    pub fn dat(&self, results: &HashMap<String, JobResult>) -> String {
+        let mut out = String::new();
+        match self.kind {
+            CampaignKind::Fig1 => {
+                for &system in &self.systems {
+                    let mut t = Table::new(&["grain", "flops", "eff"]);
+                    for &grain in &self.grains {
+                        let id = self
+                            .job_for(
+                                system,
+                                DependencePattern::Stencil1D,
+                                self.render_nodes(),
+                                self.render_tpc(),
+                                grain,
+                            )
+                            .id();
+                        if let Some(r) = results.get(&id) {
+                            t.row(&[
+                                grain.to_string(),
+                                format!("{:e}", r.flops_per_sec),
+                                format!(
+                                    "{:.4}",
+                                    r.flops_per_sec / r.peak_flops
+                                ),
+                            ]);
+                        }
+                    }
+                    out.push_str(&format!("# system {}\n", system.id()));
+                    out.push_str(&t.to_dat());
+                    out.push('\n');
+                }
+            }
+            _ => {
+                let (col_name, cols): (&str, Vec<usize>) = match self.kind {
+                    CampaignKind::Table2 => {
+                        ("tasks_per_core", self.tasks_per_core.clone())
+                    }
+                    CampaignKind::Fig2 => ("nodes", self.nodes.clone()),
+                    _ => ("pattern_index", (0..self.patterns().len()).collect()),
+                };
+                for &system in &self.systems {
+                    let mut t = Table::new(&[col_name, "metg_us"]);
+                    for &c in &cols {
+                        let (pattern, nodes, tpc) = match self.kind {
+                            CampaignKind::Table2 => (
+                                DependencePattern::Stencil1D,
+                                self.render_nodes(),
+                                c,
+                            ),
+                            CampaignKind::Fig2 => (
+                                DependencePattern::Stencil1D,
+                                c,
+                                self.render_tpc(),
+                            ),
+                            _ => (
+                                self.patterns()[c],
+                                self.render_nodes(),
+                                self.render_tpc(),
+                            ),
+                        };
+                        if nodes > 1 && system.is_shared_memory_only() {
+                            continue;
+                        }
+                        if let Some(Some(us)) = self.group_metg(
+                            results, system, pattern, nodes, tpc,
+                        ) {
+                            t.row(&[c.to_string(), format!("{us:.3}")]);
+                        }
+                    }
+                    out.push_str(&format!("# system {}\n", system.id()));
+                    out.push_str(&t.to_dat());
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_jobs, Shard};
+    use crate::sim::SimParams;
+
+    fn small(kind: CampaignKind) -> Campaign {
+        let mut c = Campaign::new(
+            kind,
+            vec![SystemKind::MpiLike, SystemKind::HpxLocal],
+            8,
+            &[1 << 4, 1 << 10],
+        );
+        c.cores_per_node = 4;
+        c.nodes = match kind {
+            CampaignKind::Fig2 => vec![1, 2],
+            _ => vec![1],
+        };
+        c.tasks_per_core = match kind {
+            CampaignKind::Table2 => vec![1, 2],
+            CampaignKind::Fig2 => vec![2],
+            _ => vec![1],
+        };
+        c
+    }
+
+    #[test]
+    fn enumeration_is_deterministic() {
+        for kind in CampaignKind::all() {
+            let c = small(kind);
+            let a: Vec<String> = c.jobs().iter().map(Job::id).collect();
+            let b: Vec<String> = c.jobs().iter().map(Job::id).collect();
+            assert_eq!(a, b, "{kind:?}");
+            assert!(!a.is_empty(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn fig2_skips_shared_memory_systems_beyond_one_node() {
+        let c = small(CampaignKind::Fig2);
+        // HpxLocal is shared-memory-only: nodes=2 cells must not exist.
+        assert!(c.jobs().iter().all(|j| {
+            !(j.spec.system.is_shared_memory_only() && j.spec.nodes > 1)
+        }));
+        // MPI gets both node counts.
+        assert_eq!(
+            c.jobs()
+                .iter()
+                .filter(|j| j.spec.system == SystemKind::MpiLike)
+                .count(),
+            2 * c.grains.len()
+        );
+    }
+
+    #[test]
+    fn table_marks_missing_cells_then_fills_them() {
+        let c = small(CampaignKind::Table2);
+        let empty = HashMap::new();
+        let md = c.table(&empty).to_markdown();
+        assert!(md.contains('?'), "{md}");
+
+        let params = SimParams::default();
+        let jobs = c.jobs();
+        let summary =
+            run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> = summary
+            .results
+            .into_iter()
+            .map(|(j, r)| (j.id(), r))
+            .collect();
+        let md = c.table(&map).to_markdown();
+        assert!(!md.contains('?'), "{md}");
+        assert!(md.contains("MPI (like)"));
+    }
+
+    #[test]
+    fn campaign_kind_parse_round_trips() {
+        for k in CampaignKind::all() {
+            assert_eq!(CampaignKind::parse(k.id()), Some(k));
+        }
+        assert_eq!(CampaignKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,266 @@
+//! Job execution: map one benchmark cell onto the DES or the real
+//! in-process runtimes and normalize the outcome into a [`JobResult`].
+//!
+//! The per-cell primitives (`sim_grain_run`, `native_grain_run`,
+//! `sim_peak_flops`) are also the substrate `experiments.rs` and
+//! `metg::sweep` build their driver loops on, so every path into a graph
+//! execution goes through one place.
+
+use crate::core::{GraphConfig, KernelConfig, TaskGraph};
+use crate::harness::repeat_timing;
+use crate::metg::{measure_peak_flops, GrainRun};
+use crate::runtimes::{run_with, CharmOptions, RunOptions, SystemKind};
+use crate::sim::{simulate, Machine, SimParams};
+
+use super::job::{ExecMode, Job, JobResult};
+
+/// Peak FLOP/s of the simulated machine (the DES equivalent of the peak
+/// calibration: every core computing, zero overhead).
+pub fn sim_peak_flops(machine: Machine, params: &SimParams) -> f64 {
+    let flops_per_iter =
+        (crate::core::FLOPS_PER_ELEM_PER_ITER * params.payload_bytes / 4) as f64;
+    machine.total_cores() as f64 * flops_per_iter / (params.ns_per_iter * 1e-9)
+}
+
+/// One simulated grain run (the sim-mode [`GrainRun`]).
+#[allow(clippy::too_many_arguments)]
+pub fn sim_grain_run(
+    system: SystemKind,
+    machine: Machine,
+    params: &SimParams,
+    charm: &CharmOptions,
+    pattern: crate::core::DependencePattern,
+    tasks_per_core: usize,
+    steps: usize,
+    grain: u64,
+) -> GrainRun {
+    let graph = TaskGraph::new(GraphConfig {
+        width: machine.total_cores() * tasks_per_core,
+        steps,
+        dependence: pattern,
+        kernel: KernelConfig::compute_bound(grain),
+        ..GraphConfig::default()
+    });
+    let r = simulate(&graph, system, machine, params, charm);
+    GrainRun {
+        grain_iters: grain,
+        tasks: r.tasks,
+        wall: crate::harness::Summary::of(&[r.makespan_ns * 1e-9]),
+        flops_per_sec: r.flops_per_sec(&graph),
+        granularity_us: r.task_granularity_us(machine.total_cores()),
+    }
+}
+
+/// One real-runtime grain run: `reps` timed executions after `warmup`
+/// discarded ones, on `workers` threads of this host.
+#[allow(clippy::too_many_arguments)]
+pub fn native_grain_run(
+    system: SystemKind,
+    pattern: crate::core::DependencePattern,
+    workers: usize,
+    tasks_per_core: usize,
+    steps: usize,
+    grain: u64,
+    reps: usize,
+    warmup: usize,
+    opts: &RunOptions,
+) -> GrainRun {
+    let graph = TaskGraph::new(GraphConfig {
+        width: workers * tasks_per_core,
+        steps,
+        dependence: pattern,
+        kernel: KernelConfig::compute_bound(grain),
+        ..GraphConfig::default()
+    });
+    let mut opts = opts.clone();
+    opts.workers = workers;
+    opts.validate = false;
+    let sample = repeat_timing(reps, warmup, || {
+        run_with(system, &graph, &opts)
+            .expect("runtime execution failed")
+            .elapsed
+    });
+    let wall = sample.summary();
+    let tasks = graph.num_points();
+    GrainRun {
+        grain_iters: grain,
+        tasks,
+        flops_per_sec: graph.total_flops() / wall.mean,
+        granularity_us: wall.mean * 1e6 * workers as f64 / tasks as f64,
+        wall,
+    }
+}
+
+/// Execute one job and normalize its outcome.
+pub fn execute_job(job: &Job, params: &SimParams) -> crate::Result<JobResult> {
+    let s = &job.spec;
+    match s.mode {
+        ExecMode::Sim => {
+            let machine = Machine::new(s.nodes, s.cores_per_node);
+            let run = sim_grain_run(
+                s.system,
+                machine,
+                params,
+                &CharmOptions::default(),
+                s.pattern,
+                s.tasks_per_core,
+                s.steps,
+                s.grain,
+            );
+            Ok(from_grain_run(&run, sim_peak_flops(machine, params)))
+        }
+        ExecMode::Native => {
+            anyhow::ensure!(
+                s.nodes == 1,
+                "native jobs are single-node (got {} nodes)",
+                s.nodes
+            );
+            let run = native_grain_run(
+                s.system,
+                s.pattern,
+                s.cores_per_node,
+                s.tasks_per_core,
+                s.steps,
+                s.grain,
+                s.reps,
+                s.warmup,
+                &RunOptions::new(s.cores_per_node),
+            );
+            let peak =
+                measure_peak_flops(s.cores_per_node, 16, 1 << 20).flops_per_sec;
+            Ok(from_grain_run(&run, peak))
+        }
+        ExecMode::Validate => {
+            anyhow::ensure!(
+                s.nodes == 1,
+                "validation jobs are single-node (got {} nodes)",
+                s.nodes
+            );
+            let graph = TaskGraph::new(GraphConfig {
+                width: s.cores_per_node * s.tasks_per_core,
+                steps: s.steps,
+                dependence: s.pattern,
+                kernel: KernelConfig::compute_bound(s.grain),
+                ..GraphConfig::default()
+            });
+            let opts = RunOptions::new(s.cores_per_node).with_validate(true);
+            let report = run_with(s.system, &graph, &opts)?;
+            let records = report
+                .records
+                .as_ref()
+                .expect("validate mode always records");
+            crate::core::validate_execution(&graph, records)
+                .map_err(|e| anyhow::anyhow!("validation failed: {e}"))?;
+            Ok(JobResult {
+                tasks: report.tasks,
+                wall_secs: report.elapsed.as_secs_f64(),
+                flops_per_sec: report.flops_per_sec(&graph),
+                granularity_us: report.task_granularity_us(s.cores_per_node),
+                // Validation wall time is not a measurement; no peak.
+                peak_flops: 0.0,
+            })
+        }
+    }
+}
+
+fn from_grain_run(run: &GrainRun, peak_flops: f64) -> JobResult {
+    JobResult {
+        tasks: run.tasks,
+        wall_secs: run.wall.mean,
+        flops_per_sec: run.flops_per_sec,
+        granularity_us: run.granularity_us,
+        peak_flops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DependencePattern;
+    use crate::engine::job::JobSpec;
+
+    fn sim_job(grain: u64) -> Job {
+        Job::new(JobSpec {
+            system: SystemKind::MpiLike,
+            pattern: DependencePattern::Stencil1D,
+            nodes: 1,
+            cores_per_node: 4,
+            tasks_per_core: 1,
+            steps: 8,
+            grain,
+            mode: ExecMode::Sim,
+            reps: 1,
+            warmup: 0,
+        })
+    }
+
+    #[test]
+    fn sim_job_is_deterministic() {
+        let p = SimParams::default();
+        let j = sim_job(256);
+        let a = execute_job(&j, &p).unwrap();
+        let b = execute_job(&j, &p).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.tasks, 4 * 8);
+        assert!(a.wall_secs > 0.0 && a.flops_per_sec > 0.0);
+        assert!(a.peak_flops > 0.0);
+    }
+
+    #[test]
+    fn granularity_grows_with_grain() {
+        let p = SimParams::default();
+        let small = execute_job(&sim_job(16), &p).unwrap();
+        let large = execute_job(&sim_job(1 << 14), &p).unwrap();
+        assert!(large.granularity_us > small.granularity_us);
+    }
+
+    #[test]
+    fn native_job_runs_real_runtime() {
+        let p = SimParams::default();
+        let j = Job::new(JobSpec {
+            system: SystemKind::OpenMpLike,
+            pattern: DependencePattern::Stencil1D,
+            nodes: 1,
+            cores_per_node: 2,
+            tasks_per_core: 1,
+            steps: 6,
+            grain: 32,
+            mode: ExecMode::Native,
+            reps: 1,
+            warmup: 0,
+        });
+        let r = execute_job(&j, &p).unwrap();
+        assert_eq!(r.tasks, 12);
+        assert!(r.wall_secs > 0.0 && r.peak_flops > 0.0);
+    }
+
+    #[test]
+    fn validate_job_runs_and_checks_the_trace() {
+        let p = SimParams::default();
+        let j = Job::new(JobSpec {
+            system: SystemKind::CharmLike,
+            pattern: DependencePattern::Stencil1DPeriodic,
+            nodes: 1,
+            cores_per_node: 3,
+            tasks_per_core: 2,
+            steps: 5,
+            grain: 8,
+            mode: ExecMode::Validate,
+            reps: 1,
+            warmup: 0,
+        });
+        let r = execute_job(&j, &p).unwrap();
+        assert_eq!(r.tasks, 3 * 2 * 5);
+        assert_eq!(r.peak_flops, 0.0);
+        assert!(r.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn multi_node_native_rejected() {
+        let p = SimParams::default();
+        let mut j = sim_job(16);
+        j.spec.mode = ExecMode::Native;
+        j.spec.nodes = 2;
+        assert!(execute_job(&j, &p).is_err());
+    }
+}

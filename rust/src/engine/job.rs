@@ -1,0 +1,430 @@
+//! Jobs: one benchmark cell (system × pattern × grain × tasks-per-core ×
+//! nodes) as a serializable unit of work with a stable content hash.
+//!
+//! The hash is FNV-1a 64 over a canonical key/value string of the spec, so
+//! a job's identity survives process restarts, sharded invocations and
+//! store merges: the same cell always lands in the same `results/<id>.json`
+//! record, and any config change produces a new record instead of
+//! silently overwriting an old one.
+
+use anyhow::Context;
+
+use super::json::Json;
+use crate::core::DependencePattern;
+use crate::harness::Summary;
+use crate::metg::GrainRun;
+use crate::runtimes::SystemKind;
+use crate::sim::SimParams;
+
+/// How a job is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Discrete-event simulation — deterministic, safe to run many at
+    /// once on shared cores.
+    Sim,
+    /// Real in-process runtime execution — wall-clock-sensitive, the
+    /// coordinator reserves the whole machine for it.
+    Native,
+    /// Real runtime execution with full trace validation — correctness is
+    /// the datum, not wall time, so these run concurrently like sim jobs.
+    Validate,
+}
+
+impl ExecMode {
+    pub fn id(&self) -> &'static str {
+        match self {
+            ExecMode::Sim => "sim",
+            ExecMode::Native => "native",
+            ExecMode::Validate => "validate",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s {
+            "sim" => Some(ExecMode::Sim),
+            "native" => Some(ExecMode::Native),
+            "validate" => Some(ExecMode::Validate),
+            _ => None,
+        }
+    }
+
+    /// May the coordinator run this job alongside others? Only native
+    /// wall-clock measurements need the machine to themselves.
+    pub fn is_concurrent_safe(&self) -> bool {
+        !matches!(self, ExecMode::Native)
+    }
+}
+
+/// Everything that defines one benchmark cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub system: SystemKind,
+    pub pattern: DependencePattern,
+    /// Simulated nodes (always 1 for native jobs).
+    pub nodes: usize,
+    /// Cores per node (native: worker threads).
+    pub cores_per_node: usize,
+    pub tasks_per_core: usize,
+    pub steps: usize,
+    /// Compute grain, kernel iterations.
+    pub grain: u64,
+    pub mode: ExecMode,
+    /// Repetitions / discarded warmups (native mode; sim is deterministic
+    /// and ignores both).
+    pub reps: usize,
+    pub warmup: usize,
+}
+
+impl JobSpec {
+    /// Radix of radix-parameterized patterns (0 otherwise) — kept in the
+    /// canonical form so `nearest/3` and `nearest/5` are distinct cells.
+    pub fn radix(&self) -> usize {
+        match self.pattern {
+            DependencePattern::Nearest { radix }
+            | DependencePattern::Spread { radix }
+            | DependencePattern::RandomNearest { radix } => radix,
+            _ => 0,
+        }
+    }
+
+    /// Canonical key/value form: the hash input and the human summary.
+    /// Field order is part of the on-disk contract — never reorder.
+    pub fn canonical(&self) -> String {
+        format!(
+            "system={};pattern={};radix={};nodes={};cores={};tpc={};steps={};\
+             grain={};mode={};reps={};warmup={}",
+            self.system.id(),
+            self.pattern.name(),
+            self.radix(),
+            self.nodes,
+            self.cores_per_node,
+            self.tasks_per_core,
+            self.steps,
+            self.grain,
+            self.mode.id(),
+            self.reps,
+            self.warmup,
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("system".into(), Json::Str(self.system.id().into())),
+            ("pattern".into(), Json::Str(self.pattern.name().into())),
+            ("radix".into(), Json::Num(self.radix() as f64)),
+            ("nodes".into(), Json::Num(self.nodes as f64)),
+            ("cores_per_node".into(), Json::Num(self.cores_per_node as f64)),
+            ("tasks_per_core".into(), Json::Num(self.tasks_per_core as f64)),
+            ("steps".into(), Json::Num(self.steps as f64)),
+            ("grain".into(), Json::Num(self.grain as f64)),
+            ("mode".into(), Json::Str(self.mode.id().into())),
+            ("reps".into(), Json::Num(self.reps as f64)),
+            ("warmup".into(), Json::Num(self.warmup as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<JobSpec> {
+        let str_field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("job record missing string `{k}`"))
+        };
+        let num_field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("job record missing integer `{k}`"))
+        };
+        let system_id = str_field("system")?;
+        let system = SystemKind::parse(system_id)
+            .with_context(|| format!("unknown system `{system_id}`"))?;
+        let pattern_name = str_field("pattern")?;
+        let radix = num_field("radix")?;
+        let pattern = DependencePattern::parse(pattern_name, radix)
+            .with_context(|| format!("unknown pattern `{pattern_name}`"))?;
+        let mode_id = str_field("mode")?;
+        let mode = ExecMode::parse(mode_id)
+            .with_context(|| format!("unknown mode `{mode_id}`"))?;
+        Ok(JobSpec {
+            system,
+            pattern,
+            nodes: num_field("nodes")?,
+            cores_per_node: num_field("cores_per_node")?,
+            tasks_per_core: num_field("tasks_per_core")?,
+            steps: num_field("steps")?,
+            grain: v
+                .get("grain")
+                .and_then(Json::as_u64)
+                .context("job record missing integer `grain`")?,
+            mode,
+            reps: num_field("reps")?,
+            warmup: num_field("warmup")?,
+        })
+    }
+}
+
+/// A benchmark cell awaiting (or holding) execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub spec: JobSpec,
+}
+
+impl Job {
+    pub fn new(spec: JobSpec) -> Job {
+        Job { spec }
+    }
+
+    /// Stable content hash of the spec (hex, 16 chars) — the store key.
+    pub fn id(&self) -> String {
+        format!("{:016x}", fnv1a64(self.spec.canonical().as_bytes()))
+    }
+}
+
+/// FNV-1a 64-bit.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of the simulation cost parameters a result was computed
+/// under. Sim results depend on `SimParams` just as much as on the job
+/// spec, so the coordinator only treats a record as a cache hit when its
+/// fingerprint matches — running with `--calibrate` (or any edited
+/// params) re-executes instead of silently serving stale numbers.
+///
+/// The `Debug` form enumerates every field deterministically (f64 via
+/// shortest round-trip formatting), so equal params hash equal and any
+/// field change hashes different.
+pub fn params_fingerprint(params: &SimParams) -> u64 {
+    fnv1a64(format!("{params:?}").as_bytes())
+}
+
+/// The fingerprint a given job's cache record must carry to count as a
+/// hit. Only simulator-backed results depend on `SimParams`;
+/// native/validate jobs measure the real machine and stay cached across
+/// sim-param changes. Shared by the coordinator's cache check and
+/// `jobs list`'s status column so the two never disagree.
+pub fn job_fingerprint(job: &Job, params: &SimParams) -> u64 {
+    job_fingerprint_with(job, params_fingerprint(params))
+}
+
+/// [`job_fingerprint`] with the params fingerprint precomputed — hoist
+/// [`params_fingerprint`] out of per-job loops (it Debug-formats the
+/// whole params struct each call).
+pub fn job_fingerprint_with(job: &Job, sim_fp: u64) -> u64 {
+    match job.spec.mode {
+        ExecMode::Sim => sim_fp,
+        ExecMode::Native | ExecMode::Validate => 0,
+    }
+}
+
+/// Measured outcome of one job. Sim results are bitwise deterministic, so
+/// sharded campaigns merge byte-identically with serial ones.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobResult {
+    pub tasks: usize,
+    /// Mean wall seconds (sim: the simulated makespan).
+    pub wall_secs: f64,
+    pub flops_per_sec: f64,
+    /// Task granularity, µs (wall · cores / tasks).
+    pub granularity_us: f64,
+    /// Peak FLOP/s of the (simulated or calibrated) machine — METG
+    /// aggregation normalizes against this.
+    pub peak_flops: f64,
+}
+
+impl JobResult {
+    /// Rehydrate the METG-sweep view of this result.
+    pub fn to_grain_run(&self, grain: u64) -> GrainRun {
+        GrainRun {
+            grain_iters: grain,
+            tasks: self.tasks,
+            wall: Summary::of(&[self.wall_secs]),
+            flops_per_sec: self.flops_per_sec,
+            granularity_us: self.granularity_us,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("tasks".into(), Json::Num(self.tasks as f64)),
+            ("wall_secs".into(), Json::Num(self.wall_secs)),
+            ("flops_per_sec".into(), Json::Num(self.flops_per_sec)),
+            ("granularity_us".into(), Json::Num(self.granularity_us)),
+            ("peak_flops".into(), Json::Num(self.peak_flops)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<JobResult> {
+        let f = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("result record missing number `{k}`"))
+        };
+        Ok(JobResult {
+            tasks: v
+                .get("tasks")
+                .and_then(Json::as_usize)
+                .context("result record missing integer `tasks`")?,
+            wall_secs: f("wall_secs")?,
+            flops_per_sec: f("flops_per_sec")?,
+            granularity_us: f("granularity_us")?,
+            peak_flops: f("peak_flops")?,
+        })
+    }
+}
+
+/// Serialize a completed job as one on-disk record, stamped with the
+/// [`params_fingerprint`] it was computed under.
+pub fn record_to_json(job: &Job, result: &JobResult, params_fp: u64) -> String {
+    let mut text = Json::Obj(vec![
+        ("id".into(), Json::Str(job.id())),
+        ("params_fp".into(), Json::Str(format!("{params_fp:016x}"))),
+        ("job".into(), job.spec.to_json()),
+        ("result".into(), result.to_json()),
+    ])
+    .render();
+    text.push('\n');
+    text
+}
+
+/// Parse one on-disk record back into (job, result, params fingerprint),
+/// verifying the id.
+pub fn record_from_json(text: &str) -> anyhow::Result<(Job, JobResult, u64)> {
+    let v = Json::parse(text).context("malformed record")?;
+    let spec =
+        JobSpec::from_json(v.get("job").context("record missing `job`")?)?;
+    let result = JobResult::from_json(
+        v.get("result").context("record missing `result`")?,
+    )?;
+    let job = Job::new(spec);
+    if let Some(id) = v.get("id").and_then(Json::as_str) {
+        anyhow::ensure!(
+            id == job.id(),
+            "record id `{id}` does not match its spec hash `{}` — stale or \
+             hand-edited record",
+            job.id()
+        );
+    }
+    let params_fp = v
+        .get("params_fp")
+        .and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .context("record missing `params_fp`")?;
+    Ok((job, result, params_fp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            system: SystemKind::MpiLike,
+            pattern: DependencePattern::Stencil1D,
+            nodes: 1,
+            cores_per_node: 48,
+            tasks_per_core: 1,
+            steps: 100,
+            grain: 4096,
+            mode: ExecMode::Sim,
+            reps: 1,
+            warmup: 0,
+        }
+    }
+
+    #[test]
+    fn id_is_stable_across_calls_and_clones() {
+        let a = Job::new(spec());
+        let b = Job::new(spec());
+        assert_eq!(a.id(), b.id());
+        assert_eq!(a.id().len(), 16);
+    }
+
+    #[test]
+    fn distinct_fields_change_the_id() {
+        let base = Job::new(spec());
+        let mut variants = Vec::new();
+        for f in 0..8 {
+            let mut s = spec();
+            match f {
+                0 => s.system = SystemKind::CharmLike,
+                1 => s.pattern = DependencePattern::Fft,
+                2 => s.nodes = 2,
+                3 => s.cores_per_node = 4,
+                4 => s.tasks_per_core = 8,
+                5 => s.steps = 50,
+                6 => s.grain = 16,
+                _ => s.mode = ExecMode::Native,
+            }
+            variants.push(Job::new(s).id());
+        }
+        for (i, v) in variants.iter().enumerate() {
+            assert_ne!(v, &base.id(), "field {i} not hashed");
+        }
+    }
+
+    #[test]
+    fn radix_distinguishes_patterns() {
+        let mut a = spec();
+        a.pattern = DependencePattern::Nearest { radix: 3 };
+        let mut b = spec();
+        b.pattern = DependencePattern::Nearest { radix: 5 };
+        assert_ne!(Job::new(a).id(), Job::new(b).id());
+    }
+
+    #[test]
+    fn record_round_trips() {
+        let job = Job::new(spec());
+        let result = JobResult {
+            tasks: 4800,
+            wall_secs: 0.012_345_678_901,
+            flops_per_sec: 2.44e12,
+            granularity_us: 123.456,
+            peak_flops: 4.8e12,
+        };
+        let fp = params_fingerprint(&SimParams::default());
+        let text = record_to_json(&job, &result, fp);
+        let (job2, result2, fp2) = record_from_json(&text).unwrap();
+        assert_eq!(job2, job);
+        assert_eq!(result2, result);
+        assert_eq!(fp2, fp);
+        // Byte-stable re-serialization (shard merge requirement).
+        assert_eq!(record_to_json(&job2, &result2, fp2), text);
+    }
+
+    #[test]
+    fn tampered_record_rejected() {
+        let job = Job::new(spec());
+        let result = JobResult {
+            tasks: 1,
+            wall_secs: 1.0,
+            flops_per_sec: 1.0,
+            granularity_us: 1.0,
+            peak_flops: 1.0,
+        };
+        let text = record_to_json(&job, &result, 7)
+            .replace("\"steps\":100", "\"steps\":99");
+        assert!(record_from_json(&text).is_err());
+    }
+
+    #[test]
+    fn params_fingerprint_tracks_param_changes() {
+        let a = params_fingerprint(&SimParams::default());
+        let b = params_fingerprint(&SimParams::default());
+        assert_eq!(a, b, "equal params must fingerprint equal");
+        let mut p = SimParams::default();
+        p.mpi_task_ns += 1.0;
+        assert_ne!(a, params_fingerprint(&p), "changed params must differ");
+    }
+
+    #[test]
+    fn fnv_reference_vector() {
+        // Known FNV-1a 64 test vector.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,29 @@
+//! The job-based experiment engine.
+//!
+//! Every benchmark cell of the paper's artifact grids — *(system ×
+//! dependence pattern × grain × tasks-per-core × node count)* — is a
+//! serializable [`Job`] with a stable content hash over its configuration
+//! ([`job`]). Campaigns ([`campaign`]) enumerate an artifact's full job
+//! set; the [`crate::coordinator`] executes job lists sharded and
+//! concurrently; and every [`JobResult`] persists as a JSON record
+//! ([`json`]) under `results/` keyed by content hash ([`store`]), so
+//! finished cells are never recomputed and interrupted sweeps resume for
+//! free.
+//!
+//! CLI entry points: `repro jobs list | run | table | dat`.
+
+pub mod campaign;
+pub mod exec;
+pub mod job;
+pub mod json;
+pub mod params;
+pub mod store;
+
+pub use campaign::{Campaign, CampaignKind};
+pub use exec::execute_job;
+pub use job::{ExecMode, Job, JobResult, JobSpec};
+pub use store::ResultStore;
+
+// The coordinator is the execution half of the engine; re-export its
+// surface so `engine::*` is one-stop.
+pub use crate::coordinator::{run_jobs, RunSummary, Shard};

@@ -1,0 +1,199 @@
+//! Persisting simulation cost parameters alongside a result store.
+//!
+//! `calibrate()` measures wall clocks, so two invocations never produce
+//! bit-identical [`SimParams`] — if each `jobs run --calibrate` used a
+//! fresh calibration, its params fingerprint would never match the
+//! previous run's records and caching/resume would silently degrade to
+//! full re-execution. Instead the first calibrated run writes its params
+//! as `_calibration.json` in the results directory, and every later run
+//! against the same store reuses them, keeping the fingerprint stable.
+
+use anyhow::Context;
+
+use crate::comm::{IntranodeTransport, NetworkModel};
+use crate::sim::SimParams;
+
+use super::json::Json;
+use super::store::ResultStore;
+
+/// Calibration record filename inside a results directory. The leading
+/// underscore keeps it visually apart from job records; it is skipped by
+/// [`ResultStore::load_all`] because it is not a parseable job record.
+pub const CALIBRATION_FILE: &str = "_calibration.json";
+
+fn num(k: &str, v: f64) -> (String, Json) {
+    (k.to_string(), Json::Num(v))
+}
+
+/// Serialize params field-by-field (f64s keep exact round-trip values).
+pub fn params_to_json(p: &SimParams) -> Json {
+    Json::Obj(vec![
+        num("ns_per_iter", p.ns_per_iter),
+        num("payload_bytes", p.payload_bytes as f64),
+        num("marshal_ns_per_byte", p.marshal_ns_per_byte),
+        num("mpi_task_ns", p.mpi_task_ns),
+        num("mpi_msg_ns", p.mpi_msg_ns),
+        num("charm_msg_default_ns", p.charm_msg_default_ns),
+        num("charm_msg_eightbyte_ns", p.charm_msg_eightbyte_ns),
+        num("charm_msg_simplified_ns", p.charm_msg_simplified_ns),
+        num("charm_task_ns", p.charm_task_ns),
+        num("charm_nic_intranode_cpu_ns", p.charm_nic_intranode_cpu_ns),
+        num("hpx_local_task_ns", p.hpx_local_task_ns),
+        num("hpx_steal_ns", p.hpx_steal_ns),
+        num("hpx_dist_task_ns", p.hpx_dist_task_ns),
+        num("hpx_parcel_ns", p.hpx_parcel_ns),
+        num("mpi_queue_factor", p.mpi_queue_factor),
+        num("charm_queue_factor", p.charm_queue_factor),
+        num("hpx_dist_queue_factor", p.hpx_dist_queue_factor),
+        num("hpx_local_queue_factor", p.hpx_local_queue_factor),
+        num("hpx_dist_node_factor", p.hpx_dist_node_factor),
+        num("hybrid_node_factor", p.hybrid_node_factor),
+        num("omp_barrier_base_ns", p.omp_barrier_base_ns),
+        num("omp_barrier_per_core_ns", p.omp_barrier_per_core_ns),
+        num("omp_task_ns", p.omp_task_ns),
+        num("hybrid_funnel_per_task_ns", p.hybrid_funnel_per_task_ns),
+        num("hybrid_funnel_quad_ns", p.hybrid_funnel_quad_ns),
+        num("hybrid_dynamic_ns", p.hybrid_dynamic_ns),
+        num("hybrid_msg_ns", p.hybrid_msg_ns),
+        num("net_inter_node_latency_ns", p.network.inter_node_latency_ns),
+        num("net_inter_node_bytes_per_ns", p.network.inter_node_bytes_per_ns),
+        num("net_intra_node_latency_ns", p.network.intra_node_latency_ns),
+        num("net_intra_node_bytes_per_ns", p.network.intra_node_bytes_per_ns),
+        (
+            "net_intranode".to_string(),
+            Json::Str(
+                match p.network.intranode {
+                    IntranodeTransport::Nic => "nic",
+                    IntranodeTransport::Shmem => "shmem",
+                }
+                .to_string(),
+            ),
+        ),
+    ])
+}
+
+/// Parse params back; every field is required (a partial record means a
+/// different crate version wrote it — recalibrate instead of guessing).
+pub fn params_from_json(v: &Json) -> anyhow::Result<SimParams> {
+    let f = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("calibration record missing `{k}`"))
+    };
+    let intranode = match v
+        .get("net_intranode")
+        .and_then(Json::as_str)
+        .context("calibration record missing `net_intranode`")?
+    {
+        "nic" => IntranodeTransport::Nic,
+        "shmem" => IntranodeTransport::Shmem,
+        other => anyhow::bail!("unknown intranode transport `{other}`"),
+    };
+    Ok(SimParams {
+        ns_per_iter: f("ns_per_iter")?,
+        payload_bytes: v
+            .get("payload_bytes")
+            .and_then(Json::as_usize)
+            .context("calibration record missing `payload_bytes`")?,
+        marshal_ns_per_byte: f("marshal_ns_per_byte")?,
+        mpi_task_ns: f("mpi_task_ns")?,
+        mpi_msg_ns: f("mpi_msg_ns")?,
+        charm_msg_default_ns: f("charm_msg_default_ns")?,
+        charm_msg_eightbyte_ns: f("charm_msg_eightbyte_ns")?,
+        charm_msg_simplified_ns: f("charm_msg_simplified_ns")?,
+        charm_task_ns: f("charm_task_ns")?,
+        charm_nic_intranode_cpu_ns: f("charm_nic_intranode_cpu_ns")?,
+        hpx_local_task_ns: f("hpx_local_task_ns")?,
+        hpx_steal_ns: f("hpx_steal_ns")?,
+        hpx_dist_task_ns: f("hpx_dist_task_ns")?,
+        hpx_parcel_ns: f("hpx_parcel_ns")?,
+        mpi_queue_factor: f("mpi_queue_factor")?,
+        charm_queue_factor: f("charm_queue_factor")?,
+        hpx_dist_queue_factor: f("hpx_dist_queue_factor")?,
+        hpx_local_queue_factor: f("hpx_local_queue_factor")?,
+        hpx_dist_node_factor: f("hpx_dist_node_factor")?,
+        hybrid_node_factor: f("hybrid_node_factor")?,
+        omp_barrier_base_ns: f("omp_barrier_base_ns")?,
+        omp_barrier_per_core_ns: f("omp_barrier_per_core_ns")?,
+        omp_task_ns: f("omp_task_ns")?,
+        hybrid_funnel_per_task_ns: f("hybrid_funnel_per_task_ns")?,
+        hybrid_funnel_quad_ns: f("hybrid_funnel_quad_ns")?,
+        hybrid_dynamic_ns: f("hybrid_dynamic_ns")?,
+        hybrid_msg_ns: f("hybrid_msg_ns")?,
+        network: NetworkModel {
+            inter_node_latency_ns: f("net_inter_node_latency_ns")?,
+            inter_node_bytes_per_ns: f("net_inter_node_bytes_per_ns")?,
+            intra_node_latency_ns: f("net_intra_node_latency_ns")?,
+            intra_node_bytes_per_ns: f("net_intra_node_bytes_per_ns")?,
+            intranode,
+        },
+    })
+}
+
+/// The calibration persisted in a results directory, if a valid one
+/// exists (read-only; never calibrates).
+pub fn load_persisted(store: &ResultStore) -> Option<SimParams> {
+    let path = store.dir().join(CALIBRATION_FILE);
+    let text = std::fs::read_to_string(path).ok()?;
+    Json::parse(&text).and_then(|v| params_from_json(&v)).ok()
+}
+
+/// The store's persisted calibration, or calibrate now and persist it.
+///
+/// Subsequent `--calibrate` runs against the same results directory get
+/// bit-identical params (hence a stable fingerprint), so cache hits and
+/// resume keep working for calibrated campaigns. Delete
+/// `_calibration.json` to force a fresh calibration.
+///
+/// Sharding caveat: shards that run on *different hosts* into separate
+/// directories would each calibrate their own host. For a merged,
+/// internally-consistent calibrated campaign, calibrate once and copy
+/// the resulting `_calibration.json` into every shard's results
+/// directory before `jobs run` — each shard then reuses it verbatim.
+pub fn load_or_calibrate(store: &ResultStore) -> anyhow::Result<SimParams> {
+    let path = store.dir().join(CALIBRATION_FILE);
+    if let Some(p) = load_persisted(store) {
+        eprintln!("using calibration persisted in {}", path.display());
+        return Ok(p);
+    }
+    if path.exists() {
+        eprintln!(
+            "warning: {} unreadable — recalibrating and overwriting",
+            path.display()
+        );
+    }
+    eprintln!("calibrating sim params from the real runtimes (slow)...");
+    let p = crate::sim::calibrate(16);
+    let mut text = params_to_json(&p).render();
+    text.push('\n');
+    super::store::write_atomic(store.dir(), CALIBRATION_FILE, &text)?;
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::job::params_fingerprint;
+
+    #[test]
+    fn round_trip_preserves_every_field_bit_exactly() {
+        let mut p = SimParams::default();
+        p.ns_per_iter = 1.0 / 3.0; // non-terminating decimal
+        p.network.intranode = IntranodeTransport::Nic;
+        let text = params_to_json(&p).render();
+        let back = params_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            params_fingerprint(&back),
+            params_fingerprint(&p),
+            "round trip changed the fingerprint"
+        );
+        assert_eq!(back.ns_per_iter.to_bits(), p.ns_per_iter.to_bits());
+        assert_eq!(back.network, p.network);
+    }
+
+    #[test]
+    fn partial_record_rejected() {
+        let v = Json::parse("{\"ns_per_iter\":12}").unwrap();
+        assert!(params_from_json(&v).is_err());
+    }
+}

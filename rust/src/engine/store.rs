@@ -1,0 +1,217 @@
+//! Durable result store: one JSON record per completed job, keyed by the
+//! job's content hash, so campaigns are resumable and shardable.
+//!
+//! Layout: `<dir>/<job-id>.json`. Writes go through a temp file + rename,
+//! so an interrupted sweep never leaves a truncated record — on resume the
+//! cell simply re-runs. Two shards writing disjoint job sets into the same
+//! directory compose into exactly the record set a serial run produces.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::Context;
+
+use super::job::{record_from_json, record_to_json, Job, JobResult};
+
+/// Distinguishes concurrent writers' temp files (combined with the pid,
+/// so two processes sharing one results dir cannot collide either).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Atomically publish `text` as `dir/name`: write to a writer-unique
+/// temp file, then rename. Concurrent writers of the same name race
+/// benignly (last rename wins); a reader never sees a truncated file.
+pub(crate) fn write_atomic(
+    dir: &Path,
+    name: &str,
+    text: &str,
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(name);
+    let tmp = dir.join(format!(
+        "{name}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+    ));
+    std::fs::write(&tmp, text)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// A results directory.
+#[derive(Debug, Clone)]
+pub struct ResultStore {
+    dir: PathBuf,
+}
+
+impl ResultStore {
+    pub fn new(dir: impl Into<PathBuf>) -> ResultStore {
+        ResultStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Record path for a job.
+    pub fn path_for(&self, job: &Job) -> PathBuf {
+        self.dir.join(format!("{}.json", job.id()))
+    }
+
+    /// Load a job's record regardless of the sim params it was computed
+    /// under (the render path: tables show what the store holds).
+    /// Malformed or mismatched records read as a miss.
+    pub fn load(&self, job: &Job) -> Option<JobResult> {
+        let text = std::fs::read_to_string(self.path_for(job)).ok()?;
+        match record_from_json(&text) {
+            Ok((stored, result, _)) if stored == *job => Some(result),
+            _ => None,
+        }
+    }
+
+    /// Load a job's cached result only if it was computed under the same
+    /// sim params (the execution path: anything else must re-run rather
+    /// than silently serve stale numbers).
+    pub fn load_if(&self, job: &Job, params_fp: u64) -> Option<JobResult> {
+        let text = std::fs::read_to_string(self.path_for(job)).ok()?;
+        match record_from_json(&text) {
+            Ok((stored, result, fp)) if stored == *job && fp == params_fp => {
+                Some(result)
+            }
+            _ => None,
+        }
+    }
+
+    /// Persist a completed job (atomic: writer-unique temp file + rename,
+    /// so concurrent writers — threads or whole processes — can never
+    /// leave a truncated record or trip over each other's temp files).
+    pub fn save(
+        &self,
+        job: &Job,
+        result: &JobResult,
+        params_fp: u64,
+    ) -> anyhow::Result<()> {
+        write_atomic(
+            &self.dir,
+            &format!("{}.json", job.id()),
+            &record_to_json(job, result, params_fp),
+        )
+    }
+
+    /// All parseable records in the store, sorted by id (directory order
+    /// is filesystem-dependent; the sort keeps listings deterministic).
+    pub fn load_all(&self) -> Vec<(Job, JobResult)> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out: Vec<(Job, JobResult)> = entries
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().map(|x| x == "json").unwrap_or(false)
+            })
+            .filter_map(|e| std::fs::read_to_string(e.path()).ok())
+            .filter_map(|text| record_from_json(&text).ok())
+            .map(|(job, result, _)| (job, result))
+            .collect();
+        out.sort_by_key(|(job, _)| job.id());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DependencePattern;
+    use crate::engine::job::{ExecMode, JobSpec};
+    use crate::runtimes::SystemKind;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("taskbench_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn job(grain: u64) -> Job {
+        Job::new(JobSpec {
+            system: SystemKind::MpiLike,
+            pattern: DependencePattern::Stencil1D,
+            nodes: 1,
+            cores_per_node: 4,
+            tasks_per_core: 1,
+            steps: 10,
+            grain,
+            mode: ExecMode::Sim,
+            reps: 1,
+            warmup: 0,
+        })
+    }
+
+    fn result(v: f64) -> JobResult {
+        JobResult {
+            tasks: 40,
+            wall_secs: v,
+            flops_per_sec: v * 2.0,
+            granularity_us: v * 3.0,
+            peak_flops: v * 4.0,
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let dir = tmp("round_trip");
+        let store = ResultStore::new(&dir);
+        let j = job(64);
+        assert!(store.load(&j).is_none());
+        store.save(&j, &result(0.5), 7).unwrap();
+        assert_eq!(store.load(&j), Some(result(0.5)));
+        // A different cell is still a miss.
+        assert!(store.load(&job(128)).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_if_rejects_foreign_params() {
+        let dir = tmp("params_fp");
+        let store = ResultStore::new(&dir);
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        assert_eq!(store.load_if(&j, 7), Some(result(1.0)));
+        assert!(
+            store.load_if(&j, 8).is_none(),
+            "a record from different sim params must not be a cache hit"
+        );
+        // The render path still sees the record.
+        assert!(store.load(&j).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_record_reads_as_miss() {
+        let dir = tmp("corrupt");
+        let store = ResultStore::new(&dir);
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        std::fs::write(store.path_for(&j), "{not json").unwrap();
+        assert!(store.load(&j).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_all_sorted_and_complete() {
+        let dir = tmp("load_all");
+        let store = ResultStore::new(&dir);
+        for g in [1u64, 2, 4, 8] {
+            store.save(&job(g), &result(g as f64), 7).unwrap();
+        }
+        let all = store.load_all();
+        assert_eq!(all.len(), 4);
+        let mut ids: Vec<String> = all.iter().map(|(j, _)| j.id()).collect();
+        let sorted = ids.clone();
+        ids.sort();
+        assert_eq!(ids, sorted);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,48 +1,25 @@
 //! The paper's experiments, as reusable drivers shared by the CLI,
-//! `rust/benches/*` and `examples/*`. Each function regenerates one table
-//! or figure (see DESIGN.md §5 for the index).
+//! `rust/benches/*` and `rust/examples/*`. Each function regenerates one
+//! table or figure (see DESIGN.md §5 for the index).
+//!
+//! Since the engine landed, the simulated drivers are thin shells: they
+//! build a [`Campaign`] job set, run it through
+//! [`crate::coordinator::run_jobs`] (in-memory, unsharded), and render
+//! from the results — exactly the path `repro jobs run` takes, minus the
+//! persistent store. The per-cell primitives live in
+//! [`crate::engine::exec`] and are re-exported here for compatibility.
 
+use std::collections::HashMap;
+
+use crate::coordinator::{run_jobs, Shard};
 use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use crate::engine::{Campaign, CampaignKind, JobResult};
 use crate::harness::report::{pm, Table};
 use crate::metg::{metg_from_curve, sweep_grains, GrainRun, SweepConfig};
 use crate::runtimes::{CharmOptions, SystemKind};
 use crate::sim::{simulate, Machine, SimParams};
 
-/// Peak FLOP/s of the simulated machine (the DES equivalent of the peak
-/// calibration: every core computing, zero overhead).
-pub fn sim_peak_flops(machine: Machine, params: &SimParams) -> f64 {
-    let flops_per_iter =
-        (crate::core::FLOPS_PER_ELEM_PER_ITER * params.payload_bytes / 4) as f64;
-    machine.total_cores() as f64 * flops_per_iter / (params.ns_per_iter * 1e-9)
-}
-
-/// One simulated grain run (mirrors [`crate::metg::GrainRun`]).
-pub fn sim_grain_run(
-    system: SystemKind,
-    machine: Machine,
-    params: &SimParams,
-    charm: &CharmOptions,
-    pattern: DependencePattern,
-    tasks_per_core: usize,
-    steps: usize,
-    grain: u64,
-) -> GrainRun {
-    let graph = TaskGraph::new(GraphConfig {
-        width: machine.total_cores() * tasks_per_core,
-        steps,
-        dependence: pattern,
-        kernel: KernelConfig::compute_bound(grain),
-        ..GraphConfig::default()
-    });
-    let r = simulate(&graph, system, machine, params, charm);
-    GrainRun {
-        grain_iters: grain,
-        tasks: r.tasks,
-        wall: crate::harness::Summary::of(&[r.makespan_ns * 1e-9]),
-        flops_per_sec: r.flops_per_sec(&graph),
-        granularity_us: r.task_granularity_us(machine.total_cores()),
-    }
-}
+pub use crate::engine::exec::{sim_grain_run, sim_peak_flops};
 
 /// Simulated METG(50%) for one system on one machine.
 #[allow(clippy::too_many_arguments)]
@@ -68,6 +45,18 @@ pub fn sim_metg(
     metg_from_curve(&runs, peak, 0.5)
 }
 
+/// Execute a campaign's whole job set in memory (no store, no shard) and
+/// index the results by job id.
+fn run_campaign(
+    campaign: &Campaign,
+    params: &SimParams,
+) -> HashMap<String, JobResult> {
+    let jobs = campaign.jobs();
+    let summary = run_jobs(&jobs, None, Shard::full(), 0, params)
+        .expect("in-memory sim campaign cannot fail");
+    summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect()
+}
+
 /// Fig 1a/1b: FLOP/s and efficiency vs grain size, all systems, 1 node.
 /// `sim = true` runs the DES on a 48-core node (the paper's machine);
 /// `sim = false` runs the real in-process runtimes with `cores` workers.
@@ -85,42 +74,50 @@ pub fn fig1(
     simulate_mode: bool,
     params: &SimParams,
 ) -> Vec<Fig1Row> {
-    let mut grains = grains.to_vec();
-    grains.sort_unstable_by(|a, b| b.cmp(a));
-    grains.dedup();
-    let grains = &grains[..];
-    systems
-        .iter()
-        .map(|&system| {
-            if simulate_mode {
-                let machine = Machine::new(1, cores);
-                let peak = sim_peak_flops(machine, params);
-                let runs = grains
+    let mut gs = grains.to_vec();
+    gs.sort_unstable_by(|a, b| b.cmp(a));
+    gs.dedup();
+    if simulate_mode {
+        let mut campaign =
+            Campaign::new(CampaignKind::Fig1, systems.to_vec(), steps, &gs);
+        campaign.cores_per_node = cores;
+        let results = run_campaign(&campaign, params);
+        let peak = sim_peak_flops(Machine::new(1, cores), params);
+        systems
+            .iter()
+            .map(|&system| {
+                let runs = campaign
+                    .grains
                     .iter()
                     .map(|&g| {
-                        sim_grain_run(
-                            system,
-                            machine,
-                            params,
-                            &CharmOptions::default(),
-                            DependencePattern::Stencil1D,
-                            1,
-                            steps,
-                            g,
-                        )
+                        let id = campaign
+                            .job_for(
+                                system,
+                                DependencePattern::Stencil1D,
+                                campaign.render_nodes(),
+                                campaign.render_tpc(),
+                                g,
+                            )
+                            .id();
+                        results[&id].to_grain_run(g)
                     })
                     .collect();
                 Fig1Row { system, runs, peak_flops: peak }
-            } else {
+            })
+            .collect()
+    } else {
+        systems
+            .iter()
+            .map(|&system| {
                 let mut cfg = SweepConfig::new(system, cores);
                 cfg.steps = steps;
-                cfg.grains = grains.to_vec();
+                cfg.grains = gs.clone();
                 let peak =
                     crate::metg::measure_peak_flops(cores, 16, 1 << 20).flops_per_sec;
                 Fig1Row { system, runs: sweep_grains(&cfg), peak_flops: peak }
-            }
-        })
-        .collect()
+            })
+            .collect()
+    }
 }
 
 /// Table 2: METG(µs) per system × tasks-per-core on 1 node (48 simulated
@@ -132,38 +129,11 @@ pub fn table2(
     grains: &[u64],
     params: &SimParams,
 ) -> Table {
-    let machine = Machine::rostam(1);
-    let mut headers = vec!["System".to_string()];
-    for n in tasks_per_core {
-        headers.push(if *n == 1 {
-            "single task per core".into()
-        } else {
-            format!("{n} tasks per core")
-        });
-    }
-    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    let mut table = Table::new(&hdr_refs);
-    for &system in systems {
-        let mut row = vec![system.name().to_string()];
-        for &tpc in tasks_per_core {
-            let m = sim_metg(
-                system,
-                machine,
-                params,
-                &CharmOptions::default(),
-                DependencePattern::Stencil1D,
-                tpc,
-                steps,
-                grains,
-            );
-            row.push(match m {
-                Some(us) => format!("{us:.1}"),
-                None => "—".into(),
-            });
-        }
-        table.row(&row);
-    }
-    table
+    let mut campaign =
+        Campaign::new(CampaignKind::Table2, systems.to_vec(), steps, grains);
+    campaign.tasks_per_core = tasks_per_core.to_vec();
+    let results = run_campaign(&campaign, params);
+    campaign.table(&results)
 }
 
 /// Fig 2: METG vs node count for a fixed overdecomposition factor.
@@ -175,41 +145,17 @@ pub fn fig2(
     grains: &[u64],
     params: &SimParams,
 ) -> Table {
-    let mut headers = vec!["System".to_string()];
-    for n in nodes {
-        headers.push(format!("{n} node{}", if *n == 1 { "" } else { "s" }));
-    }
-    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    let mut table = Table::new(&hdr_refs);
-    for &system in systems {
-        let mut row = vec![system.name().to_string()];
-        for &n in nodes {
-            if system.is_shared_memory_only() && n > 1 {
-                row.push("n/a".into());
-                continue;
-            }
-            let m = sim_metg(
-                system,
-                Machine::rostam(n),
-                params,
-                &CharmOptions::default(),
-                DependencePattern::Stencil1D,
-                tasks_per_core,
-                steps,
-                grains,
-            );
-            row.push(match m {
-                Some(us) => format!("{us:.1}"),
-                None => "—".into(),
-            });
-        }
-        table.row(&row);
-    }
-    table
+    let mut campaign =
+        Campaign::new(CampaignKind::Fig2, systems.to_vec(), steps, grains);
+    campaign.nodes = nodes.to_vec();
+    campaign.tasks_per_core = vec![tasks_per_core];
+    let results = run_campaign(&campaign, params);
+    campaign.table(&results)
 }
 
 /// Fig 3: Charm++ build-option ablation — task throughput (tasks/s) at
-/// grain 4096 on 8 nodes × 48 cores, 384 tasks.
+/// grain 4096 on 8 nodes × 48 cores, 384 tasks. (Build options are not a
+/// job-spec dimension, so this driver talks to the DES directly.)
 pub fn fig3(steps: usize, params: &SimParams) -> Table {
     let machine = Machine::rostam(8);
     let graph = TaskGraph::new(GraphConfig {
@@ -242,28 +188,38 @@ pub fn fig3(steps: usize, params: &SimParams) -> Table {
 }
 
 /// Render a Fig 1 row set as a markdown table (grain, TFLOP/s and
-/// efficiency per system).
+/// efficiency per system). Delegates to the campaign renderer — `repro
+/// sweep`, the benches and `repro jobs table --campaign fig1` all emit
+/// the same cells from one formatter.
 pub fn fig1_table(rows: &[Fig1Row], grains: &[u64]) -> Table {
-    let mut headers = vec!["grain".to_string()];
+    let systems: Vec<SystemKind> = rows.iter().map(|r| r.system).collect();
+    // The job ids here are purely internal rendering keys (hence the
+    // arbitrary steps): inserts use the exact render_* axes the campaign
+    // renderer looks up, so the two cannot drift apart.
+    let campaign = Campaign::new(CampaignKind::Fig1, systems, 0, grains);
+    let mut results = HashMap::new();
     for r in rows {
-        headers.push(format!("{} TFLOP/s", r.system.id()));
-        headers.push(format!("{} eff%", r.system.id()));
-    }
-    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    let mut t = Table::new(&hdr_refs);
-    let mut gs = grains.to_vec();
-    gs.sort_unstable_by(|a, b| b.cmp(a));
-    for (i, g) in gs.iter().enumerate() {
-        let mut row = vec![g.to_string()];
-        for r in rows {
-            let run = &r.runs[i];
-            debug_assert_eq!(run.grain_iters, *g);
-            row.push(format!("{:.4}", run.flops_per_sec / 1e12));
-            row.push(format!("{:.1}", 100.0 * run.flops_per_sec / r.peak_flops));
+        for run in &r.runs {
+            let job = campaign.job_for(
+                r.system,
+                DependencePattern::Stencil1D,
+                campaign.render_nodes(),
+                campaign.render_tpc(),
+                run.grain_iters,
+            );
+            results.insert(
+                job.id(),
+                JobResult {
+                    tasks: run.tasks,
+                    wall_secs: run.wall.mean,
+                    flops_per_sec: run.flops_per_sec,
+                    granularity_us: run.granularity_us,
+                    peak_flops: r.peak_flops,
+                },
+            );
         }
-        t.row(&row);
     }
-    t
+    campaign.table(&results)
 }
 
 /// Beyond-the-paper ablation (its §6.3/§7 outlook): METG per dependence
@@ -275,32 +231,10 @@ pub fn pattern_sweep(
     grains: &[u64],
     params: &SimParams,
 ) -> Table {
-    let machine = Machine::rostam(1);
-    let patterns = DependencePattern::all();
-    let mut headers = vec!["System".to_string()];
-    for p in &patterns {
-        headers.push(p.name().to_string());
-    }
-    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
-    let mut table = Table::new(&hdr_refs);
-    for &system in systems {
-        let mut row = vec![system.name().to_string()];
-        for &pattern in &patterns {
-            let m = sim_metg(
-                system,
-                machine,
-                params,
-                &CharmOptions::default(),
-                pattern,
-                1,
-                steps,
-                grains,
-            );
-            row.push(fmt_metg(m));
-        }
-        table.row(&row);
-    }
-    table
+    let campaign =
+        Campaign::new(CampaignKind::Patterns, systems.to_vec(), steps, grains);
+    let results = run_campaign(&campaign, params);
+    campaign.table(&results)
 }
 
 /// Format a METG value for the tables.
@@ -438,5 +372,30 @@ mod tests {
         let md = t.to_markdown();
         assert!(md.contains("mpi TFLOP/s"));
         assert_eq!(md.lines().count(), 2 + 4);
+    }
+
+    #[test]
+    fn table2_driver_matches_direct_sim_metg() {
+        // The campaign path must produce exactly the numbers the direct
+        // per-cell path produces (the rewiring changed plumbing, not math).
+        let p = SimParams::default();
+        let grains = quick_grains();
+        let t = table2(&[SystemKind::MpiLike], &[1], 30, &grains, &p);
+        let md = t.to_markdown();
+        let want = sim_metg(
+            SystemKind::MpiLike,
+            Machine::rostam(1),
+            &p,
+            &CharmOptions::default(),
+            DependencePattern::Stencil1D,
+            1,
+            30,
+            &grains,
+        )
+        .expect("no METG");
+        assert!(
+            md.contains(&format!("{want:.1}")),
+            "table {md} missing direct value {want:.1}"
+        );
     }
 }

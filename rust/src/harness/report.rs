@@ -53,6 +53,20 @@ impl Table {
         out
     }
 
+    /// Gnuplot-ready whitespace-separated data: a `# header` comment line
+    /// then one space-joined row per line (used by `repro jobs dat`).
+    pub fn to_dat(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# ");
+        out.push_str(&self.headers.join(" "));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(" "));
+            out.push('\n');
+        }
+        out
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let esc = |c: &str| {
@@ -106,6 +120,14 @@ mod tests {
         // All rows same width
         let lens: Vec<usize> = md.lines().map(|l| l.len()).collect();
         assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn dat_layout() {
+        let mut t = Table::new(&["grain", "metg_us"]);
+        t.row(&["4096".into(), "9.8".into()]);
+        t.row(&["16".into(), "3.9".into()]);
+        assert_eq!(t.to_dat(), "# grain metg_us\n4096 9.8\n16 3.9\n");
     }
 
     #[test]

@@ -10,9 +10,9 @@
 //! [`harness`]).
 //!
 //! The compute hot-spot is authored as a JAX/Pallas kernel, AOT-lowered to
-//! HLO text at build time, and executed from Rust through PJRT ([`runtime`]).
-//! A numerically-mirrored native kernel serves the sub-microsecond grain
-//! sizes that METG sweeps require (see DESIGN.md §3).
+//! HLO text at build time, and executed from Rust through PJRT ([`runtime`],
+//! feature `pjrt`). A numerically-mirrored native kernel serves the
+//! sub-microsecond grain sizes that METG sweeps require (see DESIGN.md §3).
 //!
 //! ## Quickstart
 //!
@@ -30,10 +30,37 @@
 //! let report = runtimes::run(SystemKind::CharmLike, &graph, 8).unwrap();
 //! println!("elapsed: {:?}", report.elapsed);
 //! ```
+//!
+//! ## The experiment engine
+//!
+//! The paper's artifacts (Fig 1 grain sweeps, Fig 2 node scaling, Table 2
+//! METG) are grids of *(system × pattern × grain × tasks-per-core ×
+//! nodes)* cells. The [`engine`] turns each cell into a serializable
+//! [`engine::Job`] with a stable content hash over its configuration; the
+//! [`coordinator`] runs job lists sharded (`--shard k/N` splits a campaign
+//! across invocations), executes simulator-backed jobs concurrently while
+//! reserving the whole machine for wall-clock-sensitive native jobs, and
+//! persists every [`engine::JobResult`] as a JSON record under `results/`
+//! keyed by content hash — so re-running a finished campaign is a pure
+//! cache hit (zero graph executions) and interrupted sweeps resume for
+//! free.
+//!
+//! Reproduce Fig 1 through the engine:
+//!
+//! ```text
+//! repro jobs list  --campaign fig1              # enumerate the cells
+//! repro jobs run   --campaign fig1              # execute + cache results/
+//! repro jobs run   --campaign fig1 --shard 1/2  # or split across hosts
+//! repro jobs run   --campaign fig1 --shard 2/2
+//! repro jobs table --campaign fig1              # render from results/
+//! repro jobs dat   --campaign fig1              # gnuplot-ready columns
+//! ```
 
 pub mod comm;
 pub mod config;
+pub mod coordinator;
 pub mod core;
+pub mod engine;
 pub mod experiments;
 pub mod harness;
 pub mod metg;
@@ -42,7 +69,8 @@ pub mod runtimes;
 pub mod sched;
 pub mod sim;
 
-/// Crate-wide result type.
+/// In-tree stand-ins for crates absent from the offline vendor set
+/// (deterministic PRNG, property-check harness).
 pub mod util;
 
 /// Crate-wide result type.

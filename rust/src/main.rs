@@ -11,7 +11,16 @@
 //! repro calibrate                                          # sim params
 //! repro peak                                               # peak FLOP/s
 //! repro dispatch                                           # PJRT overhead
+//!
+//! repro jobs list  [--campaign fig1|table2|fig2|patterns] [--shard k/N]
+//! repro jobs run   [--campaign ...] [--results DIR] [--shard k/N] [--threads N]
+//! repro jobs table [--campaign ...] [--results DIR]
+//! repro jobs dat   [--campaign ...] [--results DIR]
 //! ```
+//!
+//! The `jobs` family is the engine path: enumerate an artifact's cells as
+//! content-hashed jobs, execute them sharded with cached results under
+//! `results/`, and render tables/plot data from the store.
 //!
 //! The offline vendor set has no `clap`; the parser below is a minimal
 //! `--key value` scanner with a config-file base (`--config file.toml`).
@@ -19,9 +28,11 @@
 use std::collections::HashMap;
 
 use taskbench_amt::config::ExperimentConfig;
+use taskbench_amt::coordinator::{run_jobs, Shard};
 use taskbench_amt::core::{
     DependencePattern, GraphConfig, KernelConfig, TaskGraph,
 };
+use taskbench_amt::engine::{Campaign, CampaignKind, JobResult, ResultStore};
 use taskbench_amt::experiments;
 use taskbench_amt::metg::measure_peak_flops;
 use taskbench_amt::runtime::XlaTaskRuntime;
@@ -31,6 +42,7 @@ use taskbench_amt::sim::{calibrate, SimParams};
 fn usage() -> ! {
     eprintln!(
         "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
+         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|patterns] [--key value ...]\n\
          see the crate docs for details"
     );
     std::process::exit(2);
@@ -105,6 +117,12 @@ fn quick_grains() -> Vec<u64> {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
+    if cmd == "jobs" {
+        let Some(action) = args.get(1) else { usage() };
+        let m = parse_args(&args[2..]);
+        cmd_jobs(action, &m);
+        return;
+    }
     let m = parse_args(&args[1..]);
 
     match cmd.as_str() {
@@ -214,6 +232,146 @@ fn cmd_patterns(m: &HashMap<String, String>) {
     );
     println!("# Pattern ablation — METG (µs) per dependence pattern, 1 node");
     println!("{}", t.to_markdown());
+}
+
+/// Build the campaign a `jobs` invocation addresses from config + flags.
+fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaign {
+    let kind_id = m.get("campaign").map(String::as_str).unwrap_or("fig1");
+    let Some(kind) = CampaignKind::parse(kind_id) else {
+        eprintln!("unknown campaign `{kind_id}` (want fig1|table2|fig2|patterns)");
+        std::process::exit(2);
+    };
+    let steps = get(m, "steps", kind.default_steps());
+    let mut campaign =
+        Campaign::new(kind, cfg.systems.clone(), steps, &quick_grains());
+    campaign.nodes = get_list(m, "nodes", campaign.nodes.clone());
+    campaign.tasks_per_core =
+        get_list(m, "overdecompose", campaign.tasks_per_core.clone());
+    campaign
+}
+
+fn jobs_shard(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Shard {
+    let spec = m
+        .get("shard")
+        .cloned()
+        .or_else(|| cfg.shard.clone())
+        .unwrap_or_else(|| "1/1".to_string());
+    Shard::parse(&spec).unwrap_or_else(|e| {
+        eprintln!("bad --shard: {e:#}");
+        std::process::exit(2);
+    })
+}
+
+fn jobs_results(
+    campaign: &Campaign,
+    store: &ResultStore,
+) -> (HashMap<String, JobResult>, usize) {
+    let mut map = HashMap::new();
+    let mut missing = 0usize;
+    for job in campaign.jobs() {
+        match store.load(&job) {
+            Some(r) => {
+                map.insert(job.id(), r);
+            }
+            None => missing += 1,
+        }
+    }
+    (map, missing)
+}
+
+fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
+    let cfg = base_config(m);
+    let campaign = jobs_campaign(m, &cfg);
+    let shard = jobs_shard(m, &cfg);
+    let store = ResultStore::new(
+        m.get("results").cloned().unwrap_or_else(|| cfg.results_dir.clone()),
+    );
+    // `--calibrate` persists its params in the results directory
+    // (`_calibration.json`) and reuses them on later runs, so the params
+    // fingerprint — and with it caching, resume and sharding — stays
+    // stable across calibrated invocations. Only `run` may calibrate
+    // anew; `list` reads whatever is persisted so its cache column
+    // matches what `run` would actually do.
+    let params = if get(m, "calibrate", cfg.calibrate) {
+        match action {
+            "run" => taskbench_amt::engine::params::load_or_calibrate(&store)
+                .unwrap_or_else(|e| {
+                    eprintln!("calibration failed: {e:#}");
+                    std::process::exit(1);
+                }),
+            _ => taskbench_amt::engine::params::load_persisted(&store)
+                .unwrap_or_default(),
+        }
+    } else {
+        SimParams::default()
+    };
+    match action {
+        "list" => {
+            let jobs = campaign.jobs();
+            let mine = shard.select(&jobs);
+            let sim_fp = taskbench_amt::engine::job::params_fingerprint(&params);
+            for job in &mine {
+                let fp = taskbench_amt::engine::job::job_fingerprint_with(
+                    job, sim_fp,
+                );
+                let hit = if store.load_if(job, fp).is_some() {
+                    "cached"
+                } else {
+                    "-"
+                };
+                println!("{}  {:<6}  {}", job.id(), hit, job.spec.canonical());
+            }
+            eprintln!(
+                "{} jobs in campaign {} (shard {shard}: {})",
+                jobs.len(),
+                campaign.kind.id(),
+                mine.len(),
+            );
+        }
+        "run" => {
+            let threads = get(m, "threads", cfg.threads);
+            let jobs = campaign.jobs();
+            let summary =
+                run_jobs(&jobs, Some(&store), shard, threads, &params)
+                    .unwrap_or_else(|e| {
+                        eprintln!("jobs run failed: {e:#}");
+                        std::process::exit(1);
+                    });
+            println!(
+                "campaign {}: {} executed, {} cached (shard {shard}, results in {})",
+                campaign.kind.id(),
+                summary.executed,
+                summary.cached,
+                store.dir().display(),
+            );
+        }
+        "table" => {
+            let (map, missing) = jobs_results(&campaign, &store);
+            if missing > 0 {
+                eprintln!(
+                    "warning: {missing} cells not in {} yet (shown as `?`) — \
+                     run `repro jobs run` first",
+                    store.dir().display()
+                );
+            }
+            println!("# campaign {}", campaign.kind.id());
+            println!("{}", campaign.table(&map).to_markdown());
+        }
+        "dat" => {
+            let (map, missing) = jobs_results(&campaign, &store);
+            if missing > 0 {
+                eprintln!(
+                    "warning: {missing} cells not in {} yet (omitted)",
+                    store.dir().display()
+                );
+            }
+            print!("{}", campaign.dat(&map));
+        }
+        other => {
+            eprintln!("unknown jobs action `{other}`");
+            usage();
+        }
+    }
 }
 
 fn cmd_calibrate() {

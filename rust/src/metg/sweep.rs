@@ -1,10 +1,14 @@
 //! Grain-size sweeps: run a task graph at decreasing compute grain and
 //! record wall time / FLOP/s / granularity per grain (the data behind
 //! Fig 1a/1b).
+//!
+//! Each grain measurement is one engine cell
+//! ([`crate::engine::exec::native_grain_run`]); this module owns the
+//! sweep shape (ladder order, widths) on top of it.
 
-use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
-use crate::harness::{repeat_timing, Summary};
-use crate::runtimes::{run_with, RunOptions, SystemKind};
+use crate::core::DependencePattern;
+use crate::harness::Summary;
+use crate::runtimes::{RunOptions, SystemKind};
 
 /// One grain-size measurement.
 #[derive(Debug, Clone)]
@@ -71,31 +75,17 @@ pub fn sweep_grains(cfg: &SweepConfig) -> Vec<GrainRun> {
     grains
         .into_iter()
         .map(|g| {
-            let graph = TaskGraph::new(GraphConfig {
-                width: cfg.width(),
-                steps: cfg.steps,
-                dependence: cfg.pattern,
-                kernel: KernelConfig::compute_bound(g),
-                ..GraphConfig::default()
-            });
-            let mut opts = cfg.opts.clone();
-            opts.workers = cfg.workers;
-            opts.validate = false;
-            let sample = repeat_timing(cfg.reps, cfg.warmup, || {
-                run_with(cfg.system, &graph, &opts)
-                    .expect("runtime execution failed")
-                    .elapsed
-            });
-            let wall = sample.summary();
-            let tasks = graph.num_points();
-            GrainRun {
-                grain_iters: g,
-                tasks,
-                flops_per_sec: graph.total_flops() / wall.mean,
-                granularity_us: wall.mean * 1e6 * cfg.workers as f64
-                    / tasks as f64,
-                wall,
-            }
+            crate::engine::exec::native_grain_run(
+                cfg.system,
+                cfg.pattern,
+                cfg.workers,
+                cfg.tasks_per_core,
+                cfg.steps,
+                g,
+                cfg.reps,
+                cfg.warmup,
+                &cfg.opts,
+            )
         })
         .collect()
 }

@@ -1,19 +1,33 @@
 //! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
 //! them from the Rust hot path.
 //!
-//! Python runs only at build time (`make artifacts`); this module loads
-//! the HLO *text* those runs produced (text, not serialized proto — the
-//! bundled xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos),
+//! Python runs only at build time (`make artifacts`); the `pjrt` feature
+//! loads the HLO *text* those runs produced (text, not serialized proto —
+//! the bundled xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos),
 //! compiles it once on the PJRT CPU client, and exposes typed `execute`
 //! wrappers. One compiled executable per artifact.
+//!
+//! The default build carries no PJRT plugin (the `xla` bindings are not
+//! in the offline vendor set), so [`XlaTaskRuntime`] is a stub whose
+//! `load` fails with an actionable message; every caller falls back to
+//! the numerically-mirrored native kernel. Build with `--features pjrt`
+//! (after adding the `xla` dependency — see `rust/Cargo.toml`) for the
+//! real three-layer path.
 
 mod pool;
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
-use anyhow::{bail, Context};
+use std::path::PathBuf;
 
+#[cfg(feature = "pjrt")]
+pub use pjrt::XlaTaskRuntime;
 pub use pool::DispatchStats;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::XlaTaskRuntime;
 
 /// Tile shape of the compute kernel — must match `python/compile`.
 pub const TILE: (usize, usize) = (8, 128);
@@ -22,133 +36,19 @@ pub const TILE_ELEMS: usize = TILE.0 * TILE.1;
 /// Dependency-slab width of the task-body artifact.
 pub const K_MAX: usize = 4;
 
-/// Loaded + compiled artifacts.
-pub struct XlaTaskRuntime {
-    _client: xla::PjRtClient,
-    task_body: xla::PjRtLoadedExecutable,
-    compute_kernel: xla::PjRtLoadedExecutable,
-    memory_kernel: xla::PjRtLoadedExecutable,
-}
-
-fn load_exe(
-    client: &xla::PjRtClient,
-    dir: &Path,
-    name: &str,
-) -> anyhow::Result<xla::PjRtLoadedExecutable> {
-    let path = dir.join(format!("{name}.hlo.txt"));
-    if !path.exists() {
-        bail!(
-            "artifact {} not found — run `make artifacts` first",
-            path.display()
-        );
-    }
-    let proto = xla::HloModuleProto::from_text_file(
-        path.to_str().context("non-utf8 artifact path")?,
-    )
-    .with_context(|| format!("parsing {}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compiling {name}"))
-}
-
-impl XlaTaskRuntime {
-    /// Load all artifacts from `dir` (default: `artifacts/`).
-    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
-        let dir = dir.as_ref();
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let task_body = load_exe(&client, dir, "task_body")?;
-        let compute_kernel = load_exe(&client, dir, "compute_kernel")?;
-        let memory_kernel = load_exe(&client, dir, "memory_kernel")?;
-        Ok(Self { _client: client, task_body, compute_kernel, memory_kernel })
-    }
-
-    /// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("REPRO_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-
-    /// Execute the L2 task body: mix up to [`K_MAX`] dependency tiles and
-    /// run `iters` rounds of the L1 compute kernel.
-    ///
-    /// `deps` may hold fewer than `K_MAX` tiles; the mask is built
-    /// accordingly. Each tile must have [`TILE_ELEMS`] elements.
-    pub fn task_body(
-        &self,
-        deps: &[&[f32]],
-        coord: (u32, u32),
-        iters: i32,
-    ) -> anyhow::Result<Vec<f32>> {
-        if deps.len() > K_MAX {
-            bail!("task_body takes at most {K_MAX} deps, got {}", deps.len());
-        }
-        let mut slab = vec![0.0f32; K_MAX * TILE_ELEMS];
-        let mut mask = [0.0f32; K_MAX];
-        for (k, d) in deps.iter().enumerate() {
-            if d.len() != TILE_ELEMS {
-                bail!("dep {k} has {} elems, want {TILE_ELEMS}", d.len());
-            }
-            slab[k * TILE_ELEMS..(k + 1) * TILE_ELEMS].copy_from_slice(d);
-            mask[k] = 1.0;
-        }
-        let slab = xla::Literal::vec1(&slab).reshape(&[
-            K_MAX as i64,
-            TILE.0 as i64,
-            TILE.1 as i64,
-        ])?;
-        let mask = xla::Literal::vec1(&mask);
-        let coord = xla::Literal::vec1(&[coord.0 as f32, coord.1 as f32]);
-        let iters = xla::Literal::vec1(&[iters]).reshape(&[])?;
-        let result = self
-            .task_body
-            .execute::<xla::Literal>(&[slab, mask, coord, iters])?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
-    }
-
-    /// Execute the bare L1 compute kernel over one tile.
-    pub fn compute_kernel(&self, x: &[f32], iters: i32) -> anyhow::Result<Vec<f32>> {
-        if x.len() != TILE_ELEMS {
-            bail!("tile has {} elems, want {TILE_ELEMS}", x.len());
-        }
-        let x = xla::Literal::vec1(x).reshape(&[TILE.0 as i64, TILE.1 as i64])?;
-        let iters = xla::Literal::vec1(&[iters]).reshape(&[])?;
-        let result = self
-            .compute_kernel
-            .execute::<xla::Literal>(&[x, iters])?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
-    }
-
-    /// Execute the bare L1 memory-bound kernel over a (64, 128) block.
-    pub fn memory_kernel(&self, x: &[f32], iters: i32) -> anyhow::Result<Vec<f32>> {
-        if x.len() != 64 * 128 {
-            bail!("block has {} elems, want {}", x.len(), 64 * 128);
-        }
-        let x = xla::Literal::vec1(x).reshape(&[64, 128])?;
-        let iters = xla::Literal::vec1(&[iters]).reshape(&[])?;
-        let result = self
-            .memory_kernel
-            .execute::<xla::Literal>(&[x, iters])?[0][0]
-            .to_literal_sync()?;
-        Ok(result.to_tuple1()?.to_vec::<f32>()?)
-    }
-
-    /// Measure PJRT dispatch overhead: wall time of `n` zero-iteration
-    /// kernel executions (reported in EXPERIMENTS.md §Perf — this is why
-    /// sub-µs grains use the numerically-mirrored native kernel).
-    pub fn measure_dispatch_overhead(&self, n: usize) -> anyhow::Result<DispatchStats> {
-        pool::measure_dispatch(self, n)
-    }
+/// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+pub(crate) fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("REPRO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
 #[cfg(test)]
 mod tests {
     // Integration coverage for the PJRT path lives in
-    // `rust/tests/xla_parity.rs` (it needs `make artifacts`). Unit tests
-    // here only cover the pure helpers.
+    // `rust/tests/xla_parity.rs` (it needs `make artifacts` and the `pjrt`
+    // feature). Unit tests here only cover the pure helpers, and hold for
+    // both the real and the stub runtime.
     use super::*;
 
     #[test]

@@ -1,0 +1,128 @@
+//! The real PJRT-backed runtime (feature `pjrt`): compiles the AOT HLO
+//! artifacts on the PJRT CPU client and executes them.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use super::{DispatchStats, K_MAX, TILE, TILE_ELEMS};
+
+/// Loaded + compiled artifacts.
+pub struct XlaTaskRuntime {
+    _client: xla::PjRtClient,
+    task_body: xla::PjRtLoadedExecutable,
+    compute_kernel: xla::PjRtLoadedExecutable,
+    memory_kernel: xla::PjRtLoadedExecutable,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    if !path.exists() {
+        bail!(
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+    }
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {name}"))
+}
+
+impl XlaTaskRuntime {
+    /// Load all artifacts from `dir` (default: `artifacts/`).
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let task_body = load_exe(&client, dir, "task_body")?;
+        let compute_kernel = load_exe(&client, dir, "compute_kernel")?;
+        let memory_kernel = load_exe(&client, dir, "memory_kernel")?;
+        Ok(Self { _client: client, task_body, compute_kernel, memory_kernel })
+    }
+
+    /// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        super::default_artifact_dir()
+    }
+
+    /// Execute the L2 task body: mix up to [`K_MAX`] dependency tiles and
+    /// run `iters` rounds of the L1 compute kernel.
+    ///
+    /// `deps` may hold fewer than `K_MAX` tiles; the mask is built
+    /// accordingly. Each tile must have [`TILE_ELEMS`] elements.
+    pub fn task_body(
+        &self,
+        deps: &[&[f32]],
+        coord: (u32, u32),
+        iters: i32,
+    ) -> anyhow::Result<Vec<f32>> {
+        if deps.len() > K_MAX {
+            bail!("task_body takes at most {K_MAX} deps, got {}", deps.len());
+        }
+        let mut slab = vec![0.0f32; K_MAX * TILE_ELEMS];
+        let mut mask = [0.0f32; K_MAX];
+        for (k, d) in deps.iter().enumerate() {
+            if d.len() != TILE_ELEMS {
+                bail!("dep {k} has {} elems, want {TILE_ELEMS}", d.len());
+            }
+            slab[k * TILE_ELEMS..(k + 1) * TILE_ELEMS].copy_from_slice(d);
+            mask[k] = 1.0;
+        }
+        let slab = xla::Literal::vec1(&slab).reshape(&[
+            K_MAX as i64,
+            TILE.0 as i64,
+            TILE.1 as i64,
+        ])?;
+        let mask = xla::Literal::vec1(&mask);
+        let coord = xla::Literal::vec1(&[coord.0 as f32, coord.1 as f32]);
+        let iters = xla::Literal::vec1(&[iters]).reshape(&[])?;
+        let result = self
+            .task_body
+            .execute::<xla::Literal>(&[slab, mask, coord, iters])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Execute the bare L1 compute kernel over one tile.
+    pub fn compute_kernel(&self, x: &[f32], iters: i32) -> anyhow::Result<Vec<f32>> {
+        if x.len() != TILE_ELEMS {
+            bail!("tile has {} elems, want {TILE_ELEMS}", x.len());
+        }
+        let x = xla::Literal::vec1(x).reshape(&[TILE.0 as i64, TILE.1 as i64])?;
+        let iters = xla::Literal::vec1(&[iters]).reshape(&[])?;
+        let result = self
+            .compute_kernel
+            .execute::<xla::Literal>(&[x, iters])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Execute the bare L1 memory-bound kernel over a (64, 128) block.
+    pub fn memory_kernel(&self, x: &[f32], iters: i32) -> anyhow::Result<Vec<f32>> {
+        if x.len() != 64 * 128 {
+            bail!("block has {} elems, want {}", x.len(), 64 * 128);
+        }
+        let x = xla::Literal::vec1(x).reshape(&[64, 128])?;
+        let iters = xla::Literal::vec1(&[iters]).reshape(&[])?;
+        let result = self
+            .memory_kernel
+            .execute::<xla::Literal>(&[x, iters])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Measure PJRT dispatch overhead: wall time of `n` zero-iteration
+    /// kernel executions (reported in EXPERIMENTS.md §Perf — this is why
+    /// sub-µs grains use the numerically-mirrored native kernel).
+    pub fn measure_dispatch_overhead(&self, n: usize) -> anyhow::Result<DispatchStats> {
+        super::pool::measure_dispatch(self, n)
+    }
+}

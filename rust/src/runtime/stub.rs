@@ -1,0 +1,56 @@
+//! Stub runtime for builds without the `pjrt` feature.
+//!
+//! Keeps the [`XlaTaskRuntime`] API shape so tests, benches and examples
+//! compile unchanged; `load` always fails with an actionable message, and
+//! every caller takes its documented fallback (skip, or the native
+//! kernel).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::bail;
+
+use super::DispatchStats;
+
+/// API-compatible stand-in for the PJRT runtime. Cannot be constructed:
+/// [`XlaTaskRuntime::load`] always errors in this build.
+pub struct XlaTaskRuntime {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl XlaTaskRuntime {
+    /// Always fails: this build has no PJRT support compiled in.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        bail!(
+            "artifacts at {} need PJRT support, which this build lacks — \
+             run `make artifacts` and rebuild with `--features pjrt` \
+             (see rust/Cargo.toml for the required `xla` dependency)",
+            dir.as_ref().display()
+        );
+    }
+
+    /// Default artifacts directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        super::default_artifact_dir()
+    }
+
+    pub fn task_body(
+        &self,
+        _deps: &[&[f32]],
+        _coord: (u32, u32),
+        _iters: i32,
+    ) -> anyhow::Result<Vec<f32>> {
+        bail!("PJRT support not compiled in (enable the `pjrt` feature)");
+    }
+
+    pub fn compute_kernel(&self, _x: &[f32], _iters: i32) -> anyhow::Result<Vec<f32>> {
+        bail!("PJRT support not compiled in (enable the `pjrt` feature)");
+    }
+
+    pub fn memory_kernel(&self, _x: &[f32], _iters: i32) -> anyhow::Result<Vec<f32>> {
+        bail!("PJRT support not compiled in (enable the `pjrt` feature)");
+    }
+
+    pub fn measure_dispatch_overhead(&self, n: usize) -> anyhow::Result<DispatchStats> {
+        super::pool::measure_dispatch(self, n)
+    }
+}

@@ -39,9 +39,11 @@ pub enum SystemKind {
 }
 
 impl SystemKind {
+    /// Every system, in declaration order (the paper's table ordering) —
+    /// job enumeration and report rows rely on this being stable.
     pub fn all() -> Vec<SystemKind> {
         use SystemKind::*;
-        vec![CharmLike, HpxDistributed, HpxLocal, MpiLike, OpenMpLike, Hybrid]
+        vec![CharmLike, HpxLocal, HpxDistributed, MpiLike, OpenMpLike, Hybrid]
     }
 
     /// Display name matching the paper's tables.

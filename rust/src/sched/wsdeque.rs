@@ -6,7 +6,7 @@
 //! implemented here, with a growable circular buffer.
 
 use std::sync::atomic::{AtomicIsize, AtomicPtr, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 struct Buffer<T> {
     cap: usize,
@@ -39,7 +39,7 @@ struct Inner<T> {
     buf: AtomicPtr<Buffer<T>>,
     /// Retired buffers kept until the deque drops (simple safe reclamation:
     /// grows only on resize, which is rare and bounded by log2(max_len)).
-    retired: crossbeam_utils::sync::ShardedLock<Vec<*mut Buffer<T>>>,
+    retired: RwLock<Vec<*mut Buffer<T>>>,
 }
 
 unsafe impl<T: Send> Send for Inner<T> {}
@@ -68,7 +68,7 @@ impl<T: Send> Worker<T> {
             top: AtomicIsize::new(0),
             bottom: AtomicIsize::new(0),
             buf: AtomicPtr::new(buf),
-            retired: crossbeam_utils::sync::ShardedLock::new(Vec::new()),
+            retired: RwLock::new(Vec::new()),
         });
         (Worker { inner: inner.clone() }, Stealer { inner })
     }

@@ -1,0 +1,186 @@
+//! Engine acceptance tests (ISSUE 1):
+//!
+//! * job enumeration is deterministic and collision-free;
+//! * a completed job set re-runs as pure cache hits (zero graph
+//!   executions);
+//! * a 2-shard split is a partition (disjoint, covering) whose merged
+//!   results directory is byte-identical to the serial run's.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+use taskbench_amt::coordinator::{run_jobs, Shard};
+use taskbench_amt::engine::{Campaign, CampaignKind, Job, ResultStore};
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("taskbench_engine_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// A campaign small enough for the DES to chew through in milliseconds.
+fn small_campaign() -> Campaign {
+    let mut c = Campaign::new(
+        CampaignKind::Table2,
+        vec![SystemKind::MpiLike, SystemKind::CharmLike],
+        6,
+        &[1 << 4, 1 << 8, 1 << 12],
+    );
+    c.cores_per_node = 4;
+    c.tasks_per_core = vec![1, 2];
+    c
+}
+
+#[test]
+fn enumeration_is_deterministic_and_collision_free() {
+    let mut seen: HashMap<String, String> = HashMap::new();
+    for kind in CampaignKind::all() {
+        let mut c = Campaign::new(kind, SystemKind::all(), 10, &[16, 256, 4096]);
+        c.cores_per_node = 4;
+        let a: Vec<String> = c.jobs().iter().map(Job::id).collect();
+        let b: Vec<String> = c.jobs().iter().map(Job::id).collect();
+        assert_eq!(a, b, "{kind:?} enumeration not deterministic");
+        for job in c.jobs() {
+            let canonical = job.spec.canonical();
+            if let Some(prev) = seen.insert(job.id(), canonical.clone()) {
+                assert_eq!(
+                    prev,
+                    canonical,
+                    "hash collision: {} for two distinct cells",
+                    job.id()
+                );
+            }
+        }
+    }
+    // The union across campaigns is a real grid, not a handful of cells.
+    assert!(seen.len() > 100, "only {} distinct cells", seen.len());
+}
+
+#[test]
+fn rerun_of_completed_campaign_is_pure_cache_hit() {
+    let dir = tmpdir("cache_hit");
+    let store = ResultStore::new(&dir);
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let params = SimParams::default();
+
+    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    assert_eq!(first.executed, jobs.len());
+    assert_eq!(first.cached, 0);
+
+    // Re-run: zero task-graph executions, everything from the store.
+    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    assert_eq!(second.executed, 0, "re-run must not execute any graphs");
+    assert_eq!(second.cached, jobs.len());
+    assert_eq!(first.results, second.results);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interrupted_campaign_resumes_only_the_missing_cells() {
+    let dir = tmpdir("resume");
+    let store = ResultStore::new(&dir);
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let params = SimParams::default();
+
+    run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    // Simulate an interruption that lost two records.
+    for job in [&jobs[0], &jobs[3]] {
+        std::fs::remove_file(store.path_for(job)).unwrap();
+    }
+    let resumed = run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    assert_eq!(resumed.executed, 2);
+    assert_eq!(resumed.cached, jobs.len() - 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn two_shards_partition_and_merge_byte_identically() {
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let params = SimParams::default();
+
+    // Partition: disjoint and covering.
+    let s1 = Shard::parse("1/2").unwrap();
+    let s2 = Shard::parse("2/2").unwrap();
+    let ids1: HashSet<String> = s1.select(&jobs).iter().map(|j| j.id()).collect();
+    let ids2: HashSet<String> = s2.select(&jobs).iter().map(|j| j.id()).collect();
+    assert!(ids1.is_disjoint(&ids2), "shards overlap");
+    assert_eq!(
+        ids1.len() + ids2.len(),
+        jobs.len(),
+        "shards do not cover the job list"
+    );
+
+    // Serial run vs merged sharded run, byte for byte.
+    let serial_dir = tmpdir("serial");
+    let sharded_dir = tmpdir("sharded");
+    let serial = ResultStore::new(&serial_dir);
+    let sharded = ResultStore::new(&sharded_dir);
+    run_jobs(&jobs, Some(&serial), Shard::full(), 1, &params).unwrap();
+    run_jobs(&jobs, Some(&sharded), s1, 2, &params).unwrap();
+    run_jobs(&jobs, Some(&sharded), s2, 2, &params).unwrap();
+
+    let files = |dir: &PathBuf| -> Vec<(String, Vec<u8>)> {
+        let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .map(|p| {
+                (
+                    p.file_name().unwrap().to_string_lossy().into_owned(),
+                    std::fs::read(&p).unwrap(),
+                )
+            })
+            .collect();
+        out.sort();
+        out
+    };
+    assert_eq!(
+        files(&serial_dir),
+        files(&sharded_dir),
+        "merged sharded results differ from the serial run"
+    );
+    let _ = std::fs::remove_dir_all(&serial_dir);
+    let _ = std::fs::remove_dir_all(&sharded_dir);
+}
+
+#[test]
+fn table_renders_from_store_without_executing() {
+    let dir = tmpdir("table");
+    let store = ResultStore::new(&dir);
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let params = SimParams::default();
+    run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+
+    let map: HashMap<String, _> = jobs
+        .iter()
+        .filter_map(|j| store.load(j).map(|r| (j.id(), r)))
+        .collect();
+    assert_eq!(map.len(), jobs.len());
+    let md = campaign.table(&map).to_markdown();
+    assert!(md.contains("MPI (like)"), "{md}");
+    assert!(md.contains("Charm++ (like)"), "{md}");
+    assert!(!md.contains('?'), "complete store must fill every cell: {md}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_survives_unrelated_garbage_files() {
+    let dir = tmpdir("garbage");
+    let store = ResultStore::new(&dir);
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let params = SimParams::default();
+    run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    std::fs::write(dir.join("README.txt"), "not a record").unwrap();
+    std::fs::write(dir.join("broken.json"), "{oops").unwrap();
+    assert_eq!(store.load_all().len(), jobs.len());
+    let summary = run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    assert_eq!(summary.executed, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
