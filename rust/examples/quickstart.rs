@@ -33,9 +33,9 @@ fn main() -> anyhow::Result<()> {
         println!(
             "{:<24} {:>10.3} ms   granularity {:>8.2} µs   checksum {:.6e}  [validated]",
             report.system.name(),
-            report.elapsed.as_secs_f64() * 1e3,
+            report.wall_secs * 1e3,
             report.task_granularity_us(workers),
-            report.checksum,
+            report.checksum.unwrap_or(f64::NAN),
         );
     }
     Ok(())

@@ -9,17 +9,20 @@
 //! * **Caching** — jobs whose content hash already has a record in the
 //!   [`ResultStore`] are skipped outright (zero graph executions); an
 //!   interrupted campaign resumes from its last persisted cell.
-//! * **Scheduling** — simulator-backed and validation-only jobs are safe
-//!   to overlap and run concurrently on a scoped thread pool;
-//!   wall-clock-sensitive native jobs run afterwards, serially, with the
-//!   whole machine to themselves so the timing they report is clean.
+//! * **Scheduling** — each job is routed to its
+//!   [`Backend`](crate::engine::backend::Backend) (`ExecMode::Sim` → the
+//!   DES, `Native`/`Validate` → the real runtimes), and the backend's
+//!   `concurrent_safe` capability flag decides the schedule: overlappable
+//!   jobs run concurrently on a scoped thread pool; wall-clock-sensitive
+//!   native jobs run afterwards, serially, with the whole machine to
+//!   themselves so the timing they report is clean.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::Context;
 
-use crate::engine::exec::execute_job;
+use crate::engine::backend::Backends;
 use crate::engine::job::{job_fingerprint_with, params_fingerprint, Job, JobResult};
 use crate::engine::store::ResultStore;
 use crate::sim::SimParams;
@@ -85,8 +88,9 @@ pub struct RunSummary {
 }
 
 /// Run this shard's slice of `jobs`: consult the store, execute the
-/// misses (sim jobs on `threads` workers, native jobs serially with the
-/// machine reserved), persist, and return everything in order.
+/// misses on each job's backend (overlappable jobs on `threads` workers,
+/// exclusive native jobs serially with the machine reserved), persist,
+/// and return everything in order.
 ///
 /// `threads == 0` means one worker per available core.
 pub fn run_jobs(
@@ -96,52 +100,55 @@ pub fn run_jobs(
     threads: usize,
     params: &SimParams,
 ) -> crate::Result<RunSummary> {
+    let backends = Backends::new(params);
     let sim_fp = params_fingerprint(params);
     let job_fp = |job: &Job| job_fingerprint_with(job, sim_fp);
     let mine = shard.select(jobs);
     let mut slots: Vec<Option<JobResult>> = vec![None; mine.len()];
-    let (mut todo_sim, mut todo_native) = (Vec::new(), Vec::new());
+    let (mut todo_concurrent, mut todo_exclusive) = (Vec::new(), Vec::new());
     for (i, job) in mine.iter().enumerate() {
         // A record counts as a hit only if it was computed under the
         // params its mode depends on; anything else re-runs + overwrites.
         if let Some(r) = store.and_then(|s| s.load_if(job, job_fp(job))) {
             slots[i] = Some(r);
-        } else if job.spec.mode.is_concurrent_safe() {
-            todo_sim.push(i);
+        } else if backends.for_job(job).concurrent_safe(job) {
+            todo_concurrent.push(i);
         } else {
-            todo_native.push(i);
+            todo_exclusive.push(i);
         }
     }
-    let executed = todo_sim.len() + todo_native.len();
+    let executed = todo_concurrent.len() + todo_exclusive.len();
     let cached = mine.len() - executed;
 
-    // Execute one cell and persist it immediately, so an interrupted or
-    // partially-failed campaign keeps every completed record on disk.
+    // Execute one cell on its backend and persist it immediately, so an
+    // interrupted or partially-failed campaign keeps every completed
+    // record on disk.
     let run_one = |i: usize| -> crate::Result<JobResult> {
-        let r = execute_job(mine[i], params)?;
+        let r = backends.run(mine[i])?;
         if let Some(s) = store {
             s.save(mine[i], &r, job_fp(mine[i]))?;
         }
         Ok(r)
     };
 
-    // Simulator-backed jobs: deterministic pure functions, run them wide.
+    // Overlappable jobs (sim cells are deterministic pure functions;
+    // validation cells measure correctness, not time): run them wide.
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let threads =
-        (if threads == 0 { auto } else { threads }).min(todo_sim.len().max(1));
+    let threads = (if threads == 0 { auto } else { threads })
+        .min(todo_concurrent.len().max(1));
     if threads <= 1 {
-        for &i in &todo_sim {
+        for &i in &todo_concurrent {
             slots[i] = Some(run_one(i)?);
         }
     } else {
         let next = AtomicUsize::new(0);
         let done: Mutex<Vec<(usize, crate::Result<JobResult>)>> =
-            Mutex::new(Vec::with_capacity(todo_sim.len()));
+            Mutex::new(Vec::with_capacity(todo_concurrent.len()));
         std::thread::scope(|scope| {
             for _ in 0..threads {
                 scope.spawn(|| loop {
                     let k = next.fetch_add(1, Ordering::Relaxed);
-                    let Some(&i) = todo_sim.get(k) else { break };
+                    let Some(&i) = todo_concurrent.get(k) else { break };
                     let r = run_one(i);
                     done.lock().unwrap().push((i, r));
                 });
@@ -152,8 +159,9 @@ pub fn run_jobs(
         }
     }
 
-    // Native jobs: exclusive, serial — their wall times are the data.
-    for &i in &todo_native {
+    // Exclusive jobs (native wall clocks): serial — their times are the
+    // data, so the machine is theirs alone.
+    for &i in &todo_exclusive {
         slots[i] = Some(run_one(i)?);
     }
 
@@ -171,13 +179,14 @@ mod tests {
     use super::*;
     use crate::core::DependencePattern;
     use crate::engine::job::{ExecMode, JobSpec};
-    use crate::runtimes::SystemKind;
+    use crate::runtimes::{SystemConfig, SystemKind};
 
     fn sim_jobs(n: usize) -> Vec<Job> {
         (0..n)
             .map(|i| {
                 Job::new(JobSpec {
                     system: SystemKind::MpiLike,
+                    config: SystemConfig::default(),
                     pattern: DependencePattern::Stencil1D,
                     nodes: 1,
                     cores_per_node: 4,
@@ -228,5 +237,23 @@ mod tests {
             assert_eq!(ja, jb);
             assert_eq!(ra, rb);
         }
+    }
+
+    #[test]
+    fn mixed_backend_job_list_routes_and_completes() {
+        // A sim cell and a native cell of the same shape: both execute,
+        // through different backends, in one run_jobs call.
+        let mut jobs = sim_jobs(1);
+        let mut native = jobs[0].clone();
+        native.spec.mode = ExecMode::Native;
+        native.spec.cores_per_node = 2;
+        jobs.push(Job::new(native.spec));
+        let p = SimParams::default();
+        let summary = run_jobs(&jobs, None, Shard::full(), 2, &p).unwrap();
+        assert_eq!(summary.executed, 2);
+        let (sim_r, native_r) = (&summary.results[0].1, &summary.results[1].1);
+        assert_eq!(sim_r.tasks, 4 * 6);
+        assert_eq!(native_r.tasks, 2 * 6);
+        assert!(native_r.wall_secs > 0.0 && native_r.peak_flops > 0.0);
     }
 }

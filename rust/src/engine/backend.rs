@@ -1,0 +1,308 @@
+//! Execution backends: *how a job is measured*, as a first-class,
+//! pluggable dimension of the engine.
+//!
+//! A [`Backend`] turns one [`Job`] plus its materialized [`TaskGraph`]
+//! into a [`Measurement`] — the single result type shared by the
+//! discrete-event simulator and the real in-process runtimes. Two
+//! implementations ship:
+//!
+//! * [`SimBackend`] — replays the cell on the DES over the job's
+//!   simulated machine. Deterministic and side-effect-free, so the
+//!   coordinator runs any number of these concurrently.
+//! * [`NativeBackend`] — runs the cell on the real thread-based runtimes
+//!   of this host. Wall-clock measurements (`ExecMode::Native`) declare
+//!   themselves non-concurrent via [`Backend::concurrent_safe`] so the
+//!   coordinator reserves the whole machine; validation jobs
+//!   (`ExecMode::Validate`) measure correctness, not time, and overlap
+//!   freely.
+//!
+//! [`Backends`] bundles both and routes each job by its `ExecMode`; it is
+//! what the coordinator holds. Everything upstream (campaigns, the METG
+//! sweep, the CLI) is backend-agnostic.
+
+use crate::core::{
+    oracle_outputs, validate_execution, GraphConfig, KernelConfig, TaskGraph,
+};
+use crate::metg::measure_peak_flops;
+use crate::runtimes::{run_with, Measurement, RunOptions};
+use crate::sim::{simulate, Machine, SimParams};
+
+use super::job::{ExecMode, Job, JobResult, JobSpec};
+
+/// One way of measuring a benchmark cell.
+pub trait Backend: Sync {
+    /// Short identifier for listings and diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Capability flag: may the coordinator run this job alongside
+    /// others? Backends whose measurements are wall-clock-sensitive
+    /// return `false` for jobs that need the machine to themselves.
+    fn concurrent_safe(&self, job: &Job) -> bool {
+        let _ = job;
+        true
+    }
+
+    /// Execute `job` over its materialized `graph`.
+    fn execute(&self, job: &Job, graph: &TaskGraph) -> crate::Result<Measurement>;
+}
+
+/// Materialize the task graph a job spec describes. Both backends run
+/// the *same* graph for the same cell — that is what makes native and
+/// simulated measurements comparable (and their checksums equal).
+pub fn job_graph(spec: &JobSpec) -> TaskGraph {
+    TaskGraph::new(GraphConfig {
+        width: spec.nodes * spec.cores_per_node * spec.tasks_per_core,
+        steps: spec.steps,
+        dependence: spec.pattern,
+        kernel: KernelConfig::compute_bound(spec.grain),
+        ..GraphConfig::default()
+    })
+}
+
+/// Total cores of the cell's (simulated or real) machine.
+pub fn job_cores(spec: &JobSpec) -> usize {
+    spec.nodes * spec.cores_per_node
+}
+
+/// Peak FLOP/s of the simulated machine (the DES equivalent of the peak
+/// calibration: every core computing, zero overhead).
+pub fn sim_peak_flops(machine: Machine, params: &SimParams) -> f64 {
+    let flops_per_iter =
+        (crate::core::FLOPS_PER_ELEM_PER_ITER * params.payload_bytes / 4) as f64;
+    machine.total_cores() as f64 * flops_per_iter / (params.ns_per_iter * 1e-9)
+}
+
+/// Discrete-event-simulation backend.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    pub params: SimParams,
+    /// Also replay the sequential oracle and attach the expected final
+    /// checksum. This executes every kernel for real — test-sized graphs
+    /// only; campaign cells leave it off.
+    pub oracle_checksum: bool,
+}
+
+impl SimBackend {
+    pub fn new(params: SimParams) -> SimBackend {
+        SimBackend { params, oracle_checksum: false }
+    }
+
+    pub fn with_oracle_checksum(mut self, on: bool) -> SimBackend {
+        self.oracle_checksum = on;
+        self
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute(&self, job: &Job, graph: &TaskGraph) -> crate::Result<Measurement> {
+        let s = &job.spec;
+        anyhow::ensure!(
+            s.mode == ExecMode::Sim,
+            "sim backend cannot execute {} jobs",
+            s.mode.id()
+        );
+        let machine = Machine::new(s.nodes, s.cores_per_node);
+        let mut m = simulate(graph, s.system, machine, &self.params, &s.config);
+        m.peak_flops = sim_peak_flops(machine, &self.params);
+        if self.oracle_checksum {
+            m.checksum = Some(oracle_outputs(graph).final_checksum(graph));
+        }
+        Ok(m)
+    }
+}
+
+/// Real in-process runtime backend (this host's threads).
+#[derive(Debug)]
+pub struct NativeBackend {
+    /// Attach peak FLOP/s to native measurements (METG normalization).
+    /// Off → peak stays 0.0 (sweeps that don't need it skip the cost).
+    measure_peak: bool,
+    /// Peak FLOP/s per worker count: the all-core calibration kernel is
+    /// expensive and constant per (host, cores), so a campaign measures
+    /// it once, not once per cell.
+    peak_cache: std::sync::Mutex<std::collections::HashMap<usize, f64>>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self {
+            measure_peak: true,
+            peak_cache: std::sync::Mutex::new(Default::default()),
+        }
+    }
+}
+
+impl NativeBackend {
+    /// A native backend that skips the peak-FLOP/s calibration.
+    pub fn without_peak() -> Self {
+        Self { measure_peak: false, ..Default::default() }
+    }
+
+    fn peak_for(&self, cores: usize) -> f64 {
+        *self
+            .peak_cache
+            .lock()
+            .unwrap()
+            .entry(cores)
+            .or_insert_with(|| {
+                measure_peak_flops(cores, 16, 1 << 20).flops_per_sec
+            })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn concurrent_safe(&self, job: &Job) -> bool {
+        // Wall-clock measurements need exclusive use of the machine;
+        // validation jobs measure correctness and overlap freely.
+        job.spec.mode.is_concurrent_safe()
+    }
+
+    fn execute(&self, job: &Job, graph: &TaskGraph) -> crate::Result<Measurement> {
+        let s = &job.spec;
+        anyhow::ensure!(
+            s.nodes == 1,
+            "native jobs are single-node (got {} nodes)",
+            s.nodes
+        );
+        let opts = RunOptions::new(s.cores_per_node).with_config(&s.config);
+        match s.mode {
+            ExecMode::Sim => {
+                anyhow::bail!("native backend cannot execute sim jobs")
+            }
+            ExecMode::Native => {
+                for _ in 0..s.warmup {
+                    run_with(s.system, graph, &opts)?;
+                }
+                let mut walls = Vec::with_capacity(s.reps.max(1));
+                let mut last: Option<Measurement> = None;
+                for _ in 0..s.reps.max(1) {
+                    let m = run_with(s.system, graph, &opts)?;
+                    walls.push(m.wall_secs);
+                    last = Some(m);
+                }
+                let mut m = last.expect("reps >= 1");
+                m.wall_secs = crate::harness::mean(&walls);
+                m.wall_samples = walls;
+                if self.measure_peak {
+                    m.peak_flops = self.peak_for(s.cores_per_node);
+                }
+                Ok(m)
+            }
+            ExecMode::Validate => {
+                let opts = opts.with_validate(true);
+                let m = run_with(s.system, graph, &opts)?;
+                let records =
+                    m.records.as_ref().expect("validate mode always records");
+                validate_execution(graph, records)
+                    .map_err(|e| anyhow::anyhow!("validation failed: {e}"))?;
+                // Validation wall time is not a measurement; peak stays 0.
+                Ok(m)
+            }
+        }
+    }
+}
+
+/// The engine's backend set: one instance of each, routed by `ExecMode`.
+#[derive(Debug)]
+pub struct Backends {
+    pub sim: SimBackend,
+    pub native: NativeBackend,
+}
+
+impl Backends {
+    pub fn new(params: &SimParams) -> Backends {
+        Backends {
+            sim: SimBackend::new(*params),
+            native: NativeBackend::default(),
+        }
+    }
+
+    /// The backend that measures `job`.
+    pub fn for_job(&self, job: &Job) -> &dyn Backend {
+        match job.spec.mode {
+            ExecMode::Sim => &self.sim,
+            ExecMode::Native | ExecMode::Validate => &self.native,
+        }
+    }
+
+    /// Materialize the job's graph, execute it on the right backend, and
+    /// normalize the measurement into the persisted result form.
+    pub fn run(&self, job: &Job) -> crate::Result<JobResult> {
+        let graph = job_graph(&job.spec);
+        let m = self.for_job(job).execute(job, &graph)?;
+        Ok(JobResult::from_measurement(&m, job_cores(&job.spec)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DependencePattern;
+    use crate::runtimes::{SystemConfig, SystemKind};
+
+    fn spec(mode: ExecMode) -> JobSpec {
+        JobSpec {
+            system: SystemKind::MpiLike,
+            config: SystemConfig::default(),
+            pattern: DependencePattern::Stencil1D,
+            nodes: 1,
+            cores_per_node: 3,
+            tasks_per_core: 2,
+            steps: 5,
+            grain: 8,
+            mode,
+            reps: 1,
+            warmup: 0,
+        }
+    }
+
+    #[test]
+    fn backends_route_by_mode() {
+        let b = Backends::new(&SimParams::default());
+        assert_eq!(b.for_job(&Job::new(spec(ExecMode::Sim))).name(), "sim");
+        assert_eq!(b.for_job(&Job::new(spec(ExecMode::Native))).name(), "native");
+        assert_eq!(
+            b.for_job(&Job::new(spec(ExecMode::Validate))).name(),
+            "native"
+        );
+    }
+
+    #[test]
+    fn capability_flags_match_the_scheduling_contract() {
+        let b = Backends::new(&SimParams::default());
+        let sim = Job::new(spec(ExecMode::Sim));
+        let native = Job::new(spec(ExecMode::Native));
+        let validate = Job::new(spec(ExecMode::Validate));
+        assert!(b.for_job(&sim).concurrent_safe(&sim));
+        assert!(!b.for_job(&native).concurrent_safe(&native));
+        assert!(b.for_job(&validate).concurrent_safe(&validate));
+    }
+
+    #[test]
+    fn backends_reject_foreign_modes() {
+        let b = Backends::new(&SimParams::default());
+        let sim_job = Job::new(spec(ExecMode::Sim));
+        let native_job = Job::new(spec(ExecMode::Native));
+        let graph = job_graph(&sim_job.spec);
+        assert!(b.native.execute(&sim_job, &graph).is_err());
+        assert!(b.sim.execute(&native_job, &graph).is_err());
+    }
+
+    #[test]
+    fn job_graph_width_covers_the_whole_machine() {
+        let mut s = spec(ExecMode::Sim);
+        s.nodes = 2;
+        s.cores_per_node = 4;
+        s.tasks_per_core = 3;
+        assert_eq!(job_graph(&s).width(), 24);
+        assert_eq!(job_cores(&s), 8);
+    }
+}

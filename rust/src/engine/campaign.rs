@@ -2,17 +2,25 @@
 //!
 //! A campaign enumerates every benchmark cell of one artifact (Fig 1
 //! grain sweep, Table 2 METG × overdecomposition, Fig 2 node scaling, the
+//! Fig 3 Charm++ build ablation, the §5.2 HPX work-stealing ablation, the
 //! beyond-the-paper pattern ablation) as [`Job`]s, and renders tables /
 //! gnuplot data from whatever subset of results a store holds. Rendering
 //! never executes anything — `jobs table` after a partial `jobs run`
 //! shows `?` for the missing cells instead of recomputing them.
+//!
+//! Two engine dimensions are campaign axes here: the execution backend
+//! ([`Campaign::mode`] — `jobs run --native` flips a whole campaign from
+//! `SimBackend` to `NativeBackend`, caching native cells under their own
+//! fingerprints) and the system build config ([`Campaign::configs`] —
+//! Fig 3 and the HPX ablation are ordinary campaigns whose cells differ
+//! only in [`SystemConfig`]).
 
 use std::collections::HashMap;
 
 use crate::core::DependencePattern;
 use crate::harness::report::Table;
 use crate::metg::{metg_from_curve, GrainRun};
-use crate::runtimes::SystemKind;
+use crate::runtimes::{SystemConfig, SystemKind};
 
 use super::job::{ExecMode, Job, JobResult, JobSpec};
 
@@ -25,6 +33,10 @@ pub enum CampaignKind {
     Table2,
     /// Fig 2: METG per system × node count, fixed overdecomposition.
     Fig2,
+    /// Fig 3 / §5.1: Charm++ build-option ablation × grain sweep, 8 nodes.
+    Fig3,
+    /// §5.2: HPX work-stealing on/off × grain sweep, overdecomposed.
+    HpxAblation,
     /// §6.3 outlook: METG per system × dependence pattern, 1 node.
     Patterns,
 }
@@ -32,7 +44,7 @@ pub enum CampaignKind {
 impl CampaignKind {
     pub fn all() -> Vec<CampaignKind> {
         use CampaignKind::*;
-        vec![Fig1, Table2, Fig2, Patterns]
+        vec![Fig1, Table2, Fig2, Fig3, HpxAblation, Patterns]
     }
 
     pub fn id(&self) -> &'static str {
@@ -40,6 +52,8 @@ impl CampaignKind {
             CampaignKind::Fig1 => "fig1",
             CampaignKind::Table2 => "table2",
             CampaignKind::Fig2 => "fig2",
+            CampaignKind::Fig3 => "fig3",
+            CampaignKind::HpxAblation => "hpx_ablation",
             CampaignKind::Patterns => "patterns",
         }
     }
@@ -51,9 +65,9 @@ impl CampaignKind {
     /// Steps the paper-matching drivers use for this artifact.
     pub fn default_steps(&self) -> usize {
         match self {
-            CampaignKind::Fig1 | CampaignKind::Table2 => 100,
+            CampaignKind::Fig1 | CampaignKind::Table2 | CampaignKind::Fig3 => 100,
             CampaignKind::Fig2 => 50,
-            CampaignKind::Patterns => 60,
+            CampaignKind::HpxAblation | CampaignKind::Patterns => 60,
         }
     }
 }
@@ -68,14 +82,24 @@ pub struct Campaign {
     pub steps: usize,
     /// Grain ladder, held sorted descending (the sweep order).
     pub grains: Vec<u64>,
-    /// Node counts (Fig 2; `[1]` elsewhere).
+    /// Node counts (Fig 2; `[1]` elsewhere; `[8]` for Fig 3).
     pub nodes: Vec<usize>,
     /// Overdecomposition factors (Table 2; `[1]` or `[tpc]` elsewhere).
     pub tasks_per_core: Vec<usize>,
+    /// Labelled system build configs. One default entry for most kinds;
+    /// the five Fig 3 builds / the two HPX stealing variants for the
+    /// ablation kinds. The first entry is the reference row.
+    pub configs: Vec<(String, SystemConfig)>,
+    /// Which backend measures the cells (`jobs run --native` flips this
+    /// campaign-wide; ids change with it, so sim and native results for
+    /// the same cell coexist in one store).
+    pub mode: ExecMode,
 }
 
 impl Campaign {
-    /// Campaign with the paper-matching defaults for `kind`.
+    /// Campaign with the paper-matching defaults for `kind`. Ablation
+    /// kinds pin their own system under test (Charm++ for Fig 3, HPX
+    /// local for the stealing ablation) regardless of `systems`.
     pub fn new(
         kind: CampaignKind,
         systems: Vec<SystemKind>,
@@ -85,21 +109,37 @@ impl Campaign {
         let mut grains = grains.to_vec();
         grains.sort_unstable_by(|a, b| b.cmp(a));
         grains.dedup();
+        let label = |(n, c): (&'static str, SystemConfig)| (n.to_string(), c);
         Campaign {
             kind,
-            systems,
+            systems: match kind {
+                CampaignKind::Fig3 => vec![SystemKind::CharmLike],
+                CampaignKind::HpxAblation => vec![SystemKind::HpxLocal],
+                _ => systems,
+            },
             cores_per_node: 48,
             steps,
             grains,
             nodes: match kind {
                 CampaignKind::Fig2 => vec![1, 2, 4, 8],
+                CampaignKind::Fig3 => vec![8],
                 _ => vec![1],
             },
             tasks_per_core: match kind {
                 CampaignKind::Table2 => vec![1, 8, 16],
-                CampaignKind::Fig2 => vec![8],
+                CampaignKind::Fig2 | CampaignKind::HpxAblation => vec![8],
                 _ => vec![1],
             },
+            configs: match kind {
+                CampaignKind::Fig3 => {
+                    SystemConfig::fig3_builds().into_iter().map(label).collect()
+                }
+                CampaignKind::HpxAblation => {
+                    SystemConfig::hpx_ablation().into_iter().map(label).collect()
+                }
+                _ => vec![("default".to_string(), SystemConfig::default())],
+            },
+            mode: ExecMode::Sim,
         }
     }
 
@@ -124,8 +164,39 @@ impl Campaign {
         self.tasks_per_core.first().copied().unwrap_or(1)
     }
 
-    /// The job for one cell. Every caller (enumeration, rendering, the
-    /// experiments drivers) builds cells through here so ids always agree.
+    /// The build config a single-config renderer addresses.
+    pub(crate) fn render_config(&self) -> SystemConfig {
+        self.configs.first().map(|(_, c)| *c).unwrap_or_default()
+    }
+
+    /// The job for one cell at an explicit build config. Every caller
+    /// (enumeration, rendering, the experiments drivers) builds cells
+    /// through here so ids always agree.
+    pub fn job_for_config(
+        &self,
+        system: SystemKind,
+        pattern: DependencePattern,
+        nodes: usize,
+        tasks_per_core: usize,
+        grain: u64,
+        config: SystemConfig,
+    ) -> Job {
+        Job::new(JobSpec {
+            system,
+            config,
+            pattern,
+            nodes,
+            cores_per_node: self.cores_per_node,
+            tasks_per_core,
+            steps: self.steps,
+            grain,
+            mode: self.mode,
+            reps: 1,
+            warmup: 0,
+        })
+    }
+
+    /// [`Campaign::job_for_config`] at the campaign's reference config.
     pub fn job_for(
         &self,
         system: SystemKind,
@@ -134,18 +205,14 @@ impl Campaign {
         tasks_per_core: usize,
         grain: u64,
     ) -> Job {
-        Job::new(JobSpec {
+        self.job_for_config(
             system,
             pattern,
             nodes,
-            cores_per_node: self.cores_per_node,
             tasks_per_core,
-            steps: self.steps,
             grain,
-            mode: ExecMode::Sim,
-            reps: 1,
-            warmup: 0,
-        })
+            self.render_config(),
+        )
     }
 
     /// Node counts [`Campaign::jobs`] enumerates — only Fig 2 sweeps the
@@ -168,21 +235,24 @@ impl Campaign {
     }
 
     /// Enumerate every cell, deterministically: systems outer (paper row
-    /// order), then columns, then grains descending. The set is exactly
-    /// what the renderers address — no executed-but-invisible cells.
+    /// order), then configs (ablation row order), then columns, then
+    /// grains descending. The set is exactly what the renderers address —
+    /// no executed-but-invisible cells.
     pub fn jobs(&self) -> Vec<Job> {
         let mut out = Vec::new();
         for &system in &self.systems {
             for pattern in self.patterns() {
-                for &nodes in &self.job_nodes() {
-                    if nodes > 1 && system.is_shared_memory_only() {
-                        continue; // the paper compares these on 1 node only
-                    }
-                    for &tpc in &self.job_tpcs() {
-                        for &grain in &self.grains {
-                            out.push(
-                                self.job_for(system, pattern, nodes, tpc, grain),
-                            );
+                for (_, config) in &self.configs {
+                    for &nodes in &self.job_nodes() {
+                        if nodes > 1 && system.is_shared_memory_only() {
+                            continue; // the paper compares these on 1 node only
+                        }
+                        for &tpc in &self.job_tpcs() {
+                            for &grain in &self.grains {
+                                out.push(self.job_for_config(
+                                    system, pattern, nodes, tpc, grain, *config,
+                                ));
+                            }
                         }
                     }
                 }
@@ -235,6 +305,8 @@ impl Campaign {
             CampaignKind::Fig1 => self.fig1_table(results),
             CampaignKind::Table2 => self.table2_table(results),
             CampaignKind::Fig2 => self.fig2_table(results),
+            CampaignKind::Fig3 => self.config_table(results, "Build"),
+            CampaignKind::HpxAblation => self.config_table(results, "Variant"),
             CampaignKind::Patterns => self.patterns_table(results),
         }
     }
@@ -333,6 +405,61 @@ impl Campaign {
         t
     }
 
+    /// Config-ablation renderer (Fig 3, HPX work stealing): one row per
+    /// build config, task throughput per grain, and the relative delta
+    /// vs the reference config at the largest grain (the paper's Fig 3
+    /// metric).
+    fn config_table(
+        &self,
+        results: &HashMap<String, JobResult>,
+        row_label: &str,
+    ) -> Table {
+        let system = self.systems[0];
+        let (nodes, tpc) = (self.render_nodes(), self.render_tpc());
+        let mut headers = vec![row_label.to_string()];
+        for &g in &self.grains {
+            headers.push(format!("tasks/s @{g}"));
+        }
+        headers.push(format!("vs {}", self.configs[0].0));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+
+        let tput = |config: SystemConfig, grain: u64| -> Option<f64> {
+            let id = self
+                .job_for_config(
+                    system,
+                    DependencePattern::Stencil1D,
+                    nodes,
+                    tpc,
+                    grain,
+                    config,
+                )
+                .id();
+            results.get(&id).map(JobResult::tasks_per_sec)
+        };
+        let ref_grain = self.grains.first().copied();
+        let base = ref_grain.and_then(|g| tput(self.configs[0].1, g));
+        for (label, config) in &self.configs {
+            let mut row = vec![label.clone()];
+            for &g in &self.grains {
+                row.push(match tput(*config, g) {
+                    Some(v) => format!("{v:.0}"),
+                    None => "?".into(),
+                });
+            }
+            row.push(
+                match (base, ref_grain.and_then(|g| tput(*config, g))) {
+                    (Some(b), Some(v)) => {
+                        format!("{:+.1}%", (v / b - 1.0) * 100.0)
+                    }
+                    _ => "?".into(),
+                },
+            );
+            t.row(&row);
+        }
+        t
+    }
+
     fn patterns_table(&self, results: &HashMap<String, JobResult>) -> Table {
         let patterns = self.patterns();
         let mut headers = vec!["System".to_string()];
@@ -358,8 +485,8 @@ impl Campaign {
     }
 
     /// Gnuplot-ready data (`.dat`) for the artifact: one block per system
-    /// (blank-line separated, `index`-addressable), columns commented in
-    /// the header line.
+    /// (or per build config for the ablation kinds; blank-line separated,
+    /// `index`-addressable), columns commented in the header line.
     pub fn dat(&self, results: &HashMap<String, JobResult>) -> String {
         let mut out = String::new();
         match self.kind {
@@ -388,6 +515,33 @@ impl Campaign {
                         }
                     }
                     out.push_str(&format!("# system {}\n", system.id()));
+                    out.push_str(&t.to_dat());
+                    out.push('\n');
+                }
+            }
+            CampaignKind::Fig3 | CampaignKind::HpxAblation => {
+                let system = self.systems[0];
+                for (label, config) in &self.configs {
+                    let mut t = Table::new(&["grain", "tasks_per_sec"]);
+                    for &grain in &self.grains {
+                        let id = self
+                            .job_for_config(
+                                system,
+                                DependencePattern::Stencil1D,
+                                self.render_nodes(),
+                                self.render_tpc(),
+                                grain,
+                                *config,
+                            )
+                            .id();
+                        if let Some(r) = results.get(&id) {
+                            t.row(&[
+                                grain.to_string(),
+                                format!("{:.3}", r.tasks_per_sec()),
+                            ]);
+                        }
+                    }
+                    out.push_str(&format!("# build {label}\n"));
                     out.push_str(&t.to_dat());
                     out.push('\n');
                 }
@@ -455,11 +609,12 @@ mod tests {
         c.cores_per_node = 4;
         c.nodes = match kind {
             CampaignKind::Fig2 => vec![1, 2],
+            CampaignKind::Fig3 => vec![2],
             _ => vec![1],
         };
         c.tasks_per_core = match kind {
             CampaignKind::Table2 => vec![1, 2],
-            CampaignKind::Fig2 => vec![2],
+            CampaignKind::Fig2 | CampaignKind::HpxAblation => vec![2],
             _ => vec![1],
         };
         c
@@ -494,6 +649,47 @@ mod tests {
     }
 
     #[test]
+    fn fig3_enumerates_five_builds_with_distinct_ids() {
+        let c = small(CampaignKind::Fig3);
+        let jobs = c.jobs();
+        assert_eq!(jobs.len(), 5 * c.grains.len());
+        assert!(jobs.iter().all(|j| j.spec.system == SystemKind::CharmLike));
+        let mut ids: Vec<String> = jobs.iter().map(Job::id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(
+            ids.len(),
+            5 * c.grains.len(),
+            "build options must reach the fingerprint"
+        );
+    }
+
+    #[test]
+    fn hpx_ablation_enumerates_both_variants() {
+        let c = small(CampaignKind::HpxAblation);
+        let jobs = c.jobs();
+        assert_eq!(jobs.len(), 2 * c.grains.len());
+        assert!(jobs.iter().all(|j| j.spec.system == SystemKind::HpxLocal));
+        let stealing_off = jobs
+            .iter()
+            .filter(|j| !j.spec.config.hpx.work_stealing)
+            .count();
+        assert_eq!(stealing_off, c.grains.len());
+    }
+
+    #[test]
+    fn native_mode_changes_every_id() {
+        let mut c = small(CampaignKind::Fig1);
+        let sim_ids: Vec<String> = c.jobs().iter().map(Job::id).collect();
+        c.mode = ExecMode::Native;
+        let native_ids: Vec<String> = c.jobs().iter().map(Job::id).collect();
+        assert_eq!(sim_ids.len(), native_ids.len());
+        for (s, n) in sim_ids.iter().zip(&native_ids) {
+            assert_ne!(s, n, "sim and native cells must cache separately");
+        }
+    }
+
+    #[test]
     fn table_marks_missing_cells_then_fills_them() {
         let c = small(CampaignKind::Table2);
         let empty = HashMap::new();
@@ -512,6 +708,41 @@ mod tests {
         let md = c.table(&map).to_markdown();
         assert!(!md.contains('?'), "{md}");
         assert!(md.contains("MPI (like)"));
+    }
+
+    #[test]
+    fn fig3_table_has_five_rows_and_a_reference_delta() {
+        let c = small(CampaignKind::Fig3);
+        let params = SimParams::default();
+        let jobs = c.jobs();
+        let summary = run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(!md.contains('?'), "{md}");
+        for (label, _) in SystemConfig::fig3_builds() {
+            assert!(md.contains(label), "{label} row missing from {md}");
+        }
+        // The reference row's own delta is exactly +0.0%.
+        let default_line =
+            md.lines().find(|l| l.starts_with("| Default")).unwrap();
+        assert!(default_line.contains("+0.0%"), "{default_line}");
+    }
+
+    #[test]
+    fn hpx_ablation_rows_differ() {
+        let c = small(CampaignKind::HpxAblation);
+        let params = SimParams::default();
+        let jobs = c.jobs();
+        let summary = run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("Stealing on") && md.contains("Stealing off"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+        let dat = c.dat(&map);
+        assert!(dat.contains("# build Stealing on"), "{dat}");
+        assert_eq!(dat.matches("# build").count(), 2);
     }
 
     #[test]

@@ -1,26 +1,19 @@
-//! Job execution: map one benchmark cell onto the DES or the real
-//! in-process runtimes and normalize the outcome into a [`JobResult`].
+//! Job execution conveniences on top of the [`super::backend`] layer.
 //!
-//! The per-cell primitives (`sim_grain_run`, `native_grain_run`,
-//! `sim_peak_flops`) are also the substrate `experiments.rs` and
-//! `metg::sweep` build their driver loops on, so every path into a graph
-//! execution goes through one place.
+//! The backends own all execution and metric math; this module keeps the
+//! per-cell primitives (`sim_grain_run`, `native_grain_run`,
+//! [`execute_job`]) that `experiments.rs` and `metg::sweep` build their
+//! driver loops on, so every path into a graph execution still goes
+//! through one place — the [`Backend`](super::backend::Backend) trait.
 
 use crate::core::{GraphConfig, KernelConfig, TaskGraph};
-use crate::harness::repeat_timing;
-use crate::metg::{measure_peak_flops, GrainRun};
-use crate::runtimes::{run_with, CharmOptions, RunOptions, SystemKind};
+use crate::metg::GrainRun;
+use crate::runtimes::{RunOptions, SystemConfig, SystemKind};
 use crate::sim::{simulate, Machine, SimParams};
 
-use super::job::{ExecMode, Job, JobResult};
-
-/// Peak FLOP/s of the simulated machine (the DES equivalent of the peak
-/// calibration: every core computing, zero overhead).
-pub fn sim_peak_flops(machine: Machine, params: &SimParams) -> f64 {
-    let flops_per_iter =
-        (crate::core::FLOPS_PER_ELEM_PER_ITER * params.payload_bytes / 4) as f64;
-    machine.total_cores() as f64 * flops_per_iter / (params.ns_per_iter * 1e-9)
-}
+use super::backend::{Backend, Backends, NativeBackend};
+pub use super::backend::{job_graph, sim_peak_flops};
+use super::job::{ExecMode, Job, JobResult, JobSpec};
 
 /// One simulated grain run (the sim-mode [`GrainRun`]).
 #[allow(clippy::too_many_arguments)]
@@ -28,7 +21,7 @@ pub fn sim_grain_run(
     system: SystemKind,
     machine: Machine,
     params: &SimParams,
-    charm: &CharmOptions,
+    cfg: &SystemConfig,
     pattern: crate::core::DependencePattern,
     tasks_per_core: usize,
     steps: usize,
@@ -41,18 +34,20 @@ pub fn sim_grain_run(
         kernel: KernelConfig::compute_bound(grain),
         ..GraphConfig::default()
     });
-    let r = simulate(&graph, system, machine, params, charm);
+    let m = simulate(&graph, system, machine, params, cfg);
     GrainRun {
         grain_iters: grain,
-        tasks: r.tasks,
-        wall: crate::harness::Summary::of(&[r.makespan_ns * 1e-9]),
-        flops_per_sec: r.flops_per_sec(&graph),
-        granularity_us: r.task_granularity_us(machine.total_cores()),
+        tasks: m.tasks,
+        wall: crate::harness::Summary::of(&[m.wall_secs]),
+        flops_per_sec: m.flops_per_sec(),
+        granularity_us: m.task_granularity_us(machine.total_cores()),
     }
 }
 
 /// One real-runtime grain run: `reps` timed executions after `warmup`
-/// discarded ones, on `workers` threads of this host.
+/// discarded ones, on `workers` threads of this host. A thin shim over
+/// [`NativeBackend`] (peak calibration skipped — [`GrainRun`] doesn't
+/// carry one; sweeps calibrate peak separately).
 #[allow(clippy::too_many_arguments)]
 pub fn native_grain_run(
     system: SystemKind,
@@ -65,123 +60,53 @@ pub fn native_grain_run(
     warmup: usize,
     opts: &RunOptions,
 ) -> GrainRun {
-    let graph = TaskGraph::new(GraphConfig {
-        width: workers * tasks_per_core,
+    let job = Job::new(JobSpec {
+        system,
+        config: SystemConfig {
+            charm: opts.charm,
+            hpx: opts.hpx,
+            hybrid_ranks: opts.hybrid_ranks,
+        },
+        pattern,
+        nodes: 1,
+        cores_per_node: workers,
+        tasks_per_core,
         steps,
-        dependence: pattern,
-        kernel: KernelConfig::compute_bound(grain),
-        ..GraphConfig::default()
+        grain,
+        mode: ExecMode::Native,
+        reps,
+        warmup,
     });
-    let mut opts = opts.clone();
-    opts.workers = workers;
-    opts.validate = false;
-    let sample = repeat_timing(reps, warmup, || {
-        run_with(system, &graph, &opts)
-            .expect("runtime execution failed")
-            .elapsed
-    });
-    let wall = sample.summary();
-    let tasks = graph.num_points();
+    let graph = job_graph(&job.spec);
+    let m = NativeBackend::without_peak()
+        .execute(&job, &graph)
+        .expect("runtime execution failed");
     GrainRun {
         grain_iters: grain,
-        tasks,
-        flops_per_sec: graph.total_flops() / wall.mean,
-        granularity_us: wall.mean * 1e6 * workers as f64 / tasks as f64,
-        wall,
+        tasks: m.tasks,
+        wall: crate::harness::Summary::of(&m.wall_samples),
+        flops_per_sec: m.flops_per_sec(),
+        granularity_us: m.task_granularity_us(workers),
     }
 }
 
-/// Execute one job and normalize its outcome.
+/// Execute one job on the backend its mode selects and normalize the
+/// outcome. Convenience wrapper over [`Backends::run`] for one-shot
+/// callers; the coordinator holds its own [`Backends`] across a campaign.
 pub fn execute_job(job: &Job, params: &SimParams) -> crate::Result<JobResult> {
-    let s = &job.spec;
-    match s.mode {
-        ExecMode::Sim => {
-            let machine = Machine::new(s.nodes, s.cores_per_node);
-            let run = sim_grain_run(
-                s.system,
-                machine,
-                params,
-                &CharmOptions::default(),
-                s.pattern,
-                s.tasks_per_core,
-                s.steps,
-                s.grain,
-            );
-            Ok(from_grain_run(&run, sim_peak_flops(machine, params)))
-        }
-        ExecMode::Native => {
-            anyhow::ensure!(
-                s.nodes == 1,
-                "native jobs are single-node (got {} nodes)",
-                s.nodes
-            );
-            let run = native_grain_run(
-                s.system,
-                s.pattern,
-                s.cores_per_node,
-                s.tasks_per_core,
-                s.steps,
-                s.grain,
-                s.reps,
-                s.warmup,
-                &RunOptions::new(s.cores_per_node),
-            );
-            let peak =
-                measure_peak_flops(s.cores_per_node, 16, 1 << 20).flops_per_sec;
-            Ok(from_grain_run(&run, peak))
-        }
-        ExecMode::Validate => {
-            anyhow::ensure!(
-                s.nodes == 1,
-                "validation jobs are single-node (got {} nodes)",
-                s.nodes
-            );
-            let graph = TaskGraph::new(GraphConfig {
-                width: s.cores_per_node * s.tasks_per_core,
-                steps: s.steps,
-                dependence: s.pattern,
-                kernel: KernelConfig::compute_bound(s.grain),
-                ..GraphConfig::default()
-            });
-            let opts = RunOptions::new(s.cores_per_node).with_validate(true);
-            let report = run_with(s.system, &graph, &opts)?;
-            let records = report
-                .records
-                .as_ref()
-                .expect("validate mode always records");
-            crate::core::validate_execution(&graph, records)
-                .map_err(|e| anyhow::anyhow!("validation failed: {e}"))?;
-            Ok(JobResult {
-                tasks: report.tasks,
-                wall_secs: report.elapsed.as_secs_f64(),
-                flops_per_sec: report.flops_per_sec(&graph),
-                granularity_us: report.task_granularity_us(s.cores_per_node),
-                // Validation wall time is not a measurement; no peak.
-                peak_flops: 0.0,
-            })
-        }
-    }
-}
-
-fn from_grain_run(run: &GrainRun, peak_flops: f64) -> JobResult {
-    JobResult {
-        tasks: run.tasks,
-        wall_secs: run.wall.mean,
-        flops_per_sec: run.flops_per_sec,
-        granularity_us: run.granularity_us,
-        peak_flops,
-    }
+    Backends::new(params).run(job)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::DependencePattern;
-    use crate::engine::job::JobSpec;
+    use crate::engine::job::{ExecMode, JobSpec};
 
     fn sim_job(grain: u64) -> Job {
         Job::new(JobSpec {
             system: SystemKind::MpiLike,
+            config: SystemConfig::default(),
             pattern: DependencePattern::Stencil1D,
             nodes: 1,
             cores_per_node: 4,
@@ -219,6 +144,7 @@ mod tests {
         let p = SimParams::default();
         let j = Job::new(JobSpec {
             system: SystemKind::OpenMpLike,
+            config: SystemConfig::default(),
             pattern: DependencePattern::Stencil1D,
             nodes: 1,
             cores_per_node: 2,
@@ -239,6 +165,7 @@ mod tests {
         let p = SimParams::default();
         let j = Job::new(JobSpec {
             system: SystemKind::CharmLike,
+            config: SystemConfig::default(),
             pattern: DependencePattern::Stencil1DPeriodic,
             nodes: 1,
             cores_per_node: 3,
@@ -252,6 +179,34 @@ mod tests {
         let r = execute_job(&j, &p).unwrap();
         assert_eq!(r.tasks, 3 * 2 * 5);
         assert_eq!(r.peak_flops, 0.0);
+        assert!(r.wall_secs > 0.0);
+    }
+
+    #[test]
+    fn native_job_with_charm_build_config_runs() {
+        // A Fig 3 build knob must reach the real runtime path end to end.
+        let p = SimParams::default();
+        let mut s = JobSpec {
+            system: SystemKind::CharmLike,
+            config: SystemConfig::fig3_builds()
+                .into_iter()
+                .find(|(n, _)| *n == "Combined")
+                .unwrap()
+                .1,
+            pattern: DependencePattern::Stencil1D,
+            nodes: 1,
+            cores_per_node: 2,
+            tasks_per_core: 1,
+            steps: 4,
+            grain: 8,
+            mode: ExecMode::Validate,
+            reps: 1,
+            warmup: 0,
+        };
+        let r = execute_job(&Job::new(s.clone()), &p).unwrap();
+        assert_eq!(r.tasks, 8);
+        s.mode = ExecMode::Native;
+        let r = execute_job(&Job::new(s), &p).unwrap();
         assert!(r.wall_secs > 0.0);
     }
 

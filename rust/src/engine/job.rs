@@ -1,20 +1,40 @@
-//! Jobs: one benchmark cell (system × pattern × grain × tasks-per-core ×
-//! nodes) as a serializable unit of work with a stable content hash.
+//! Jobs: one benchmark cell (system × build config × pattern × grain ×
+//! tasks-per-core × nodes) as a serializable unit of work with a stable
+//! content hash.
 //!
 //! The hash is FNV-1a 64 over a canonical key/value string of the spec, so
 //! a job's identity survives process restarts, sharded invocations and
 //! store merges: the same cell always lands in the same `results/<id>.json`
 //! record, and any config change produces a new record instead of
 //! silently overwriting an old one.
+//!
+//! ## Record schema v2 and the back-compat rule
+//!
+//! Since the [`SystemConfig`] dimension landed, records carry `"v": 2`
+//! and (for non-default configs) a `"config"` object inside `"job"`.
+//! Both are governed by one rule: **a default `SystemConfig` contributes
+//! nothing** — no canonical-form fields, no JSON members. A v1 record
+//! (no `v`, no `config`) therefore parses as a default-config v2 cell
+//! *and keeps its id*: every record PR 1 wrote remains a valid cache hit
+//! for the cell it described. Only non-default configs (Fig 3 builds,
+//! the HPX stealing ablation, hybrid rank overrides) extend the
+//! canonical form, so their ids are new — exactly the cells v1 could not
+//! express.
 
 use anyhow::Context;
 
 use super::json::Json;
+use crate::comm::IntranodeTransport;
 use crate::core::DependencePattern;
 use crate::harness::Summary;
 use crate::metg::GrainRun;
-use crate::runtimes::SystemKind;
+use crate::runtimes::{
+    CharmOptions, HpxOptions, SystemConfig, SystemKind,
+};
 use crate::sim::SimParams;
+
+/// Current on-disk record schema version (see the module docs).
+pub const RECORD_SCHEMA_VERSION: u64 = 2;
 
 /// How a job is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,6 +79,10 @@ impl ExecMode {
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
     pub system: SystemKind,
+    /// Build / runtime-ablation knobs of the system under test (Fig 3
+    /// Charm++ builds, §5.2 HPX stealing, hybrid ranks). Hashed — two
+    /// builds of the same system are two distinct cells.
+    pub config: SystemConfig,
     pub pattern: DependencePattern,
     /// Simulated nodes (always 1 for native jobs).
     pub nodes: usize,
@@ -88,9 +112,11 @@ impl JobSpec {
     }
 
     /// Canonical key/value form: the hash input and the human summary.
-    /// Field order is part of the on-disk contract — never reorder.
+    /// Field order is part of the on-disk contract — never reorder. A
+    /// default [`SystemConfig`] appends nothing (the v1 back-compat
+    /// rule); non-default configs append their knobs after `warmup`.
     pub fn canonical(&self) -> String {
-        format!(
+        let mut s = format!(
             "system={};pattern={};radix={};nodes={};cores={};tpc={};steps={};\
              grain={};mode={};reps={};warmup={}",
             self.system.id(),
@@ -104,11 +130,29 @@ impl JobSpec {
             self.mode.id(),
             self.reps,
             self.warmup,
-        )
+        );
+        if !self.config.is_default() {
+            let c = &self.config;
+            s.push_str(&format!(
+                ";charm8b={};charmsimple={};charmshmem={};hpxsteal={};hranks={}",
+                c.charm.eight_byte_prio as u8,
+                c.charm.simplified_sched as u8,
+                (c.charm.intranode == IntranodeTransport::Shmem) as u8,
+                c.hpx.work_stealing as u8,
+                c.hybrid_ranks,
+            ));
+        }
+        s
+    }
+
+    /// Compact listing summary of the system + its build config, e.g.
+    /// `charm[8B-prio,shmem]` (the `jobs list` column).
+    pub fn config_summary(&self) -> String {
+        self.config.summary(self.system)
     }
 
     fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut members = vec![
             ("system".into(), Json::Str(self.system.id().into())),
             ("pattern".into(), Json::Str(self.pattern.name().into())),
             ("radix".into(), Json::Num(self.radix() as f64)),
@@ -120,7 +164,11 @@ impl JobSpec {
             ("mode".into(), Json::Str(self.mode.id().into())),
             ("reps".into(), Json::Num(self.reps as f64)),
             ("warmup".into(), Json::Num(self.warmup as f64)),
-        ])
+        ];
+        if !self.config.is_default() {
+            members.push(("config".into(), config_to_json(&self.config)));
+        }
+        Json::Obj(members)
     }
 
     fn from_json(v: &Json) -> anyhow::Result<JobSpec> {
@@ -144,8 +192,15 @@ impl JobSpec {
         let mode_id = str_field("mode")?;
         let mode = ExecMode::parse(mode_id)
             .with_context(|| format!("unknown mode `{mode_id}`"))?;
+        // Back-compat: v1 records (and default-config v2 records) have no
+        // `config` member — that *is* the default config.
+        let config = match v.get("config") {
+            Some(c) => config_from_json(c)?,
+            None => SystemConfig::default(),
+        };
         Ok(JobSpec {
             system,
+            config,
             pattern,
             nodes: num_field("nodes")?,
             cores_per_node: num_field("cores_per_node")?,
@@ -160,6 +215,42 @@ impl JobSpec {
             warmup: num_field("warmup")?,
         })
     }
+}
+
+fn config_to_json(c: &SystemConfig) -> Json {
+    Json::Obj(vec![
+        ("charm_8b_prio".into(), Json::Bool(c.charm.eight_byte_prio)),
+        ("charm_simple_sched".into(), Json::Bool(c.charm.simplified_sched)),
+        (
+            "charm_shmem".into(),
+            Json::Bool(c.charm.intranode == IntranodeTransport::Shmem),
+        ),
+        ("hpx_work_stealing".into(), Json::Bool(c.hpx.work_stealing)),
+        ("hybrid_ranks".into(), Json::Num(c.hybrid_ranks as f64)),
+    ])
+}
+
+fn config_from_json(v: &Json) -> anyhow::Result<SystemConfig> {
+    let b = |k: &str| match v.get(k) {
+        Some(Json::Bool(x)) => Ok(*x),
+        _ => anyhow::bail!("config record missing boolean `{k}`"),
+    };
+    Ok(SystemConfig {
+        charm: CharmOptions {
+            eight_byte_prio: b("charm_8b_prio")?,
+            simplified_sched: b("charm_simple_sched")?,
+            intranode: if b("charm_shmem")? {
+                IntranodeTransport::Shmem
+            } else {
+                IntranodeTransport::Nic
+            },
+        },
+        hpx: HpxOptions { work_stealing: b("hpx_work_stealing")? },
+        hybrid_ranks: v
+            .get("hybrid_ranks")
+            .and_then(Json::as_usize)
+            .context("config record missing integer `hybrid_ranks`")?,
+    })
 }
 
 /// A benchmark cell awaiting (or holding) execution.
@@ -237,6 +328,27 @@ pub struct JobResult {
 }
 
 impl JobResult {
+    /// Normalize a backend [`crate::runtimes::Measurement`] into the
+    /// persisted result form; `cores` is the cell's total core count
+    /// (nodes × cores-per-node) for the granularity definition.
+    pub fn from_measurement(
+        m: &crate::runtimes::Measurement,
+        cores: usize,
+    ) -> JobResult {
+        JobResult {
+            tasks: m.tasks,
+            wall_secs: m.wall_secs,
+            flops_per_sec: m.flops_per_sec(),
+            granularity_us: m.task_granularity_us(cores),
+            peak_flops: m.peak_flops,
+        }
+    }
+
+    /// Task throughput (Fig 3's metric), derived — not stored.
+    pub fn tasks_per_sec(&self) -> f64 {
+        self.tasks as f64 / self.wall_secs
+    }
+
     /// Rehydrate the METG-sweep view of this result.
     pub fn to_grain_run(&self, grain: u64) -> GrainRun {
         GrainRun {
@@ -278,10 +390,11 @@ impl JobResult {
 }
 
 /// Serialize a completed job as one on-disk record, stamped with the
-/// [`params_fingerprint`] it was computed under.
+/// schema version and the [`params_fingerprint`] it was computed under.
 pub fn record_to_json(job: &Job, result: &JobResult, params_fp: u64) -> String {
     let mut text = Json::Obj(vec![
         ("id".into(), Json::Str(job.id())),
+        ("v".into(), Json::Num(RECORD_SCHEMA_VERSION as f64)),
         ("params_fp".into(), Json::Str(format!("{params_fp:016x}"))),
         ("job".into(), job.spec.to_json()),
         ("result".into(), result.to_json()),
@@ -292,9 +405,16 @@ pub fn record_to_json(job: &Job, result: &JobResult, params_fp: u64) -> String {
 }
 
 /// Parse one on-disk record back into (job, result, params fingerprint),
-/// verifying the id.
+/// verifying the id. Accepts v1 records (no `v`, no `config`) per the
+/// module-level back-compat rule; rejects records from a newer schema.
 pub fn record_from_json(text: &str) -> anyhow::Result<(Job, JobResult, u64)> {
     let v = Json::parse(text).context("malformed record")?;
+    let version = v.get("v").and_then(Json::as_u64).unwrap_or(1);
+    anyhow::ensure!(
+        version <= RECORD_SCHEMA_VERSION,
+        "record schema v{version} is newer than this binary's \
+         v{RECORD_SCHEMA_VERSION}"
+    );
     let spec =
         JobSpec::from_json(v.get("job").context("record missing `job`")?)?;
     let result = JobResult::from_json(
@@ -324,6 +444,7 @@ mod tests {
     fn spec() -> JobSpec {
         JobSpec {
             system: SystemKind::MpiLike,
+            config: SystemConfig::default(),
             pattern: DependencePattern::Stencil1D,
             nodes: 1,
             cores_per_node: 48,
@@ -348,7 +469,7 @@ mod tests {
     fn distinct_fields_change_the_id() {
         let base = Job::new(spec());
         let mut variants = Vec::new();
-        for f in 0..8 {
+        for f in 0..9 {
             let mut s = spec();
             match f {
                 0 => s.system = SystemKind::CharmLike,
@@ -358,6 +479,7 @@ mod tests {
                 4 => s.tasks_per_core = 8,
                 5 => s.steps = 50,
                 6 => s.grain = 16,
+                7 => s.config.hpx.work_stealing = false,
                 _ => s.mode = ExecMode::Native,
             }
             variants.push(Job::new(s).id());
@@ -374,6 +496,79 @@ mod tests {
         let mut b = spec();
         b.pattern = DependencePattern::Nearest { radix: 5 };
         assert_ne!(Job::new(a).id(), Job::new(b).id());
+    }
+
+    #[test]
+    fn default_config_keeps_the_v1_canonical_form() {
+        // The back-compat contract: a default SystemConfig contributes
+        // nothing, so pre-config ids are still the default-config ids.
+        let c = spec().canonical();
+        assert!(!c.contains("charm8b"), "{c}");
+        assert!(c.ends_with("warmup=0"), "{c}");
+        let mut s = spec();
+        s.config.charm.eight_byte_prio = true;
+        let c2 = s.canonical();
+        assert!(c2.contains("charm8b=1"), "{c2}");
+        assert!(c2.contains("hpxsteal=1"), "{c2}");
+    }
+
+    #[test]
+    fn every_config_knob_reaches_the_fingerprint() {
+        let base = Job::new(spec()).id();
+        let mut ids = vec![base.clone()];
+        for f in 0..5 {
+            let mut s = spec();
+            match f {
+                0 => s.config.charm.eight_byte_prio = true,
+                1 => s.config.charm.simplified_sched = true,
+                2 => s.config.charm.intranode = IntranodeTransport::Shmem,
+                3 => s.config.hpx.work_stealing = false,
+                _ => s.config.hybrid_ranks = 4,
+            }
+            ids.push(Job::new(s).id());
+        }
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "a config knob is not hashed");
+    }
+
+    #[test]
+    fn v1_record_parses_as_default_config_and_keeps_its_id() {
+        // A literal PR 1 record: no `v`, no `config`. Its id was computed
+        // from the v1 canonical form — which must equal today's
+        // default-config canonical form.
+        let job = Job::new(spec());
+        let result = JobResult {
+            tasks: 4800,
+            wall_secs: 0.5,
+            flops_per_sec: 1e9,
+            granularity_us: 10.0,
+            peak_flops: 2e9,
+        };
+        let v2 = record_to_json(&job, &result, 7);
+        // Strip the v2-only member to reconstruct the v1 byte stream.
+        let v1 = v2.replace("\"v\":2,", "");
+        assert!(!v1.contains("\"v\""), "{v1}");
+        let (job2, result2, fp) = record_from_json(&v1).expect("v1 record");
+        assert_eq!(job2, job);
+        assert_eq!(job2.spec.config, SystemConfig::default());
+        assert_eq!(result2, result);
+        assert_eq!(fp, 7);
+    }
+
+    #[test]
+    fn newer_schema_rejected() {
+        let job = Job::new(spec());
+        let result = JobResult {
+            tasks: 1,
+            wall_secs: 1.0,
+            flops_per_sec: 1.0,
+            granularity_us: 1.0,
+            peak_flops: 1.0,
+        };
+        let text = record_to_json(&job, &result, 7).replace("\"v\":2", "\"v\":3");
+        assert!(record_from_json(&text).is_err());
     }
 
     #[test]
@@ -394,6 +589,32 @@ mod tests {
         assert_eq!(fp2, fp);
         // Byte-stable re-serialization (shard merge requirement).
         assert_eq!(record_to_json(&job2, &result2, fp2), text);
+    }
+
+    #[test]
+    fn record_with_nondefault_config_round_trips() {
+        let mut s = spec();
+        s.system = SystemKind::CharmLike;
+        s.config = SystemConfig::fig3_builds()
+            .into_iter()
+            .find(|(n, _)| *n == "Combined")
+            .unwrap()
+            .1;
+        let job = Job::new(s);
+        let result = JobResult {
+            tasks: 10,
+            wall_secs: 1.0,
+            flops_per_sec: 1.0,
+            granularity_us: 1.0,
+            peak_flops: 1.0,
+        };
+        let text = record_to_json(&job, &result, 3);
+        assert!(text.contains("\"config\""), "{text}");
+        let (job2, result2, fp) = record_from_json(&text).unwrap();
+        assert_eq!(job2, job);
+        assert_eq!(result2, result);
+        assert_eq!(fp, 3);
+        assert_eq!(record_to_json(&job2, &result2, fp), text);
     }
 
     #[test]

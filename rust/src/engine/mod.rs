@@ -1,17 +1,22 @@
 //! The job-based experiment engine.
 //!
-//! Every benchmark cell of the paper's artifact grids — *(system ×
-//! dependence pattern × grain × tasks-per-core × node count)* — is a
-//! serializable [`Job`] with a stable content hash over its configuration
-//! ([`job`]). Campaigns ([`campaign`]) enumerate an artifact's full job
-//! set; the [`crate::coordinator`] executes job lists sharded and
-//! concurrently; and every [`JobResult`] persists as a JSON record
-//! ([`json`]) under `results/` keyed by content hash ([`store`]), so
-//! finished cells are never recomputed and interrupted sweeps resume for
-//! free.
+//! Every benchmark cell of the paper's artifact grids — *(system × build
+//! config × dependence pattern × grain × tasks-per-core × node count)* —
+//! is a serializable [`Job`] with a stable content hash over its
+//! configuration ([`job`]). *How a cell is measured* is itself a pluggable
+//! dimension: the [`backend`] module defines the [`Backend`] trait with a
+//! discrete-event-simulation backend and a native (real in-process
+//! runtime) backend, both reporting the same
+//! [`crate::runtimes::Measurement`]. Campaigns ([`campaign`]) enumerate an
+//! artifact's full job set; the [`crate::coordinator`] executes job lists
+//! sharded and concurrently through the backends; and every [`JobResult`]
+//! persists as a JSON record ([`json`]) under `results/` keyed by content
+//! hash ([`store`]), so finished cells are never recomputed and
+//! interrupted sweeps resume for free.
 //!
-//! CLI entry points: `repro jobs list | run | table | dat`.
+//! CLI entry points: `repro jobs list | run | table | dat | calibrate`.
 
+pub mod backend;
 pub mod campaign;
 pub mod exec;
 pub mod job;
@@ -19,6 +24,7 @@ pub mod json;
 pub mod params;
 pub mod store;
 
+pub use backend::{Backend, Backends, NativeBackend, SimBackend};
 pub use campaign::{Campaign, CampaignKind};
 pub use exec::execute_job;
 pub use job::{ExecMode, Job, JobResult, JobSpec};

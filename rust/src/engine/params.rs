@@ -164,9 +164,47 @@ pub fn load_or_calibrate(store: &ResultStore) -> anyhow::Result<SimParams> {
     }
     eprintln!("calibrating sim params from the real runtimes (slow)...");
     let p = crate::sim::calibrate(16);
+    install(store, &p)?;
+    Ok(p)
+}
+
+/// Write `params` as the store's persisted calibration.
+fn install(store: &ResultStore, params: &SimParams) -> anyhow::Result<()> {
+    let mut text = params_to_json(params).render();
+    text.push('\n');
+    super::store::write_atomic(store.dir(), CALIBRATION_FILE, &text)
+}
+
+/// `jobs calibrate --export <path>`: publish this store's calibration
+/// (calibrating first if it has none) to a standalone file another
+/// host's results directory can import — the multi-host campaign flow
+/// without hand-copying `_calibration.json`.
+pub fn export_calibration(
+    store: &ResultStore,
+    path: &str,
+) -> anyhow::Result<SimParams> {
+    let p = load_or_calibrate(store)?;
     let mut text = params_to_json(&p).render();
     text.push('\n');
-    super::store::write_atomic(store.dir(), CALIBRATION_FILE, &text)?;
+    std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+    Ok(p)
+}
+
+/// `jobs calibrate --import <path>`: validate an exported calibration
+/// file and install it as this store's `_calibration.json`. The params
+/// round-trip bit-exactly, so every importing shard computes the same
+/// params fingerprint as the exporting host — their records merge as one
+/// internally-consistent campaign.
+pub fn import_calibration(
+    store: &ResultStore,
+    path: &str,
+) -> anyhow::Result<SimParams> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let p = Json::parse(&text)
+        .and_then(|v| params_from_json(&v))
+        .with_context(|| format!("{path} is not a calibration export"))?;
+    install(store, &p)?;
     Ok(p)
 }
 
@@ -177,9 +215,14 @@ mod tests {
 
     #[test]
     fn round_trip_preserves_every_field_bit_exactly() {
-        let mut p = SimParams::default();
-        p.ns_per_iter = 1.0 / 3.0; // non-terminating decimal
-        p.network.intranode = IntranodeTransport::Nic;
+        let p = SimParams {
+            ns_per_iter: 1.0 / 3.0, // non-terminating decimal
+            network: NetworkModel {
+                intranode: IntranodeTransport::Nic,
+                ..NetworkModel::default()
+            },
+            ..SimParams::default()
+        };
         let text = params_to_json(&p).render();
         let back = params_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(
@@ -195,5 +238,49 @@ mod tests {
     fn partial_record_rejected() {
         let v = Json::parse("{\"ns_per_iter\":12}").unwrap();
         assert!(params_from_json(&v).is_err());
+    }
+
+    fn tmp_store(tag: &str) -> ResultStore {
+        let p = std::env::temp_dir()
+            .join(format!("taskbench_cal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        ResultStore::new(p)
+    }
+
+    #[test]
+    fn export_import_round_trip_keeps_the_fingerprint() {
+        let src = tmp_store("src");
+        let dst = tmp_store("dst");
+        // Seed the source store with known params (avoids the slow
+        // real-runtime calibration in tests).
+        let p = SimParams { ns_per_iter: 2.0 / 3.0, ..SimParams::default() };
+        super::install(&src, &p).unwrap();
+
+        let exported = src.dir().join("exported.json");
+        let exported = exported.to_str().unwrap().to_string();
+        let out = export_calibration(&src, &exported).unwrap();
+        assert_eq!(params_fingerprint(&out), params_fingerprint(&p));
+
+        let imported = import_calibration(&dst, &exported).unwrap();
+        assert_eq!(params_fingerprint(&imported), params_fingerprint(&p));
+        let persisted = load_persisted(&dst).expect("import must persist");
+        assert_eq!(params_fingerprint(&persisted), params_fingerprint(&p));
+
+        let _ = std::fs::remove_dir_all(src.dir());
+        let _ = std::fs::remove_dir_all(dst.dir());
+    }
+
+    #[test]
+    fn import_rejects_garbage() {
+        let dst = tmp_store("garbage");
+        let bad = dst.dir().join("bad.json");
+        std::fs::write(&bad, "{\"ns_per_iter\":1}").unwrap();
+        assert!(import_calibration(&dst, bad.to_str().unwrap()).is_err());
+        assert!(
+            load_persisted(&dst).is_none(),
+            "a failed import must not install anything"
+        );
+        let _ = std::fs::remove_dir_all(dst.dir());
     }
 }

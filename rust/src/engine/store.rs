@@ -125,7 +125,7 @@ mod tests {
     use super::*;
     use crate::core::DependencePattern;
     use crate::engine::job::{ExecMode, JobSpec};
-    use crate::runtimes::SystemKind;
+    use crate::runtimes::{SystemConfig, SystemKind};
 
     fn tmp(tag: &str) -> PathBuf {
         let p = std::env::temp_dir()
@@ -137,6 +137,7 @@ mod tests {
     fn job(grain: u64) -> Job {
         Job::new(JobSpec {
             system: SystemKind::MpiLike,
+            config: SystemConfig::default(),
             pattern: DependencePattern::Stencil1D,
             nodes: 1,
             cores_per_node: 4,

@@ -2,22 +2,25 @@
 //! `rust/benches/*` and `rust/examples/*`. Each function regenerates one
 //! table or figure (see DESIGN.md §5 for the index).
 //!
-//! Since the engine landed, the simulated drivers are thin shells: they
-//! build a [`Campaign`] job set, run it through
-//! [`crate::coordinator::run_jobs`] (in-memory, unsharded), and render
-//! from the results — exactly the path `repro jobs run` takes, minus the
-//! persistent store. The per-cell primitives live in
-//! [`crate::engine::exec`] and are re-exported here for compatibility.
+//! Every simulated driver is a thin shell: it builds a [`Campaign`] job
+//! set, runs it through [`crate::coordinator::run_jobs`] (in-memory,
+//! unsharded), and renders from the results — exactly the path `repro
+//! jobs run` takes, minus the persistent store. Since the `Backend`
+//! refactor this includes Fig 3: build options are a hashed job
+//! dimension ([`crate::runtimes::SystemConfig`]), so the ablation is an
+//! ordinary campaign rather than a bespoke DES loop. The per-cell
+//! primitives live in [`crate::engine::exec`] and are re-exported here
+//! for compatibility.
 
 use std::collections::HashMap;
 
 use crate::coordinator::{run_jobs, Shard};
-use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use crate::core::DependencePattern;
 use crate::engine::{Campaign, CampaignKind, JobResult};
 use crate::harness::report::{pm, Table};
 use crate::metg::{metg_from_curve, sweep_grains, GrainRun, SweepConfig};
-use crate::runtimes::{CharmOptions, SystemKind};
-use crate::sim::{simulate, Machine, SimParams};
+use crate::runtimes::{SystemConfig, SystemKind};
+use crate::sim::{Machine, SimParams};
 
 pub use crate::engine::exec::{sim_grain_run, sim_peak_flops};
 
@@ -27,7 +30,7 @@ pub fn sim_metg(
     system: SystemKind,
     machine: Machine,
     params: &SimParams,
-    charm: &CharmOptions,
+    cfg: &SystemConfig,
     pattern: DependencePattern,
     tasks_per_core: usize,
     steps: usize,
@@ -38,7 +41,7 @@ pub fn sim_metg(
         .iter()
         .map(|&g| {
             sim_grain_run(
-                system, machine, params, charm, pattern, tasks_per_core, steps, g,
+                system, machine, params, cfg, pattern, tasks_per_core, steps, g,
             )
         })
         .collect();
@@ -153,38 +156,23 @@ pub fn fig2(
     campaign.table(&results)
 }
 
-/// Fig 3: Charm++ build-option ablation — task throughput (tasks/s) at
-/// grain 4096 on 8 nodes × 48 cores, 384 tasks. (Build options are not a
-/// job-spec dimension, so this driver talks to the DES directly.)
+/// Fig 3: Charm++ build-option ablation — task throughput at grain 4096
+/// on 8 nodes × 48 cores, 384 tasks. Build options are a job-spec
+/// dimension, so this is the `fig3` campaign pinned to the paper's
+/// single reference grain.
 pub fn fig3(steps: usize, params: &SimParams) -> Table {
-    let machine = Machine::rostam(8);
-    let graph = TaskGraph::new(GraphConfig {
-        width: machine.total_cores(),
-        steps,
-        dependence: DependencePattern::Stencil1D,
-        kernel: KernelConfig::compute_bound(4096),
-        ..GraphConfig::default()
-    });
-    let mut table = Table::new(&["Build", "tasks/s", "vs Default"]);
-    let base = simulate(
-        &graph,
-        SystemKind::CharmLike,
-        machine,
-        params,
-        &CharmOptions::default(),
-    )
-    .tasks_per_sec();
-    for (name, copts) in CharmOptions::fig3_builds() {
-        let tput =
-            simulate(&graph, SystemKind::CharmLike, machine, params, &copts)
-                .tasks_per_sec();
-        table.row(&[
-            name.to_string(),
-            format!("{tput:.0}"),
-            format!("{:+.1}%", (tput / base - 1.0) * 100.0),
-        ]);
-    }
-    table
+    let campaign = Campaign::new(CampaignKind::Fig3, Vec::new(), steps, &[4096]);
+    let results = run_campaign(&campaign, params);
+    campaign.table(&results)
+}
+
+/// §5.2: the HPX work-stealing ablation as a grain sweep (the
+/// `hpx_ablation` campaign, in memory).
+pub fn hpx_ablation(steps: usize, grains: &[u64], params: &SimParams) -> Table {
+    let campaign =
+        Campaign::new(CampaignKind::HpxAblation, Vec::new(), steps, grains);
+    let results = run_campaign(&campaign, params);
+    campaign.table(&results)
 }
 
 /// Render a Fig 1 row set as a markdown table (grain, TFLOP/s and
@@ -262,7 +250,7 @@ mod tests {
                 sys,
                 Machine::rostam(1),
                 &p,
-                &CharmOptions::default(),
+                &SystemConfig::default(),
                 DependencePattern::Stencil1D,
                 tpc,
                 50,
@@ -290,7 +278,7 @@ mod tests {
                 SystemKind::Hybrid,
                 Machine::rostam(1),
                 &p,
-                &CharmOptions::default(),
+                &SystemConfig::default(),
                 DependencePattern::Stencil1D,
                 tpc,
                 50,
@@ -312,7 +300,7 @@ mod tests {
                 sys,
                 Machine::rostam(nodes),
                 &p,
-                &CharmOptions::default(),
+                &SystemConfig::default(),
                 DependencePattern::Stencil1D,
                 8,
                 30,
@@ -341,6 +329,16 @@ mod tests {
         // SHMEM row should show a positive delta.
         let shmem_line = md.lines().find(|l| l.contains("SHMEM")).unwrap();
         assert!(shmem_line.contains('+'), "{shmem_line}");
+    }
+
+    #[test]
+    fn hpx_ablation_renders_both_variants() {
+        let p = SimParams::default();
+        let t = hpx_ablation(20, &[1 << 4, 1 << 10], &p);
+        let md = t.to_markdown();
+        assert!(md.contains("Stealing on"), "{md}");
+        assert!(md.contains("Stealing off"), "{md}");
+        assert!(!md.contains('?'), "{md}");
     }
 
     #[test]
@@ -386,7 +384,7 @@ mod tests {
             SystemKind::MpiLike,
             Machine::rostam(1),
             &p,
-            &CharmOptions::default(),
+            &SystemConfig::default(),
             DependencePattern::Stencil1D,
             1,
             30,

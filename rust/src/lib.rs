@@ -28,22 +28,25 @@
 //!     ..GraphConfig::default()
 //! });
 //! let report = runtimes::run(SystemKind::CharmLike, &graph, 8).unwrap();
-//! println!("elapsed: {:?}", report.elapsed);
+//! println!("elapsed: {:?}", report.elapsed());
 //! ```
 //!
 //! ## The experiment engine
 //!
 //! The paper's artifacts (Fig 1 grain sweeps, Fig 2 node scaling, Table 2
-//! METG) are grids of *(system × pattern × grain × tasks-per-core ×
-//! nodes)* cells. The [`engine`] turns each cell into a serializable
-//! [`engine::Job`] with a stable content hash over its configuration; the
-//! [`coordinator`] runs job lists sharded (`--shard k/N` splits a campaign
-//! across invocations), executes simulator-backed jobs concurrently while
-//! reserving the whole machine for wall-clock-sensitive native jobs, and
-//! persists every [`engine::JobResult`] as a JSON record under `results/`
-//! keyed by content hash — so re-running a finished campaign is a pure
-//! cache hit (zero graph executions) and interrupted sweeps resume for
-//! free.
+//! METG, the Fig 3 build ablation) are grids of *(system × build config ×
+//! pattern × grain × tasks-per-core × nodes)* cells. The [`engine`] turns
+//! each cell into a serializable [`engine::Job`] with a stable content
+//! hash over its configuration, and measures it through a pluggable
+//! [`engine::Backend`] — the discrete-event simulator or the real
+//! in-process runtimes, both reporting one [`runtimes::Measurement`].
+//! The [`coordinator`] runs job lists sharded (`--shard k/N` splits a
+//! campaign across invocations), overlaps jobs whose backend declares
+//! them concurrent-safe while reserving the whole machine for wall-clock
+//! native jobs, and persists every [`engine::JobResult`] as a JSON record
+//! under `results/` keyed by content hash — so re-running a finished
+//! campaign is a pure cache hit (zero graph executions) and interrupted
+//! sweeps resume for free.
 //!
 //! Reproduce Fig 1 through the engine:
 //!

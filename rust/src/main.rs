@@ -12,15 +12,23 @@
 //! repro peak                                               # peak FLOP/s
 //! repro dispatch                                           # PJRT overhead
 //!
-//! repro jobs list  [--campaign fig1|table2|fig2|patterns] [--shard k/N]
-//! repro jobs run   [--campaign ...] [--results DIR] [--shard k/N] [--threads N]
-//! repro jobs table [--campaign ...] [--results DIR]
-//! repro jobs dat   [--campaign ...] [--results DIR]
+//! repro jobs list  [--campaign fig1|table2|fig2|fig3|hpx_ablation|patterns] [--shard k/N]
+//! repro jobs run   [--campaign ...] [--native] [--results DIR] [--shard k/N] [--threads N]
+//! repro jobs table [--campaign ...] [--native] [--results DIR]
+//! repro jobs dat   [--campaign ...] [--native] [--results DIR]
+//! repro jobs calibrate [--results DIR] [--export FILE | --import FILE]
 //! ```
 //!
 //! The `jobs` family is the engine path: enumerate an artifact's cells as
 //! content-hashed jobs, execute them sharded with cached results under
-//! `results/`, and render tables/plot data from the store.
+//! `results/`, and render tables/plot data from the store. `--native`
+//! routes a campaign through the real-runtime `NativeBackend` instead of
+//! the simulator (native cells hash — and therefore cache — separately
+//! from their sim twins); `--cores N` sizes the cells to this host.
+//! `jobs calibrate` manages the store's persisted `_calibration.json`:
+//! `--export` publishes it for other hosts, `--import` installs a file a
+//! peer exported, so multi-host campaigns share one calibration without
+//! hand-copying.
 //!
 //! The offline vendor set has no `clap`; the parser below is a minimal
 //! `--key value` scanner with a config-file base (`--config file.toml`).
@@ -42,7 +50,8 @@ use taskbench_amt::sim::{calibrate, SimParams};
 fn usage() -> ! {
     eprintln!(
         "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
-         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|patterns] [--key value ...]\n\
+         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig3|hpx_ablation|patterns] [--native] [--key value ...]\n\
+         \x20      repro jobs calibrate [--results DIR] [--export FILE | --import FILE]\n\
          see the crate docs for details"
     );
     std::process::exit(2);
@@ -171,8 +180,8 @@ fn cmd_run(m: &HashMap<String, String>) {
         "{}: {} tasks in {:?}  checksum {:.6e}  granularity {:.2} µs",
         report.system.name(),
         report.tasks,
-        report.elapsed,
-        report.checksum,
+        report.elapsed(),
+        report.checksum.unwrap_or(f64::NAN),
         report.task_granularity_us(opts.workers),
     );
 }
@@ -238,7 +247,10 @@ fn cmd_patterns(m: &HashMap<String, String>) {
 fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaign {
     let kind_id = m.get("campaign").map(String::as_str).unwrap_or("fig1");
     let Some(kind) = CampaignKind::parse(kind_id) else {
-        eprintln!("unknown campaign `{kind_id}` (want fig1|table2|fig2|patterns)");
+        eprintln!(
+            "unknown campaign `{kind_id}` \
+             (want fig1|table2|fig2|fig3|hpx_ablation|patterns)"
+        );
         std::process::exit(2);
     };
     let steps = get(m, "steps", kind.default_steps());
@@ -247,6 +259,19 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
     campaign.nodes = get_list(m, "nodes", campaign.nodes.clone());
     campaign.tasks_per_core =
         get_list(m, "overdecompose", campaign.tasks_per_core.clone());
+    campaign.cores_per_node = get(m, "cores", campaign.cores_per_node);
+    if get(m, "native", false) {
+        // Same cells, measured by the real runtimes on this host. The
+        // mode is hashed, so native records never collide with sim ones.
+        campaign.mode = taskbench_amt::engine::ExecMode::Native;
+        if campaign.nodes.iter().any(|&n| n > 1) {
+            eprintln!(
+                "--native campaigns are single-node; pass --nodes 1 \
+                 (and --cores N to size cells to this host)"
+            );
+            std::process::exit(2);
+        }
+    }
     campaign
 }
 
@@ -279,13 +304,59 @@ fn jobs_results(
     (map, missing)
 }
 
+/// `jobs calibrate`: manage the store's persisted calibration.
+fn cmd_jobs_calibrate(store: &ResultStore, m: &HashMap<String, String>) {
+    use taskbench_amt::engine::params;
+    fn fail(e: anyhow::Error) -> ! {
+        eprintln!("jobs calibrate failed: {e:#}");
+        std::process::exit(1);
+    }
+    match (m.get("export"), m.get("import")) {
+        (Some(_), Some(_)) => {
+            eprintln!("--export and --import are mutually exclusive");
+            std::process::exit(2);
+        }
+        (None, Some(path)) => {
+            if let Err(e) = params::import_calibration(store, path) {
+                fail(e);
+            }
+            println!(
+                "imported calibration from {path} into {}",
+                store.dir().display()
+            );
+        }
+        (Some(path), None) => {
+            if let Err(e) = params::export_calibration(store, path) {
+                fail(e);
+            }
+            println!(
+                "exported calibration of {} to {path}",
+                store.dir().display()
+            );
+        }
+        (None, None) => {
+            if let Err(e) = params::load_or_calibrate(store) {
+                fail(e);
+            }
+            println!(
+                "calibration persisted in {}",
+                store.dir().join(params::CALIBRATION_FILE).display()
+            );
+        }
+    }
+}
+
 fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
     let cfg = base_config(m);
-    let campaign = jobs_campaign(m, &cfg);
-    let shard = jobs_shard(m, &cfg);
     let store = ResultStore::new(
         m.get("results").cloned().unwrap_or_else(|| cfg.results_dir.clone()),
     );
+    if action == "calibrate" {
+        cmd_jobs_calibrate(&store, m);
+        return;
+    }
+    let campaign = jobs_campaign(m, &cfg);
+    let shard = jobs_shard(m, &cfg);
     // `--calibrate` persists its params in the results directory
     // (`_calibration.json`) and reuses them on later runs, so the params
     // fingerprint — and with it caching, resume and sharding — stays
@@ -319,7 +390,16 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                 } else {
                     "-"
                 };
-                println!("{}  {:<6}  {}", job.id(), hit, job.spec.canonical());
+                // Backend + build-config summary first: cached Fig 3 /
+                // ablation cells are distinguishable at a glance.
+                println!(
+                    "{}  {:<8}  {:<6}  {:<28}  {}",
+                    job.id(),
+                    job.spec.mode.id(),
+                    hit,
+                    job.spec.config_summary(),
+                    job.spec.canonical(),
+                );
             }
             eprintln!(
                 "{} jobs in campaign {} (shard {shard}: {})",

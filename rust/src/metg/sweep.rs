@@ -3,8 +3,10 @@
 //! Fig 1a/1b).
 //!
 //! Each grain measurement is one engine cell
-//! ([`crate::engine::exec::native_grain_run`]); this module owns the
-//! sweep shape (ladder order, widths) on top of it.
+//! ([`crate::engine::exec::native_grain_run`], a thin shim over the
+//! engine's native `Backend`); this module owns the sweep shape (ladder
+//! order, widths) on top of it. A [`GrainRun`] is the METG-curve view of
+//! one cell's [`crate::runtimes::Measurement`].
 
 use crate::core::DependencePattern;
 use crate::harness::Summary;

@@ -1,4 +1,4 @@
-//! The runtime systems under test.
+//! The runtime systems under test, and the shared measurement vocabulary.
 //!
 //! Five execution models, each a real thread-based implementation of its
 //! system's scheduling discipline (DESIGN.md §2 maps each to the system it
@@ -13,6 +13,14 @@
 //! * [`openmplike`] — persistent fork-join team, static chunking.
 //! * [`hybrid`] — MPI across ranks × OpenMP within, comm funnelled
 //!   through the master thread.
+//!
+//! Every execution — native thread-based ([`run_with`]) or simulated
+//! ([`crate::sim::simulate`]) — reports a [`Measurement`], the one result
+//! type the engine's `Backend` trait
+//! ([`crate::engine::backend`]) traffics in. Build-time ablation knobs
+//! ([`CharmOptions`], [`HpxOptions`], hybrid rank splits) are bundled
+//! into [`SystemConfig`], which is also a hashed dimension of every
+//! engine job.
 
 pub mod charmlike;
 pub mod hpxlike;
@@ -24,7 +32,9 @@ mod slots;
 use std::time::{Duration, Instant};
 
 use crate::comm::IntranodeTransport;
-use crate::core::{checksum_final, ExecRecord, Payload, PointCoord, TaskGraph};
+use crate::core::{
+    checksum_final, ExecRecord, Payload, PointCoord, TaskGraph,
+};
 pub use slots::{RacyVec, SlotVec};
 
 /// Which runtime system to run.
@@ -147,6 +157,90 @@ impl Default for HpxOptions {
     }
 }
 
+/// The full build/runtime-ablation configuration of one system under
+/// test: every knob that changes *how the runtime is built or scheduled*
+/// without changing the task graph. One `SystemConfig` is a hashed
+/// dimension of every engine [`crate::engine::Job`], so a Fig 3 build
+/// ablation is just five jobs whose specs differ only here.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SystemConfig {
+    pub charm: CharmOptions,
+    pub hpx: HpxOptions,
+    /// MPI ranks for the hybrid runtime (threads split evenly across
+    /// ranks). 0 = auto (2 if workers >= 4, else 1).
+    pub hybrid_ranks: usize,
+}
+
+impl SystemConfig {
+    /// Is this the default configuration? Default configs contribute no
+    /// canonical-form fields, so v1 (pre-`SystemConfig`) job ids remain
+    /// the ids of default-config cells — see `engine::job`.
+    pub fn is_default(&self) -> bool {
+        *self == SystemConfig::default()
+    }
+
+    /// The five Charm++ builds of Fig 3, as system configs.
+    pub fn fig3_builds() -> Vec<(&'static str, SystemConfig)> {
+        CharmOptions::fig3_builds()
+            .into_iter()
+            .map(|(name, charm)| {
+                (name, SystemConfig { charm, ..Default::default() })
+            })
+            .collect()
+    }
+
+    /// The §5.2 HPX work-stealing ablation, as system configs.
+    pub fn hpx_ablation() -> Vec<(&'static str, SystemConfig)> {
+        vec![
+            ("Stealing on", SystemConfig::default()),
+            (
+                "Stealing off",
+                SystemConfig {
+                    hpx: HpxOptions { work_stealing: false },
+                    ..Default::default()
+                },
+            ),
+        ]
+    }
+
+    /// Compact human summary for listings: the system id plus the
+    /// non-default knobs that apply to it, e.g. `charm[8B-prio,shmem]`,
+    /// `hpx_local[no-steal]`, `mpi_openmp[ranks=4]`, or just `charm` for
+    /// a default build.
+    pub fn summary(&self, system: SystemKind) -> String {
+        let mut tags: Vec<String> = Vec::new();
+        match system {
+            SystemKind::CharmLike => {
+                if self.charm.eight_byte_prio {
+                    tags.push("8B-prio".into());
+                }
+                if self.charm.simplified_sched {
+                    tags.push("simple-sched".into());
+                }
+                if self.charm.intranode == IntranodeTransport::Shmem {
+                    tags.push("shmem".into());
+                }
+            }
+            SystemKind::HpxLocal | SystemKind::HpxDistributed => {
+                if !self.hpx.work_stealing {
+                    tags.push("no-steal".into());
+                }
+            }
+            SystemKind::Hybrid => {
+                if self.hybrid_ranks > 0 {
+                    tags.push(format!("ranks={}", self.hybrid_ranks));
+                }
+            }
+            _ => {}
+        }
+        if tags.is_empty() {
+            system.id().to_string()
+        } else {
+            format!("{}[{}]", system.id(), tags.join(","))
+        }
+    }
+}
+
 /// Options common to a runtime execution.
 #[derive(Debug, Clone)]
 pub struct RunOptions {
@@ -177,6 +271,14 @@ impl RunOptions {
         self
     }
 
+    /// Apply a [`SystemConfig`]'s ablation knobs to this run.
+    pub fn with_config(mut self, cfg: &SystemConfig) -> Self {
+        self.charm = cfg.charm;
+        self.hpx = cfg.hpx;
+        self.hybrid_ranks = cfg.hybrid_ranks;
+        self
+    }
+
     pub fn effective_hybrid_ranks(&self) -> usize {
         if self.hybrid_ranks > 0 {
             self.hybrid_ranks.min(self.workers)
@@ -188,33 +290,59 @@ impl RunOptions {
     }
 }
 
-/// Outcome of one graph execution.
-#[derive(Debug)]
-pub struct RunReport {
+/// Outcome of one graph execution, native *or* simulated — the single
+/// result type every `Backend` produces. Owns the paper's metric
+/// definitions (granularity, FLOP/s, task throughput) so native and sim
+/// paths can never drift apart on the math.
+#[derive(Debug, Clone)]
+pub struct Measurement {
     pub system: SystemKind,
-    pub elapsed: Duration,
+    /// Wall seconds: native → measured (mean over reps when a backend
+    /// repeats); sim → the simulated makespan.
+    pub wall_secs: f64,
+    /// Every repetition's wall seconds ([`Self::wall_secs`] is their
+    /// mean; a single-run measurement holds one sample).
+    pub wall_samples: Vec<f64>,
     pub tasks: usize,
-    /// Order-independent checksum over the final timestep.
-    pub checksum: f64,
+    /// Total useful FLOPs of the measured graph (for [`Self::flops_per_sec`]).
+    pub total_flops: f64,
+    /// Wire messages (simulated runs; native transports don't count them).
+    pub messages: usize,
+    /// Order-independent checksum over the final timestep. Native runs
+    /// always carry one; sim runs only when the backend was asked to
+    /// replay the sequential oracle.
+    pub checksum: Option<f64>,
+    /// Peak FLOP/s of the measuring machine (0.0 = not measured).
+    pub peak_flops: f64,
     /// Execution trace (only when `RunOptions::validate`).
     pub records: Option<Vec<ExecRecord>>,
 }
 
-impl RunReport {
+impl Measurement {
+    /// The wall time as a `Duration` (native display convenience).
+    pub fn elapsed(&self) -> Duration {
+        Duration::from_secs_f64(self.wall_secs)
+    }
+
     /// Average task granularity: `wall · cores / tasks` (the paper's
     /// definition in §6.1).
     pub fn task_granularity_us(&self, cores: usize) -> f64 {
-        self.elapsed.as_secs_f64() * 1e6 * cores as f64 / self.tasks as f64
+        self.wall_secs * 1e6 * cores as f64 / self.tasks as f64
     }
 
     /// Achieved FLOP/s for a compute-bound graph.
-    pub fn flops_per_sec(&self, graph: &TaskGraph) -> f64 {
-        graph.total_flops() / self.elapsed.as_secs_f64()
+    pub fn flops_per_sec(&self) -> f64 {
+        self.total_flops / self.wall_secs
+    }
+
+    /// Task throughput (Fig 3's metric).
+    pub fn tasks_per_sec(&self) -> f64 {
+        self.tasks as f64 / self.wall_secs
     }
 }
 
 /// Run `graph` on `kind` with default options.
-pub fn run(kind: SystemKind, graph: &TaskGraph, workers: usize) -> crate::Result<RunReport> {
+pub fn run(kind: SystemKind, graph: &TaskGraph, workers: usize) -> crate::Result<Measurement> {
     run_with(kind, graph, &RunOptions::new(workers))
 }
 
@@ -223,7 +351,7 @@ pub fn run_with(
     kind: SystemKind,
     graph: &TaskGraph,
     opts: &RunOptions,
-) -> crate::Result<RunReport> {
+) -> crate::Result<Measurement> {
     let (elapsed, finals, records) = match kind {
         SystemKind::CharmLike => charmlike::execute(graph, opts)?,
         SystemKind::HpxLocal => hpxlike::execute_local(graph, opts)?,
@@ -232,11 +360,15 @@ pub fn run_with(
         SystemKind::OpenMpLike => openmplike::execute(graph, opts)?,
         SystemKind::Hybrid => hybrid::execute(graph, opts)?,
     };
-    Ok(RunReport {
+    Ok(Measurement {
         system: kind,
-        elapsed,
+        wall_secs: elapsed.as_secs_f64(),
+        wall_samples: vec![elapsed.as_secs_f64()],
         tasks: graph.num_points(),
-        checksum: checksum_final(graph, finals.into_iter()),
+        total_flops: graph.total_flops(),
+        messages: 0,
+        checksum: Some(checksum_final(graph, finals.into_iter())),
+        peak_flops: 0.0,
         records,
     })
 }
@@ -247,6 +379,10 @@ pub(crate) type ExecResult = (Duration, Vec<Payload>, Option<Vec<ExecRecord>>);
 
 /// Contiguous block partition of `width` points over `ranks` owners —
 /// the decomposition every distributed flavour uses.
+///
+/// `width == 0` is an explicit *empty* partition (`ranks == 0`): it owns
+/// nothing, iterating `0..ranks` visits no rank, and `owner`/`range` must
+/// not be called on it (there is no point to own).
 #[derive(Debug, Clone, Copy)]
 pub struct Partition {
     pub width: usize,
@@ -255,7 +391,15 @@ pub struct Partition {
 
 impl Partition {
     pub fn new(width: usize, ranks: usize) -> Self {
-        Self { width, ranks: ranks.max(1).min(width.max(1)) }
+        if width == 0 {
+            return Self { width: 0, ranks: 0 };
+        }
+        Self { width, ranks: ranks.max(1).min(width) }
+    }
+
+    /// Does this partition own any points at all?
+    pub fn is_empty(&self) -> bool {
+        self.ranks == 0
     }
 
     /// Owner rank of point `x`.
@@ -391,6 +535,20 @@ mod tests {
     }
 
     #[test]
+    fn partition_zero_width_is_explicitly_empty() {
+        // Regression: `new(0, n)` used to clamp to one rank whose range
+        // came out of the 0/0-adjacent arithmetic; now it is an explicit
+        // empty partition that owns nothing and iterates no ranks.
+        for ranks in [0usize, 1, 4, 16] {
+            let p = Partition::new(0, ranks);
+            assert!(p.is_empty(), "ranks={ranks}");
+            assert_eq!(p.ranks, 0, "ranks={ranks}");
+            assert_eq!((0..p.ranks).count(), 0);
+        }
+        assert!(!Partition::new(1, 1).is_empty());
+    }
+
+    #[test]
     fn system_kind_parse_round_trip() {
         for k in SystemKind::all() {
             assert_eq!(SystemKind::parse(k.id()), Some(k));
@@ -418,5 +576,60 @@ mod tests {
             && o.eight_byte_prio
             && o.simplified_sched
             && o.intranode == IntranodeTransport::Shmem));
+    }
+
+    #[test]
+    fn system_config_summary_names_the_knobs() {
+        let d = SystemConfig::default();
+        assert!(d.is_default());
+        assert_eq!(d.summary(SystemKind::CharmLike), "charm");
+        let combined = SystemConfig::fig3_builds()
+            .into_iter()
+            .find(|(n, _)| *n == "Combined")
+            .unwrap()
+            .1;
+        assert_eq!(
+            combined.summary(SystemKind::CharmLike),
+            "charm[8B-prio,simple-sched,shmem]"
+        );
+        let no_steal = SystemConfig::hpx_ablation()[1].1;
+        assert_eq!(no_steal.summary(SystemKind::HpxLocal), "hpx_local[no-steal]");
+        let hy = SystemConfig { hybrid_ranks: 4, ..Default::default() };
+        assert_eq!(hy.summary(SystemKind::Hybrid), "mpi_openmp[ranks=4]");
+        // Knobs for other systems don't leak into the summary.
+        assert_eq!(combined.summary(SystemKind::MpiLike), "mpi");
+    }
+
+    #[test]
+    fn run_options_with_config_applies_every_knob() {
+        let cfg = SystemConfig {
+            charm: CharmOptions { simplified_sched: true, ..Default::default() },
+            hpx: HpxOptions { work_stealing: false },
+            hybrid_ranks: 3,
+        };
+        let o = RunOptions::new(8).with_config(&cfg);
+        assert!(o.charm.simplified_sched);
+        assert!(!o.hpx.work_stealing);
+        assert_eq!(o.hybrid_ranks, 3);
+    }
+
+    #[test]
+    fn measurement_owns_the_metric_math() {
+        let m = Measurement {
+            system: SystemKind::MpiLike,
+            wall_secs: 2.0,
+            wall_samples: vec![2.0],
+            tasks: 100,
+            total_flops: 1e9,
+            messages: 0,
+            checksum: None,
+            peak_flops: 1e9,
+            records: None,
+        };
+        assert_eq!(m.tasks_per_sec(), 50.0);
+        assert_eq!(m.flops_per_sec(), 5e8);
+        // wall · cores / tasks = 2s · 4 / 100 = 80 ms = 80_000 µs
+        assert_eq!(m.task_granularity_us(4), 80_000.0);
+        assert_eq!(m.elapsed(), std::time::Duration::from_secs(2));
     }
 }

@@ -8,51 +8,47 @@
 //! modelled wire time. Fork-join systems (OpenMP-like, hybrid) are
 //! simulated step-synchronously with per-rank timelines — their structure
 //! has no task-level asynchrony to capture.
+//!
+//! [`simulate`] takes the job's [`SystemConfig`] — Charm++ build knobs,
+//! the HPX work-stealing switch, hybrid rank splits — and returns the
+//! same [`Measurement`] the native runtimes report, so the engine's
+//! `SimBackend` and `NativeBackend` are interchangeable consumers.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::core::{Kernel, PointCoord, TaskGraph};
-use crate::runtimes::{CharmOptions, Partition, SystemKind};
+use crate::runtimes::{
+    CharmOptions, Measurement, Partition, SystemConfig, SystemKind,
+};
 
 use super::machine::Machine;
 use super::params::SimParams;
 
-/// Simulation outcome.
-#[derive(Debug, Clone, Copy)]
-pub struct SimResult {
-    pub makespan_ns: f64,
-    pub tasks: usize,
-    /// Wire messages (excludes same-core hand-offs).
-    pub messages: usize,
-}
-
-impl SimResult {
-    pub fn task_granularity_us(&self, cores: usize) -> f64 {
-        self.makespan_ns * 1e-3 * cores as f64 / self.tasks as f64
-    }
-
-    pub fn flops_per_sec(&self, graph: &TaskGraph) -> f64 {
-        graph.total_flops() / (self.makespan_ns * 1e-9)
-    }
-
-    pub fn tasks_per_sec(&self) -> f64 {
-        self.tasks as f64 / (self.makespan_ns * 1e-9)
-    }
-}
-
-/// Simulate `graph` on `system` over `machine`.
+/// Simulate `graph` on `system` over `machine` with the given build /
+/// ablation configuration.
 pub fn simulate(
     graph: &TaskGraph,
     system: SystemKind,
     machine: Machine,
     params: &SimParams,
-    charm: &CharmOptions,
-) -> SimResult {
-    match system {
+    cfg: &SystemConfig,
+) -> Measurement {
+    let (makespan_ns, messages) = match system {
         SystemKind::OpenMpLike => simulate_openmp(graph, machine, params),
-        SystemKind::Hybrid => simulate_hybrid(graph, machine, params),
-        _ => simulate_event_driven(graph, system, machine, params, charm),
+        SystemKind::Hybrid => simulate_hybrid(graph, machine, params, cfg),
+        _ => simulate_event_driven(graph, system, machine, params, cfg),
+    };
+    Measurement {
+        system,
+        wall_secs: makespan_ns * 1e-9,
+        wall_samples: vec![makespan_ns * 1e-9],
+        tasks: graph.num_points(),
+        total_flops: graph.total_flops(),
+        messages,
+        checksum: None,
+        peak_flops: 0.0,
+        records: None,
     }
 }
 
@@ -192,15 +188,20 @@ fn simulate_event_driven(
     system: SystemKind,
     machine: Machine,
     params: &SimParams,
-    charm: &CharmOptions,
-) -> SimResult {
+    cfg: &SystemConfig,
+) -> (f64, usize) {
+    let charm = &cfg.charm;
     let width = graph.width();
     let steps = graph.steps();
     let n = graph.num_points();
     let cores = machine.total_cores();
     let part = Partition::new(width, cores);
+    // The §5.2 knob: with stealing off, the HPX local executor degrades
+    // to static owner placement (no steal cost, no dynamic balance).
+    let steal = system == SystemKind::HpxLocal && cfg.hpx.work_stealing;
 
-    // Static placement (dynamic for HpxLocal, chosen at start time).
+    // Static placement (dynamic for the stealing HpxLocal executor,
+    // chosen at start time).
     let place = |x: usize| -> usize {
         match system {
             SystemKind::CharmLike => x % cores,
@@ -242,7 +243,7 @@ fn simulate_event_driven(
 
         // Core choice: static anchor, or earliest-free for the
         // work-stealing HPX local executor.
-        let core = if system == SystemKind::HpxLocal {
+        let core = if steal {
             (0..cores)
                 .min_by(|&a, &b| core_free[a].total_cmp(&core_free[b]))
                 .unwrap()
@@ -259,7 +260,7 @@ fn simulate_event_driven(
                 edge_cost(system, machine, params, charm, cp as usize, core);
             dur += rx * qmul;
         }
-        if system == SystemKind::HpxLocal {
+        if steal {
             // A task that runs away from its inputs' core was stolen.
             let stolen = graph.dependencies(x, t).iter().any(|&d| {
                 exec_core[PointCoord::new(d as usize, t - 1).index(width)]
@@ -281,7 +282,7 @@ fn simulate_event_driven(
             let mut sent: Vec<usize> = Vec::with_capacity(rdeps.len());
             for &c in rdeps {
                 let cc = match system {
-                    SystemKind::HpxLocal => core, // consumer placed later
+                    SystemKind::HpxLocal if steal => core, // consumer placed later
                     SystemKind::CharmLike => c as usize % cores,
                     _ => part.owner(c as usize),
                 };
@@ -296,7 +297,7 @@ fn simulate_event_driven(
             let send_done = end;
             for &c in rdeps {
                 let cc = match system {
-                    SystemKind::HpxLocal => core,
+                    SystemKind::HpxLocal if steal => core,
                     SystemKind::CharmLike => c as usize % cores,
                     _ => part.owner(c as usize),
                 };
@@ -323,11 +324,15 @@ fn simulate_event_driven(
         makespan = makespan.max(end);
     }
 
-    SimResult { makespan_ns: makespan, tasks: n, messages }
+    (makespan, messages)
 }
 
 /// OpenMP-like: static fork-join, single node (uses node 0's cores only).
-fn simulate_openmp(graph: &TaskGraph, machine: Machine, params: &SimParams) -> SimResult {
+fn simulate_openmp(
+    graph: &TaskGraph,
+    machine: Machine,
+    params: &SimParams,
+) -> (f64, usize) {
     let cores = machine.cores_per_node;
     let width = graph.width();
     let part = Partition::new(width, cores.min(width));
@@ -350,13 +355,25 @@ fn simulate_openmp(graph: &TaskGraph, machine: Machine, params: &SimParams) -> S
         }
         clock += slowest + barrier * waves as f64;
     }
-    SimResult { makespan_ns: clock, tasks: graph.num_points(), messages: 0 }
+    (clock, 0)
 }
 
-/// Hybrid MPI+OpenMP: one rank per node, funnelled comm, dynamic team.
-fn simulate_hybrid(graph: &TaskGraph, machine: Machine, params: &SimParams) -> SimResult {
-    let ranks = machine.nodes;
-    let team = machine.cores_per_node as f64;
+/// Hybrid MPI+OpenMP: funnelled comm, dynamic team. Default decomposition
+/// is one rank per node; `SystemConfig::hybrid_ranks` overrides the rank
+/// count (threads split evenly across ranks), mirroring the native
+/// runtime's knob.
+fn simulate_hybrid(
+    graph: &TaskGraph,
+    machine: Machine,
+    params: &SimParams,
+    cfg: &SystemConfig,
+) -> (f64, usize) {
+    let ranks = if cfg.hybrid_ranks > 0 {
+        cfg.hybrid_ranks.min(machine.total_cores())
+    } else {
+        machine.nodes
+    };
+    let team = (machine.total_cores() / ranks.max(1)) as f64;
     let width = graph.width();
     let part = Partition::new(width, ranks.min(width));
     let marshal = params.payload_bytes as f64 * params.marshal_ns_per_byte;
@@ -442,13 +459,14 @@ fn simulate_hybrid(graph: &TaskGraph, machine: Machine, params: &SimParams) -> S
         clock = new_clock;
     }
     let makespan = clock.iter().cloned().fold(0.0, f64::max);
-    SimResult { makespan_ns: makespan, tasks: graph.num_points(), messages }
+    (makespan, messages)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::core::{DependencePattern, GraphConfig, KernelConfig};
+    use crate::runtimes::HpxOptions;
 
     fn graph(width: usize, steps: usize, iters: u64) -> TaskGraph {
         TaskGraph::new(GraphConfig {
@@ -460,8 +478,8 @@ mod tests {
         })
     }
 
-    fn sim(g: &TaskGraph, sys: SystemKind, m: Machine) -> SimResult {
-        simulate(g, sys, m, &SimParams::default(), &CharmOptions::default())
+    fn sim(g: &TaskGraph, sys: SystemKind, m: Machine) -> Measurement {
+        simulate(g, sys, m, &SimParams::default(), &SystemConfig::default())
     }
 
     #[test]
@@ -470,7 +488,7 @@ mod tests {
         let m = Machine::new(2, 4);
         for sys in SystemKind::all() {
             let r = sim(&g, sys, m);
-            assert!(r.makespan_ns > 0.0 && r.makespan_ns.is_finite(), "{sys:?}");
+            assert!(r.wall_secs > 0.0 && r.wall_secs.is_finite(), "{sys:?}");
             assert_eq!(r.tasks, 160);
         }
     }
@@ -481,10 +499,10 @@ mod tests {
         let g = graph(8, 20, 1_000_000);
         let m = Machine::new(1, 8);
         let p = SimParams::default();
-        let ideal = 20.0 * 1_000_000.0 * p.ns_per_iter;
+        let ideal_secs = 20.0 * 1_000_000.0 * p.ns_per_iter * 1e-9;
         for sys in SystemKind::all() {
             let r = sim(&g, sys, m);
-            let ratio = r.makespan_ns / ideal;
+            let ratio = r.wall_secs / ideal_secs;
             assert!(
                 ratio > 0.99 && ratio < 1.3,
                 "{sys:?}: ratio {ratio}"
@@ -496,7 +514,7 @@ mod tests {
     fn mpi_has_lowest_overhead_at_tiny_grain() {
         let g = graph(8, 50, 1);
         let m = Machine::new(1, 8);
-        let mpi = sim(&g, SystemKind::MpiLike, m).makespan_ns;
+        let mpi = sim(&g, SystemKind::MpiLike, m).wall_secs;
         for sys in [
             SystemKind::CharmLike,
             SystemKind::HpxLocal,
@@ -505,7 +523,7 @@ mod tests {
             SystemKind::Hybrid,
         ] {
             assert!(
-                sim(&g, sys, m).makespan_ns > mpi,
+                sim(&g, sys, m).wall_secs > mpi,
                 "{sys:?} beat MPI at tiny grain"
             );
         }
@@ -518,7 +536,7 @@ mod tests {
         let g = graph(16, 50, 10);
         let one = sim(&g, SystemKind::MpiLike, Machine::new(1, 16));
         let four = sim(&g, SystemKind::MpiLike, Machine::new(4, 4));
-        assert!(four.makespan_ns > one.makespan_ns);
+        assert!(four.wall_secs > one.wall_secs);
     }
 
     #[test]
@@ -526,18 +544,21 @@ mod tests {
         let g = graph(16, 50, 10);
         let m = Machine::new(1, 16);
         let p = SimParams::default();
-        let nic = simulate(&g, SystemKind::CharmLike, m, &p, &CharmOptions::default());
+        let nic = sim(&g, SystemKind::CharmLike, m);
         let shmem = simulate(
             &g,
             SystemKind::CharmLike,
             m,
             &p,
-            &CharmOptions {
-                intranode: crate::comm::IntranodeTransport::Shmem,
+            &SystemConfig {
+                charm: CharmOptions {
+                    intranode: crate::comm::IntranodeTransport::Shmem,
+                    ..Default::default()
+                },
                 ..Default::default()
             },
         );
-        assert!(shmem.makespan_ns < nic.makespan_ns);
+        assert!(shmem.wall_secs < nic.wall_secs);
     }
 
     #[test]
@@ -545,15 +566,57 @@ mod tests {
         let g = graph(16, 50, 1);
         let m = Machine::new(1, 16);
         let p = SimParams::default();
-        let def = simulate(&g, SystemKind::CharmLike, m, &p, &CharmOptions::default());
+        let def = sim(&g, SystemKind::CharmLike, m);
         let simple = simulate(
             &g,
             SystemKind::CharmLike,
             m,
             &p,
-            &CharmOptions { simplified_sched: true, ..Default::default() },
+            &SystemConfig {
+                charm: CharmOptions {
+                    simplified_sched: true,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
         );
-        assert!(simple.makespan_ns < def.makespan_ns);
+        assert!(simple.wall_secs < def.wall_secs);
+    }
+
+    #[test]
+    fn hpx_stealing_knob_changes_the_model() {
+        // Work stealing off must (a) produce a different schedule and
+        // (b) keep the run deterministic and finite.
+        let g = graph(32, 40, 5);
+        let m = Machine::new(1, 4);
+        let p = SimParams::default();
+        let on = sim(&g, SystemKind::HpxLocal, m);
+        let off_cfg = SystemConfig {
+            hpx: HpxOptions { work_stealing: false },
+            ..Default::default()
+        };
+        let off = simulate(&g, SystemKind::HpxLocal, m, &p, &off_cfg);
+        assert!(off.wall_secs > 0.0 && off.wall_secs.is_finite());
+        assert_ne!(on.wall_secs, off.wall_secs, "knob had no effect");
+        let off2 = simulate(&g, SystemKind::HpxLocal, m, &p, &off_cfg);
+        assert_eq!(off.wall_secs, off2.wall_secs);
+    }
+
+    #[test]
+    fn hybrid_rank_override_changes_decomposition() {
+        let g = graph(16, 30, 5);
+        let m = Machine::new(2, 4);
+        let p = SimParams::default();
+        let auto = sim(&g, SystemKind::Hybrid, m);
+        let four = simulate(
+            &g,
+            SystemKind::Hybrid,
+            m,
+            &p,
+            &SystemConfig { hybrid_ranks: 4, ..Default::default() },
+        );
+        assert!(four.wall_secs > 0.0 && four.wall_secs.is_finite());
+        assert_ne!(auto.wall_secs, four.wall_secs);
     }
 
     #[test]
@@ -565,8 +628,8 @@ mod tests {
         let g8 = graph(64, 50, 1);
         let r1 = sim(&g1, SystemKind::Hybrid, m);
         let r8 = sim(&g8, SystemKind::Hybrid, m);
-        let per_task_1 = r1.makespan_ns / g1.num_points() as f64;
-        let per_task_8 = r8.makespan_ns / g8.num_points() as f64;
+        let per_task_1 = r1.wall_secs / g1.num_points() as f64;
+        let per_task_8 = r8.wall_secs / g8.num_points() as f64;
         // 8× the tasks on the same cores: per-task cost should NOT drop
         // proportionally (the funnel serializes); in fact granularity
         // normalized per task stays roughly flat or rises.
@@ -586,8 +649,8 @@ mod tests {
         let g16 = graph(64, 50, 1);
         let r1 = sim(&g1, SystemKind::OpenMpLike, m);
         let r16 = sim(&g16, SystemKind::OpenMpLike, m);
-        let per_task_1 = r1.makespan_ns / g1.num_points() as f64;
-        let per_task_16 = r16.makespan_ns / g16.num_points() as f64;
+        let per_task_1 = r1.wall_secs / g1.num_points() as f64;
+        let per_task_16 = r16.wall_secs / g16.num_points() as f64;
         let ratio = per_task_16 / per_task_1;
         assert!(
             ratio > 0.8 && ratio < 1.3,
@@ -609,8 +672,8 @@ mod tests {
         let g = graph(12, 20, 5);
         let m = Machine::new(2, 3);
         for sys in SystemKind::all() {
-            let a = sim(&g, sys, m).makespan_ns;
-            let b = sim(&g, sys, m).makespan_ns;
+            let a = sim(&g, sys, m).wall_secs;
+            let b = sim(&g, sys, m).wall_secs;
             assert_eq!(a, b, "{sys:?}");
         }
     }

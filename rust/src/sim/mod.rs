@@ -15,11 +15,18 @@
 //! Absolute numbers are testbed-scaled; the paper's *shapes* (system
 //! ordering, flat-vs-rising node trends, ablation deltas) are what the
 //! simulator reproduces — see EXPERIMENTS.md.
+//!
+//! [`simulate`] returns the same [`crate::runtimes::Measurement`] the
+//! native runtimes produce and takes the job's
+//! [`crate::runtimes::SystemConfig`] (Charm++ build knobs, HPX work
+//! stealing, hybrid ranks), so the engine's `SimBackend`
+//! ([`crate::engine::backend`]) is a drop-in peer of the native backend
+//! rather than a separately-typed code path.
 
 mod des;
 mod machine;
 mod params;
 
-pub use des::{simulate, SimResult};
+pub use des::simulate;
 pub use machine::Machine;
 pub use params::{calibrate, SimParams};

@@ -154,7 +154,7 @@ fn per_task_overhead_ns(system: SystemKind, width: usize, steps: usize) -> f64 {
     let mut best = f64::INFINITY;
     for _ in 0..3 {
         let r = run_with(system, &graph, &opts).expect("calibration run failed");
-        best = best.min(r.elapsed.as_secs_f64());
+        best = best.min(r.wall_secs);
     }
     best * 1e9 / graph.num_points() as f64
 }
@@ -218,7 +218,7 @@ pub fn calibrate(payload_elems: usize) -> SimParams {
         for _ in 0..3 {
             let r = run_with(SystemKind::CharmLike, &graph, &opts)
                 .expect("charm calibration failed");
-            best = best.min(r.elapsed.as_secs_f64());
+            best = best.min(r.wall_secs);
         }
         let per_task = best * 1e9 / graph.num_points() as f64;
         let per_msg = (per_task - p.charm_task_ns).max(50.0) / 3.0;

@@ -1,0 +1,187 @@
+//! Backend-abstraction acceptance tests (ISSUE 2):
+//!
+//! * native and sim backends execute the *same* graph for the same cell
+//!   and agree on task count and final checksum (the sim side replays
+//!   the sequential oracle);
+//! * `fig3` job hashes are pairwise distinct — build options really
+//!   reach the fingerprint;
+//! * a completed `fig3` campaign re-runs as a 100% cache hit;
+//! * `--native` cells cache under fingerprints distinct from their sim
+//!   twins, and both coexist in one store.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use taskbench_amt::coordinator::{run_jobs, Shard};
+use taskbench_amt::core::DependencePattern;
+use taskbench_amt::engine::backend::{job_graph, Backend, Backends, SimBackend};
+use taskbench_amt::engine::{
+    Campaign, CampaignKind, ExecMode, Job, JobSpec, ResultStore,
+};
+use taskbench_amt::runtimes::{SystemConfig, SystemKind};
+use taskbench_amt::sim::SimParams;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("taskbench_backend_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn small_spec(mode: ExecMode) -> JobSpec {
+    JobSpec {
+        system: SystemKind::MpiLike,
+        config: SystemConfig::default(),
+        pattern: DependencePattern::Stencil1D,
+        nodes: 1,
+        cores_per_node: 3,
+        tasks_per_core: 2,
+        steps: 6,
+        grain: 16,
+        mode,
+        reps: 1,
+        warmup: 0,
+    }
+}
+
+#[test]
+fn native_and_sim_backends_agree_on_checksum_and_tasks() {
+    let params = SimParams::default();
+    let backends = Backends::new(&params);
+    let sim_backend = SimBackend::new(params).with_oracle_checksum(true);
+
+    let sim_job = Job::new(small_spec(ExecMode::Sim));
+    let native_job = Job::new(small_spec(ExecMode::Native));
+    // Same cell shape → byte-identical graph on both sides.
+    let graph = job_graph(&sim_job.spec);
+    assert_eq!(graph.width(), job_graph(&native_job.spec).width());
+
+    let sim_m = sim_backend.execute(&sim_job, &graph).unwrap();
+    let native_m = backends.native.execute(&native_job, &graph).unwrap();
+
+    assert_eq!(sim_m.tasks, native_m.tasks);
+    assert_eq!(sim_m.tasks, 6 * 6);
+    let sim_sum = sim_m.checksum.expect("oracle replay attaches a checksum");
+    let native_sum = native_m.checksum.expect("native runs always checksum");
+    assert_eq!(
+        sim_sum, native_sum,
+        "backends measured different computations"
+    );
+    // Both report the shared metric vocabulary.
+    assert!(sim_m.flops_per_sec() > 0.0 && native_m.flops_per_sec() > 0.0);
+    assert!(sim_m.task_granularity_us(3) > 0.0);
+}
+
+#[test]
+fn parity_holds_for_every_system_on_the_stencil() {
+    let params = SimParams::default();
+    let backends = Backends::new(&params);
+    let sim_backend = SimBackend::new(params).with_oracle_checksum(true);
+    for system in SystemKind::all() {
+        let mut sim_spec = small_spec(ExecMode::Sim);
+        sim_spec.system = system;
+        let mut native_spec = small_spec(ExecMode::Native);
+        native_spec.system = system;
+        let sim_job = Job::new(sim_spec);
+        let native_job = Job::new(native_spec);
+        let graph = job_graph(&sim_job.spec);
+        let sim_m = sim_backend.execute(&sim_job, &graph).unwrap();
+        let native_m = backends.native.execute(&native_job, &graph).unwrap();
+        assert_eq!(sim_m.tasks, native_m.tasks, "{system:?}");
+        assert_eq!(sim_m.checksum, native_m.checksum, "{system:?}");
+    }
+}
+
+#[test]
+fn fig3_job_hashes_are_pairwise_distinct() {
+    let c = Campaign::new(
+        CampaignKind::Fig3,
+        Vec::new(),
+        20,
+        &[1 << 4, 1 << 8, 1 << 12],
+    );
+    let jobs = c.jobs();
+    assert_eq!(jobs.len(), 5 * 3, "5 builds × 3 grains");
+    let ids: HashSet<String> = jobs.iter().map(Job::id).collect();
+    assert_eq!(
+        ids.len(),
+        jobs.len(),
+        "two fig3 cells share a hash — options never reached the fingerprint"
+    );
+    // And the five builds of one grain differ from each other only by
+    // config, yet still hash apart.
+    let one_grain: Vec<&Job> =
+        jobs.iter().filter(|j| j.spec.grain == 1 << 12).collect();
+    assert_eq!(one_grain.len(), 5);
+    for j in &one_grain {
+        assert_eq!(j.spec.system, SystemKind::CharmLike);
+        assert_eq!(j.spec.grain, 1 << 12);
+    }
+}
+
+#[test]
+fn fig3_campaign_caches_and_reruns_hit_free() {
+    let dir = tmpdir("fig3_cache");
+    let store = ResultStore::new(&dir);
+    let mut c =
+        Campaign::new(CampaignKind::Fig3, Vec::new(), 10, &[1 << 4, 1 << 8]);
+    c.cores_per_node = 4;
+    c.nodes = vec![2];
+    let jobs = c.jobs();
+    let params = SimParams::default();
+
+    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    assert_eq!(first.executed, jobs.len());
+    assert_eq!(first.cached, 0);
+
+    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    assert_eq!(second.executed, 0, "rerun must be a 100% cache hit");
+    assert_eq!(second.cached, jobs.len());
+
+    // The five builds produced five genuinely different measurements at
+    // the fine grain (the ablation signal, not just five hashes).
+    let fine: Vec<f64> = second
+        .results
+        .iter()
+        .filter(|(j, _)| j.spec.grain == 1 << 4)
+        .map(|(_, r)| r.wall_secs)
+        .collect();
+    assert_eq!(fine.len(), 5);
+    let distinct: HashSet<u64> = fine.iter().map(|w| w.to_bits()).collect();
+    assert!(
+        distinct.len() >= 4,
+        "build options barely moved the needle: {fine:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn native_and_sim_results_cache_under_distinct_fingerprints() {
+    let dir = tmpdir("native_vs_sim");
+    let store = ResultStore::new(&dir);
+    let params = SimParams::default();
+
+    let sim_job = Job::new(small_spec(ExecMode::Sim));
+    let native_job = Job::new(small_spec(ExecMode::Native));
+    assert_ne!(sim_job.id(), native_job.id(), "mode must be hashed");
+
+    let jobs = vec![sim_job.clone(), native_job.clone()];
+    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    assert_eq!(first.executed, 2);
+
+    // Both records exist side by side and both replay as cache hits.
+    assert!(store.load(&sim_job).is_some());
+    assert!(store.load(&native_job).is_some());
+    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    assert_eq!(second.executed, 0);
+    assert_eq!(second.cached, 2);
+
+    // Sim hits are params-fingerprint-guarded; native hits survive a
+    // params change (they measured the real machine, not the model).
+    let mut other = params;
+    other.mpi_task_ns += 1.0;
+    let third = run_jobs(&jobs, Some(&store), Shard::full(), 2, &other).unwrap();
+    assert_eq!(third.executed, 1, "only the sim cell re-runs");
+    assert_eq!(third.cached, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -41,7 +41,8 @@ fn all_systems_agree_with_oracle_checksum() {
     for system in SystemKind::all() {
         let report = run_with(system, &g, &RunOptions::new(3)).unwrap();
         assert_eq!(
-            report.checksum, oracle,
+            report.checksum,
+            Some(oracle),
             "{system:?} diverged from the oracle"
         );
     }
@@ -55,7 +56,8 @@ fn worker_count_does_not_change_results() {
         for workers in [1usize, 2, 5, 8, 12] {
             let report = run_with(system, &g, &RunOptions::new(workers)).unwrap();
             assert_eq!(
-                report.checksum, oracle,
+                report.checksum,
+                Some(oracle),
                 "{system:?} with {workers} workers diverged"
             );
         }
@@ -115,7 +117,7 @@ fn property_checksum_is_runtime_invariant() {
             let first = checksums[0].1;
             for (sys, c) in &checksums {
                 if *c != first {
-                    return Err(format!("{sys:?} checksum {c} != {first}"));
+                    return Err(format!("{sys:?} checksum {c:?} != {first:?}"));
                 }
             }
             Ok(())
