@@ -16,13 +16,22 @@
 //!   jobs run concurrently on a scoped thread pool; wall-clock-sensitive
 //!   native jobs run afterwards, serially, with the whole machine to
 //!   themselves so the timing they report is clean.
+//! * **Diffing** — [`diff_jobs`] is the regression mode alongside
+//!   [`run_jobs`]: the same job list is measured live (store-cached,
+//!   scheduled exactly as above) and replayed from a pinned baseline
+//!   ([`ReplayBackend`]), then compared cell by cell. A checksum
+//!   mismatch is a hard failure, metric drift beyond the campaign's
+//!   [`DiffTolerances`] is a regression, and missing/extra cells are
+//!   reported so stale baselines are visible.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use anyhow::Context;
 
-use crate::engine::backend::Backends;
+use crate::engine::backend::{Backends, ReplayBackend};
+use crate::engine::campaign::DiffTolerances;
 use crate::engine::job::{job_fingerprint_with, params_fingerprint, Job, JobResult};
 use crate::engine::store::ResultStore;
 use crate::sim::SimParams;
@@ -174,6 +183,248 @@ pub fn run_jobs(
     Ok(RunSummary { executed, cached, results })
 }
 
+/// One metric outside its tolerance in a golden-record diff.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricDrift {
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub live: f64,
+    /// `|live − baseline| / |baseline|` (baseline 0 compares exactly).
+    pub rel: f64,
+    /// The tolerance the drift exceeded (0.0 = bitwise gate).
+    pub tol: f64,
+}
+
+/// How one cell compared against its pinned baseline record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CellDiff {
+    /// Every metric within tolerance; checksums agree where both sides
+    /// carry one.
+    Match,
+    /// The two sides measured *different computations* — a hard failure
+    /// no tolerance can excuse.
+    ChecksumMismatch { baseline: f64, live: f64 },
+    /// At least one metric beyond its tolerance (task-count changes
+    /// surface here too, with a zero tolerance).
+    Drift(Vec<MetricDrift>),
+    /// The baseline holds no record for this cell (new cell, or a
+    /// baseline that predates it).
+    MissingBaseline,
+}
+
+/// Compare one live result against its pinned baseline under `tol`.
+pub fn classify_cell(
+    live: &JobResult,
+    baseline: &JobResult,
+    tol: DiffTolerances,
+) -> CellDiff {
+    // Checksums first: if both sides computed one and they differ, the
+    // backends executed different graphs — nothing else is comparable.
+    if let (Some(b), Some(l)) = (baseline.checksum, live.checksum) {
+        if b.to_bits() != l.to_bits() {
+            return CellDiff::ChecksumMismatch { baseline: b, live: l };
+        }
+    }
+    let mut drifts = Vec::new();
+    // One side carrying a checksum the other does not is itself a
+    // signal (a change that silently stops checksumming must not weaken
+    // the gate) — surface the presence flip as zero-tolerance drift.
+    if baseline.checksum.is_some() != live.checksum.is_some() {
+        drifts.push(MetricDrift {
+            metric: "checksum_present",
+            baseline: baseline.checksum.is_some() as u8 as f64,
+            live: live.checksum.is_some() as u8 as f64,
+            rel: f64::INFINITY,
+            tol: 0.0,
+        });
+    }
+    let mut check = |metric: &'static str, b: f64, l: f64, tol: f64| {
+        let ok = if tol == 0.0 {
+            l == b
+        } else if b == 0.0 {
+            l == 0.0
+        } else {
+            ((l - b) / b).abs() <= tol
+        };
+        if !ok {
+            let rel = if b == 0.0 {
+                f64::INFINITY
+            } else {
+                ((l - b) / b).abs()
+            };
+            drifts.push(MetricDrift { metric, baseline: b, live: l, rel, tol });
+        }
+    };
+    // Task count is structural: always exact, whatever the tolerances.
+    check("tasks", baseline.tasks as f64, live.tasks as f64, 0.0);
+    check("wall_secs", baseline.wall_secs, live.wall_secs, tol.wall_secs);
+    check(
+        "flops_per_sec",
+        baseline.flops_per_sec,
+        live.flops_per_sec,
+        tol.flops_per_sec,
+    );
+    check(
+        "granularity_us",
+        baseline.granularity_us,
+        live.granularity_us,
+        tol.granularity_us,
+    );
+    check("peak_flops", baseline.peak_flops, live.peak_flops, tol.peak_flops);
+    if drifts.is_empty() {
+        CellDiff::Match
+    } else {
+        CellDiff::Drift(drifts)
+    }
+}
+
+/// What a [`diff_jobs`] invocation found.
+#[derive(Debug)]
+pub struct DiffReport {
+    /// Per-cell verdicts for this shard's slice, in job-list order.
+    pub cells: Vec<(Job, CellDiff)>,
+    /// Baseline record ids with no cell in the job list (stale goldens —
+    /// e.g. a campaign definition change — or corrupt records, which
+    /// never load and so can never match). Determined from the record
+    /// filenames without parsing; whole-list, not per-shard, so every
+    /// shard reports the same set.
+    pub extra: Vec<String>,
+    /// Live-side executions this invocation (the rest were cache hits).
+    pub executed: usize,
+    pub cached: usize,
+}
+
+impl DiffReport {
+    pub fn matches(&self) -> usize {
+        self.count(|d| matches!(d, CellDiff::Match))
+    }
+
+    pub fn checksum_mismatches(&self) -> usize {
+        self.count(|d| matches!(d, CellDiff::ChecksumMismatch { .. }))
+    }
+
+    /// Cells with metric drift beyond tolerance.
+    pub fn regressions(&self) -> usize {
+        self.count(|d| matches!(d, CellDiff::Drift(_)))
+    }
+
+    /// Cells with no baseline record.
+    pub fn missing(&self) -> usize {
+        self.count(|d| matches!(d, CellDiff::MissingBaseline))
+    }
+
+    fn count(&self, f: impl Fn(&CellDiff) -> bool) -> usize {
+        self.cells.iter().filter(|(_, d)| f(d)).count()
+    }
+
+    /// No checksum mismatches and no metric drift. Missing and extra
+    /// cells are reported, not failed — [`Self::is_strictly_clean`]
+    /// upgrades them (the CI gate's posture once a baseline is pinned).
+    pub fn is_clean(&self) -> bool {
+        self.checksum_mismatches() == 0 && self.regressions() == 0
+    }
+
+    /// [`Self::is_clean`] and the baseline covers exactly the job list.
+    pub fn is_strictly_clean(&self) -> bool {
+        self.is_clean() && self.missing() == 0 && self.extra.is_empty()
+    }
+
+    /// Human-readable report: one line per divergent cell, then a
+    /// summary line. Matching cells print nothing — a clean diff over a
+    /// thousand cells is one line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (job, diff) in &self.cells {
+            match diff {
+                CellDiff::Match => {}
+                CellDiff::ChecksumMismatch { baseline, live } => {
+                    out.push_str(&format!(
+                        "CHECKSUM {}  baseline {baseline:.9e} vs live \
+                         {live:.9e}  [{}]\n",
+                        job.id(),
+                        job.spec.canonical(),
+                    ));
+                }
+                CellDiff::Drift(drifts) => {
+                    for d in drifts {
+                        out.push_str(&format!(
+                            "DRIFT    {}  {}: baseline {:.9e} vs live {:.9e} \
+                             (rel {:.2e}, tol {:.2e})  [{}]\n",
+                            job.id(),
+                            d.metric,
+                            d.baseline,
+                            d.live,
+                            d.rel,
+                            d.tol,
+                            job.spec.canonical(),
+                        ));
+                    }
+                }
+                CellDiff::MissingBaseline => {
+                    out.push_str(&format!(
+                        "MISSING  {}  [{}]\n",
+                        job.id(),
+                        job.spec.canonical(),
+                    ));
+                }
+            }
+        }
+        for id in &self.extra {
+            out.push_str(&format!("EXTRA    {id}  (not in the job list)\n"));
+        }
+        out.push_str(&format!(
+            "{} cells: {} ok, {} drifted, {} checksum mismatches, \
+             {} missing, {} extra ({} executed, {} cached)\n",
+            self.cells.len(),
+            self.matches(),
+            self.regressions(),
+            self.checksum_mismatches(),
+            self.missing(),
+            self.extra.len(),
+            self.executed,
+            self.cached,
+        ));
+        out
+    }
+}
+
+/// The diff scheduling mode: measure this shard's slice of `jobs` live —
+/// store-cached and backend-scheduled exactly like [`run_jobs`] — then
+/// replay every cell from `baseline` and classify the pair under `tol`.
+/// The baseline is never written to.
+pub fn diff_jobs(
+    jobs: &[Job],
+    store: Option<&ResultStore>,
+    baseline: &ReplayBackend,
+    shard: Shard,
+    threads: usize,
+    params: &SimParams,
+    tol: DiffTolerances,
+) -> crate::Result<DiffReport> {
+    let live = run_jobs(jobs, store, shard, threads, params)?;
+    let mut cells = Vec::with_capacity(live.results.len());
+    for (job, result) in &live.results {
+        let diff = match baseline.lookup(job) {
+            Some(base) => classify_cell(result, &base, tol),
+            None => CellDiff::MissingBaseline,
+        };
+        cells.push((job.clone(), diff));
+    }
+    let listed: HashSet<String> = jobs.iter().map(Job::id).collect();
+    let extra: Vec<String> = baseline
+        .store()
+        .ids()
+        .into_iter()
+        .filter(|id| !listed.contains(id))
+        .collect();
+    Ok(DiffReport {
+        cells,
+        extra,
+        executed: live.executed,
+        cached: live.cached,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +488,138 @@ mod tests {
             assert_eq!(ja, jb);
             assert_eq!(ra, rb);
         }
+    }
+
+    fn diff_result() -> JobResult {
+        JobResult {
+            tasks: 24,
+            wall_secs: 0.5,
+            flops_per_sec: 1e9,
+            granularity_us: 10.0,
+            peak_flops: 2e9,
+            checksum: Some(7.5),
+        }
+    }
+
+    #[test]
+    fn classify_matches_identical_results_exactly() {
+        let r = diff_result();
+        assert_eq!(
+            classify_cell(&r, &r, DiffTolerances::exact()),
+            CellDiff::Match
+        );
+    }
+
+    #[test]
+    fn classify_checksum_mismatch_beats_every_tolerance() {
+        let base = diff_result();
+        let mut live = diff_result();
+        live.checksum = Some(8.5);
+        let d = classify_cell(&live, &base, DiffTolerances::uniform(1e9));
+        assert!(matches!(d, CellDiff::ChecksumMismatch { .. }), "{d:?}");
+
+        // A checksum the live side stopped computing is drift, not a
+        // silent pass — the gate must notice the signal disappearing.
+        live.checksum = None;
+        let d = classify_cell(&live, &base, DiffTolerances::uniform(1e9));
+        let CellDiff::Drift(drifts) = d else {
+            panic!("checksum presence flip must drift");
+        };
+        assert_eq!(drifts[0].metric, "checksum_present");
+
+        // Neither side checksumming (plain sim campaigns) is fine.
+        let mut base = diff_result();
+        base.checksum = None;
+        assert_eq!(
+            classify_cell(&live, &base, DiffTolerances::uniform(1e9)),
+            CellDiff::Match
+        );
+    }
+
+    #[test]
+    fn classify_flags_drift_beyond_tolerance_only() {
+        let base = diff_result();
+        let mut live = diff_result();
+        live.wall_secs *= 1.05;
+        live.granularity_us *= 1.05;
+        assert_eq!(
+            classify_cell(&live, &base, DiffTolerances::uniform(0.1)),
+            CellDiff::Match
+        );
+        let d = classify_cell(&live, &base, DiffTolerances::uniform(0.01));
+        let CellDiff::Drift(drifts) = d else {
+            panic!("5% past a 1% tolerance must drift");
+        };
+        let metrics: Vec<&str> = drifts.iter().map(|d| d.metric).collect();
+        assert_eq!(metrics, ["wall_secs", "granularity_us"]);
+        assert!((drifts[0].rel - 0.05).abs() < 1e-12, "{:?}", drifts[0]);
+    }
+
+    #[test]
+    fn classify_task_count_is_always_exact() {
+        let base = diff_result();
+        let mut live = diff_result();
+        live.tasks += 1;
+        let d = classify_cell(&live, &base, DiffTolerances::uniform(10.0));
+        let CellDiff::Drift(drifts) = d else {
+            panic!("a task-count change must never be tolerated");
+        };
+        assert_eq!(drifts[0].metric, "tasks");
+        assert_eq!(drifts[0].tol, 0.0);
+    }
+
+    #[test]
+    fn exact_gate_catches_one_ulp() {
+        let base = diff_result();
+        let mut live = diff_result();
+        live.flops_per_sec = f64::from_bits(base.flops_per_sec.to_bits() + 1);
+        let d = classify_cell(&live, &base, DiffTolerances::exact());
+        let CellDiff::Drift(drifts) = d else {
+            panic!("one ulp must trip the bitwise gate");
+        };
+        assert_eq!(drifts.len(), 1);
+        assert_eq!(drifts[0].metric, "flops_per_sec");
+        assert_eq!(
+            classify_cell(&live, &base, DiffTolerances::uniform(1e-9)),
+            CellDiff::Match
+        );
+    }
+
+    #[test]
+    fn diff_jobs_reports_match_missing_and_extra() {
+        let dir = std::env::temp_dir()
+            .join(format!("taskbench_coord_diff_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = SimParams::default();
+        let jobs = sim_jobs(3);
+        // Pin the first two cells, plus one cell outside the list.
+        let bstore = ResultStore::new(&dir);
+        run_jobs(&jobs[..2], Some(&bstore), Shard::full(), 1, &p).unwrap();
+        let stray = sim_jobs(4).pop().unwrap();
+        run_jobs(&[stray.clone()], Some(&bstore), Shard::full(), 1, &p)
+            .unwrap();
+
+        let baseline = ReplayBackend::open(&dir);
+        let report = diff_jobs(
+            &jobs,
+            None,
+            &baseline,
+            Shard::full(),
+            1,
+            &p,
+            DiffTolerances::exact(),
+        )
+        .unwrap();
+        assert_eq!(report.cells.len(), 3);
+        assert_eq!(report.matches(), 2, "{}", report.render());
+        assert_eq!(report.missing(), 1);
+        assert_eq!(report.extra, vec![stray.id()]);
+        assert!(report.is_clean());
+        assert!(!report.is_strictly_clean());
+        let rendered = report.render();
+        assert!(rendered.contains("MISSING"), "{rendered}");
+        assert!(rendered.contains("EXTRA"), "{rendered}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -15,10 +15,16 @@
 //!   coordinator reserves the whole machine; validation jobs
 //!   (`ExecMode::Validate`) measure correctness, not time, and overlap
 //!   freely.
+//! * [`ReplayBackend`] — executes nothing: it serves measurements from a
+//!   pinned baseline store (a golden-record directory). The
+//!   coordinator's diff mode runs a live backend and this one over the
+//!   same job list and compares the two, cell by cell.
 //!
-//! [`Backends`] bundles both and routes each job by its `ExecMode`; it is
-//! what the coordinator holds. Everything upstream (campaigns, the METG
-//! sweep, the CLI) is backend-agnostic.
+//! [`Backends`] bundles the two live backends and routes each job by its
+//! `ExecMode`; it is what the coordinator holds. Everything upstream
+//! (campaigns, the METG sweep, the CLI) is backend-agnostic.
+
+use anyhow::Context;
 
 use crate::core::{
     oracle_outputs, validate_execution, GraphConfig, KernelConfig, TaskGraph,
@@ -28,6 +34,7 @@ use crate::runtimes::{run_with, Measurement, RunOptions};
 use crate::sim::{simulate, Machine, SimParams};
 
 use super::job::{ExecMode, Job, JobResult, JobSpec};
+use super::store::ResultStore;
 
 /// One way of measuring a benchmark cell.
 pub trait Backend: Sync {
@@ -210,6 +217,72 @@ impl Backend for NativeBackend {
     }
 }
 
+/// Record-and-replay backend: serves measurements from a pinned baseline
+/// store instead of executing anything.
+///
+/// The third [`Backend`] impl. Where [`SimBackend`] asks the model and
+/// [`NativeBackend`] asks the machine, this one asks a directory of
+/// golden records — which makes a regression diff just "run the live
+/// backend and the replay backend over the same job list and compare".
+/// Replay never writes; open the baseline with
+/// [`ResultStore::read_only`] to make that a hard guarantee.
+#[derive(Debug, Clone)]
+pub struct ReplayBackend {
+    baseline: ResultStore,
+}
+
+impl ReplayBackend {
+    pub fn new(baseline: ResultStore) -> ReplayBackend {
+        ReplayBackend { baseline }
+    }
+
+    /// Open `dir` as a read-only pinned baseline.
+    pub fn open(dir: impl Into<std::path::PathBuf>) -> ReplayBackend {
+        ReplayBackend::new(ResultStore::read_only(dir))
+    }
+
+    pub fn store(&self) -> &ResultStore {
+        &self.baseline
+    }
+
+    /// The pinned result for `job`, bitwise as persisted. Diffing
+    /// compares through here rather than [`Backend::execute`]: a
+    /// [`Measurement`] reconstructed from a record re-derives its
+    /// metrics, and `(x · w) / w` is not always bitwise `x` in f64.
+    pub fn lookup(&self, job: &Job) -> Option<JobResult> {
+        self.baseline.load(job)
+    }
+}
+
+impl Backend for ReplayBackend {
+    fn name(&self) -> &'static str {
+        "replay"
+    }
+
+    fn execute(&self, job: &Job, _graph: &TaskGraph) -> crate::Result<Measurement> {
+        let r = self.lookup(job).with_context(|| {
+            format!(
+                "no baseline record for job {} in {}",
+                job.id(),
+                self.baseline.dir().display()
+            )
+        })?;
+        Ok(Measurement {
+            system: job.spec.system,
+            wall_secs: r.wall_secs,
+            wall_samples: vec![r.wall_secs],
+            tasks: r.tasks,
+            // The record stores the derived rate; invert the derivation
+            // so `flops_per_sec()` reproduces it (up to f64 rounding).
+            total_flops: r.flops_per_sec * r.wall_secs,
+            messages: 0,
+            checksum: r.checksum,
+            peak_flops: r.peak_flops,
+            records: None,
+        })
+    }
+}
+
 /// The engine's backend set: one instance of each, routed by `ExecMode`.
 #[derive(Debug)]
 pub struct Backends {
@@ -294,6 +367,44 @@ mod tests {
         let graph = job_graph(&sim_job.spec);
         assert!(b.native.execute(&sim_job, &graph).is_err());
         assert!(b.sim.execute(&native_job, &graph).is_err());
+    }
+
+    #[test]
+    fn replay_backend_serves_pinned_records_and_never_executes() {
+        let dir = std::env::temp_dir()
+            .join(format!("taskbench_replay_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let writer = ResultStore::new(&dir);
+        let job = Job::new(spec(ExecMode::Sim));
+        let pinned = JobResult {
+            tasks: 30,
+            wall_secs: 0.25,
+            flops_per_sec: 8e9,
+            granularity_us: 25.0,
+            peak_flops: 1.6e10,
+            checksum: Some(42.5),
+        };
+        writer.save(&job, &pinned, 7).unwrap();
+
+        let replay = ReplayBackend::open(&dir);
+        assert_eq!(replay.name(), "replay");
+        assert!(replay.store().is_read_only());
+        // Reads overlap freely — the capability flag says so.
+        assert!(replay.concurrent_safe(&job));
+        assert_eq!(replay.lookup(&job), Some(pinned.clone()));
+
+        let graph = job_graph(&job.spec);
+        let m = replay.execute(&job, &graph).unwrap();
+        assert_eq!(m.tasks, pinned.tasks);
+        assert_eq!(m.wall_secs, pinned.wall_secs);
+        assert_eq!(m.checksum, pinned.checksum);
+        assert_eq!(m.peak_flops, pinned.peak_flops);
+
+        // A cell the baseline has never seen is an error, not a run.
+        let missing = Job::new(spec(ExecMode::Native));
+        let err = replay.execute(&missing, &graph).unwrap_err();
+        assert!(format!("{err:#}").contains("no baseline record"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

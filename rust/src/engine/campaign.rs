@@ -16,6 +16,7 @@
 //! only in [`SystemConfig`]).
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 use crate::core::DependencePattern;
 use crate::harness::report::Table;
@@ -68,6 +69,42 @@ impl CampaignKind {
             CampaignKind::Fig1 | CampaignKind::Table2 | CampaignKind::Fig3 => 100,
             CampaignKind::Fig2 => 50,
             CampaignKind::HpxAblation | CampaignKind::Patterns => 60,
+        }
+    }
+}
+
+/// Per-metric relative tolerances for golden-record diffing (`jobs
+/// diff`). `0.0` on a metric demands bitwise equality — the contract sim
+/// results already honor; native wall clocks measure a real machine and
+/// need an envelope. Task counts and checksums are never tolerated:
+/// both are structural, and a mismatch is a hard failure regardless of
+/// any tolerance here.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DiffTolerances {
+    /// Relative tolerance on mean wall seconds.
+    pub wall_secs: f64,
+    /// Relative tolerance on achieved FLOP/s.
+    pub flops_per_sec: f64,
+    /// Relative tolerance on task granularity.
+    pub granularity_us: f64,
+    /// Relative tolerance on the machine's peak FLOP/s (host-dependent
+    /// for native cells, so the loosest of the four).
+    pub peak_flops: f64,
+}
+
+impl DiffTolerances {
+    /// Bitwise equality on every metric (the sim-campaign gate).
+    pub fn exact() -> DiffTolerances {
+        DiffTolerances::uniform(0.0)
+    }
+
+    /// One relative tolerance for every metric (the `--tol` override).
+    pub fn uniform(rel: f64) -> DiffTolerances {
+        DiffTolerances {
+            wall_secs: rel,
+            flops_per_sec: rel,
+            granularity_us: rel,
+            peak_flops: rel,
         }
     }
 }
@@ -140,6 +177,32 @@ impl Campaign {
                 _ => vec![("default".to_string(), SystemConfig::default())],
             },
             mode: ExecMode::Sim,
+        }
+    }
+
+    /// Baseline store directory for this campaign under a golden root:
+    /// `<root>/<campaign-id>`, so one `golden/` tree pins several
+    /// artifacts side by side (`golden/fig1/`, `golden/fig3/`, ...).
+    /// Every caller of `jobs diff`/`jobs snapshot` resolves the baseline
+    /// through here so the two always address the same directory.
+    pub fn baseline_dir(&self, root: &Path) -> PathBuf {
+        root.join(self.kind.id())
+    }
+
+    /// The tolerances `jobs diff` applies to this campaign's cells. Sim
+    /// results are bitwise deterministic, so any difference at all is a
+    /// regression; native cells time a real machine, so they get a
+    /// generous envelope (wall-clock jitter) and an even looser bound on
+    /// peak FLOP/s (which tracks the host, not the code under test).
+    pub fn diff_tolerances(&self) -> DiffTolerances {
+        match self.mode {
+            ExecMode::Sim => DiffTolerances::exact(),
+            ExecMode::Native | ExecMode::Validate => DiffTolerances {
+                wall_secs: 0.25,
+                flops_per_sec: 0.25,
+                granularity_us: 0.25,
+                peak_flops: 0.5,
+            },
         }
     }
 
@@ -743,6 +806,23 @@ mod tests {
         let dat = c.dat(&map);
         assert!(dat.contains("# build Stealing on"), "{dat}");
         assert_eq!(dat.matches("# build").count(), 2);
+    }
+
+    #[test]
+    fn baseline_resolution_and_tolerances_follow_the_mode() {
+        let mut c = small(CampaignKind::Fig1);
+        assert_eq!(
+            c.baseline_dir(Path::new("golden")),
+            Path::new("golden").join("fig1")
+        );
+        // Sim campaigns gate bitwise; native ones get an envelope, with
+        // peak (a host property) the loosest metric of the four.
+        assert_eq!(c.diff_tolerances(), DiffTolerances::exact());
+        c.mode = ExecMode::Native;
+        let tol = c.diff_tolerances();
+        assert!(tol.wall_secs > 0.0);
+        assert!(tol.peak_flops >= tol.wall_secs);
+        assert_eq!(DiffTolerances::uniform(0.0), DiffTolerances::exact());
     }
 
     #[test]

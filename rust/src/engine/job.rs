@@ -20,6 +20,14 @@
 //! the HPX stealing ablation, hybrid rank overrides) extend the
 //! canonical form, so their ids are new — exactly the cells v1 could not
 //! express.
+//!
+//! The same rule governs the result side: a [`JobResult`] whose
+//! `checksum` is `None` writes no `"checksum"` member, so every record
+//! written before checksums were persisted parses unchanged (as a
+//! checksum-less result) and re-serializes byte-identically. Records
+//! that do carry one (native runs always checksum; sim runs only under
+//! oracle replay) let `jobs diff` treat a checksum mismatch as a hard
+//! failure rather than mere metric drift.
 
 use anyhow::Context;
 
@@ -325,6 +333,11 @@ pub struct JobResult {
     /// Peak FLOP/s of the (simulated or calibrated) machine — METG
     /// aggregation normalizes against this.
     pub peak_flops: f64,
+    /// Order-independent checksum over the final timestep, when the
+    /// backend computed one (native runs always do; sim runs only under
+    /// oracle replay). `None` contributes no JSON member, so records
+    /// predating this field parse and re-serialize unchanged.
+    pub checksum: Option<f64>,
 }
 
 impl JobResult {
@@ -341,6 +354,7 @@ impl JobResult {
             flops_per_sec: m.flops_per_sec(),
             granularity_us: m.task_granularity_us(cores),
             peak_flops: m.peak_flops,
+            checksum: m.checksum,
         }
     }
 
@@ -361,13 +375,19 @@ impl JobResult {
     }
 
     fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut members = vec![
             ("tasks".into(), Json::Num(self.tasks as f64)),
             ("wall_secs".into(), Json::Num(self.wall_secs)),
             ("flops_per_sec".into(), Json::Num(self.flops_per_sec)),
             ("granularity_us".into(), Json::Num(self.granularity_us)),
             ("peak_flops".into(), Json::Num(self.peak_flops)),
-        ])
+        ];
+        // Absent checksum contributes nothing (pre-checksum records stay
+        // byte-identical; see the module-level back-compat rule).
+        if let Some(c) = self.checksum {
+            members.push(("checksum".into(), Json::Num(c)));
+        }
+        Json::Obj(members)
     }
 
     fn from_json(v: &Json) -> anyhow::Result<JobResult> {
@@ -385,6 +405,16 @@ impl JobResult {
             flops_per_sec: f("flops_per_sec")?,
             granularity_us: f("granularity_us")?,
             peak_flops: f("peak_flops")?,
+            // Optional member, but corruption is still corruption: a
+            // present non-numeric checksum is rejected like any other
+            // damaged field, not silently downgraded to "not computed".
+            checksum: match v.get("checksum") {
+                Some(c) => Some(
+                    c.as_f64()
+                        .context("result record `checksum` is not a number")?,
+                ),
+                None => None,
+            },
         })
     }
 }
@@ -545,6 +575,7 @@ mod tests {
             flops_per_sec: 1e9,
             granularity_us: 10.0,
             peak_flops: 2e9,
+            checksum: None,
         };
         let v2 = record_to_json(&job, &result, 7);
         // Strip the v2-only member to reconstruct the v1 byte stream.
@@ -566,6 +597,7 @@ mod tests {
             flops_per_sec: 1.0,
             granularity_us: 1.0,
             peak_flops: 1.0,
+            checksum: None,
         };
         let text = record_to_json(&job, &result, 7).replace("\"v\":2", "\"v\":3");
         assert!(record_from_json(&text).is_err());
@@ -580,6 +612,7 @@ mod tests {
             flops_per_sec: 2.44e12,
             granularity_us: 123.456,
             peak_flops: 4.8e12,
+            checksum: None,
         };
         let fp = params_fingerprint(&SimParams::default());
         let text = record_to_json(&job, &result, fp);
@@ -607,6 +640,7 @@ mod tests {
             flops_per_sec: 1.0,
             granularity_us: 1.0,
             peak_flops: 1.0,
+            checksum: None,
         };
         let text = record_to_json(&job, &result, 3);
         assert!(text.contains("\"config\""), "{text}");
@@ -618,6 +652,38 @@ mod tests {
     }
 
     #[test]
+    fn checksum_member_is_optional_and_round_trips() {
+        let job = Job::new(spec());
+        let with = JobResult {
+            tasks: 40,
+            wall_secs: 0.5,
+            flops_per_sec: 1e9,
+            granularity_us: 10.0,
+            peak_flops: 2e9,
+            checksum: Some(123.25),
+        };
+        let text = record_to_json(&job, &with, 7);
+        assert!(text.contains("\"checksum\":123.25"), "{text}");
+        let (_, back, _) = record_from_json(&text).unwrap();
+        assert_eq!(back, with);
+        assert_eq!(record_to_json(&job, &back, 7), text);
+
+        // A present-but-non-numeric checksum is corruption — rejected
+        // like any other damaged field, not downgraded to "none".
+        let bad = text.replace("\"checksum\":123.25", "\"checksum\":\"x\"");
+        assert!(record_from_json(&bad).is_err(), "{bad}");
+
+        // Absent checksum contributes nothing — the pre-checksum byte
+        // stream — and parses back as `None`.
+        let without = JobResult { checksum: None, ..with };
+        let text = record_to_json(&job, &without, 7);
+        assert!(!text.contains("checksum"), "{text}");
+        let (_, back, _) = record_from_json(&text).unwrap();
+        assert_eq!(back.checksum, None);
+        assert_eq!(record_to_json(&job, &back, 7), text);
+    }
+
+    #[test]
     fn tampered_record_rejected() {
         let job = Job::new(spec());
         let result = JobResult {
@@ -626,6 +692,7 @@ mod tests {
             flops_per_sec: 1.0,
             granularity_us: 1.0,
             peak_flops: 1.0,
+            checksum: None,
         };
         let text = record_to_json(&job, &result, 7)
             .replace("\"steps\":100", "\"steps\":99");

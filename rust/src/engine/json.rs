@@ -376,4 +376,67 @@ mod tests {
     fn integral_f64_renders_without_fraction() {
         assert_eq!(Json::Num(4800.0).render(), "4800");
     }
+
+    #[test]
+    fn every_writer_escape_parses_back() {
+        // Everything the writer can emit must round-trip: the standard
+        // single-character escapes, \uXXXX for other control chars, and
+        // raw multi-byte UTF-8.
+        let s = "q:\" bs:\\ nl:\n tab:\t cr:\r ctl:\u{1} acc:é emoji:🚀";
+        let text = Json::Str(s.into()).render();
+        assert!(text.contains("\\u0001"), "{text}");
+        assert_eq!(Json::parse(&text).unwrap().as_str().unwrap(), s);
+    }
+
+    #[test]
+    fn reader_accepts_escapes_the_writer_never_emits() {
+        let v = Json::parse(r#""\b\f\/\u0041\u00e9""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{8}\u{c}/A\u{e9}");
+    }
+
+    #[test]
+    fn bad_escapes_rejected() {
+        assert!(Json::parse(r#""\ud800""#).is_err(), "lone surrogate");
+        assert!(Json::parse(r#""\uZZZZ""#).is_err(), "non-hex \\u");
+        assert!(Json::parse(r#""\u00""#).is_err(), "truncated \\u");
+        assert!(Json::parse(r#""\q""#).is_err(), "unknown escape");
+    }
+
+    #[test]
+    fn non_finite_floats_are_a_writer_panic_not_bad_json() {
+        // Policy: records never carry inf/NaN — the writer refuses loudly
+        // instead of emitting invalid JSON or a lossy null...
+        for v in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let r = std::panic::catch_unwind(|| Json::Num(v).render());
+            assert!(r.is_err(), "{v} must not render");
+        }
+        // ...and the reader has no literal that could smuggle them in.
+        assert!(Json::parse("Infinity").is_err());
+        assert!(Json::parse("-Infinity").is_err());
+        assert!(Json::parse("NaN").is_err());
+    }
+
+    #[test]
+    fn negative_zero_round_trips_bitwise() {
+        let text = Json::Num(-0.0).render();
+        let Json::Num(back) = Json::parse(&text).unwrap() else {
+            panic!("not a number: {text}");
+        };
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits(), "{text}");
+    }
+
+    #[test]
+    fn deep_nesting_round_trips() {
+        let mut v = Json::Num(1.0);
+        for i in 0..32 {
+            v = Json::Obj(vec![(
+                format!("k{i}"),
+                Json::Arr(vec![v, Json::Null, Json::Bool(i % 2 == 0)]),
+            )]);
+        }
+        let text = v.render();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.render(), text);
+    }
 }

@@ -5,16 +5,19 @@
 //! is a serializable [`Job`] with a stable content hash over its
 //! configuration ([`job`]). *How a cell is measured* is itself a pluggable
 //! dimension: the [`backend`] module defines the [`Backend`] trait with a
-//! discrete-event-simulation backend and a native (real in-process
-//! runtime) backend, both reporting the same
-//! [`crate::runtimes::Measurement`]. Campaigns ([`campaign`]) enumerate an
-//! artifact's full job set; the [`crate::coordinator`] executes job lists
-//! sharded and concurrently through the backends; and every [`JobResult`]
-//! persists as a JSON record ([`json`]) under `results/` keyed by content
-//! hash ([`store`]), so finished cells are never recomputed and
-//! interrupted sweeps resume for free.
+//! discrete-event-simulation backend, a native (real in-process runtime)
+//! backend and a record-and-replay backend (golden baselines), all
+//! reporting the same [`crate::runtimes::Measurement`]. Campaigns
+//! ([`campaign`]) enumerate an artifact's full job set; the
+//! [`crate::coordinator`] executes job lists sharded and concurrently
+//! through the backends — and diffs them against a pinned baseline
+//! ([`diff_jobs`]); and every [`JobResult`] persists as a JSON record
+//! ([`json`]) under `results/` keyed by content hash ([`store`]), so
+//! finished cells are never recomputed and interrupted sweeps resume for
+//! free.
 //!
-//! CLI entry points: `repro jobs list | run | table | dat | calibrate`.
+//! CLI entry points:
+//! `repro jobs list | run | table | dat | calibrate | snapshot | diff`.
 
 pub mod backend;
 pub mod campaign;
@@ -24,12 +27,14 @@ pub mod json;
 pub mod params;
 pub mod store;
 
-pub use backend::{Backend, Backends, NativeBackend, SimBackend};
-pub use campaign::{Campaign, CampaignKind};
+pub use backend::{Backend, Backends, NativeBackend, ReplayBackend, SimBackend};
+pub use campaign::{Campaign, CampaignKind, DiffTolerances};
 pub use exec::execute_job;
 pub use job::{ExecMode, Job, JobResult, JobSpec};
 pub use store::ResultStore;
 
 // The coordinator is the execution half of the engine; re-export its
 // surface so `engine::*` is one-stop.
-pub use crate::coordinator::{run_jobs, RunSummary, Shard};
+pub use crate::coordinator::{
+    diff_jobs, run_jobs, CellDiff, DiffReport, MetricDrift, RunSummary, Shard,
+};

@@ -44,15 +44,29 @@ pub(crate) fn write_atomic(
 #[derive(Debug, Clone)]
 pub struct ResultStore {
     dir: PathBuf,
+    /// Writes are refused. Golden baselines open through this so no code
+    /// path — not even a buggy one — can clobber a pinned record.
+    read_only: bool,
 }
 
 impl ResultStore {
     pub fn new(dir: impl Into<PathBuf>) -> ResultStore {
-        ResultStore { dir: dir.into() }
+        ResultStore { dir: dir.into(), read_only: false }
+    }
+
+    /// A read-only view of `dir`: [`ResultStore::save`] fails instead of
+    /// writing. The baseline side of `jobs diff` opens golden
+    /// directories through this.
+    pub fn read_only(dir: impl Into<PathBuf>) -> ResultStore {
+        ResultStore { dir: dir.into(), read_only: true }
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    pub fn is_read_only(&self) -> bool {
+        self.read_only
     }
 
     /// Record path for a job.
@@ -93,11 +107,42 @@ impl ResultStore {
         result: &JobResult,
         params_fp: u64,
     ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.read_only,
+            "store {} is read-only (a pinned golden baseline)",
+            self.dir.display()
+        );
         write_atomic(
             &self.dir,
             &format!("{}.json", job.id()),
             &record_to_json(job, result, params_fp),
         )
+    }
+
+    /// Ids of every record file in the store — `*.json` file stems that
+    /// look like job hashes (16 hex chars), sorted. No record is parsed,
+    /// so a corrupt record still shows up here (unlike
+    /// [`Self::load_all`], which can only return what parses) and large
+    /// stores can be set-compared cheaply.
+    pub fn ids(&self) -> Vec<String> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out: Vec<String> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let p = e.path();
+                if p.extension().map(|x| x == "json") != Some(true) {
+                    return None;
+                }
+                let stem = p.file_stem()?.to_str()?;
+                (stem.len() == 16
+                    && stem.bytes().all(|b| b.is_ascii_hexdigit()))
+                .then(|| stem.to_string())
+            })
+            .collect();
+        out.sort();
+        out
     }
 
     /// All parseable records in the store, sorted by id (directory order
@@ -157,6 +202,7 @@ mod tests {
             flops_per_sec: v * 2.0,
             granularity_us: v * 3.0,
             peak_flops: v * 4.0,
+            checksum: None,
         }
     }
 
@@ -201,6 +247,23 @@ mod tests {
     }
 
     #[test]
+    fn read_only_store_loads_but_refuses_writes() {
+        let dir = tmp("read_only");
+        let writer = ResultStore::new(&dir);
+        let j = job(64);
+        writer.save(&j, &result(1.0), 7).unwrap();
+
+        let pinned = ResultStore::read_only(&dir);
+        assert!(pinned.is_read_only());
+        assert_eq!(pinned.load(&j), Some(result(1.0)));
+        let err = pinned.save(&j, &result(2.0), 7).unwrap_err();
+        assert!(format!("{err:#}").contains("read-only"), "{err:#}");
+        // The record on disk is untouched.
+        assert_eq!(writer.load(&j), Some(result(1.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn load_all_sorted_and_complete() {
         let dir = tmp("load_all");
         let store = ResultStore::new(&dir);
@@ -213,6 +276,26 @@ mod tests {
         let sorted = ids.clone();
         ids.sort();
         assert_eq!(ids, sorted);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ids_lists_records_without_parsing_and_skips_non_records() {
+        let dir = tmp("ids");
+        let store = ResultStore::new(&dir);
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        // A corrupt record keeps its id visible (load_all would drop it).
+        let j2 = job(128);
+        store.save(&j2, &result(2.0), 7).unwrap();
+        std::fs::write(store.path_for(&j2), "{corrupt").unwrap();
+        // Non-record files are invisible.
+        std::fs::write(dir.join("_calibration.json"), "{}").unwrap();
+        std::fs::write(dir.join("README.txt"), "hi").unwrap();
+        let mut want = vec![j.id(), j2.id()];
+        want.sort();
+        assert_eq!(store.ids(), want);
+        assert_eq!(store.load_all().len(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

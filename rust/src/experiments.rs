@@ -203,6 +203,7 @@ pub fn fig1_table(rows: &[Fig1Row], grains: &[u64]) -> Table {
                     flops_per_sec: run.flops_per_sec,
                     granularity_us: run.granularity_us,
                     peak_flops: r.peak_flops,
+                    checksum: None,
                 },
             );
         }

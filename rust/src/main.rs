@@ -17,6 +17,8 @@
 //! repro jobs table [--campaign ...] [--native] [--results DIR]
 //! repro jobs dat   [--campaign ...] [--native] [--results DIR]
 //! repro jobs calibrate [--results DIR] [--export FILE | --import FILE]
+//! repro jobs snapshot [--campaign ...] [--baseline DIR]      # pin goldens
+//! repro jobs diff  [--campaign ...] [--baseline DIR] [--tol X] [--strict]
 //! ```
 //!
 //! The `jobs` family is the engine path: enumerate an artifact's cells as
@@ -30,17 +32,34 @@
 //! peer exported, so multi-host campaigns share one calibration without
 //! hand-copying.
 //!
+//! `jobs snapshot` pins a campaign's records as a golden baseline under
+//! `<--baseline>/<campaign>/` (default root `golden/`), and `jobs diff`
+//! re-measures the campaign live and compares every cell against that
+//! pinned baseline: a checksum mismatch is a hard failure, metric drift
+//! beyond the campaign's tolerance (bitwise for sim cells; `--tol X`
+//! overrides) is a regression, and missing/extra cells are reported.
+//! Exit status is non-zero on any mismatch or regression — with
+//! `--strict`, on missing/extra cells too — which is what makes
+//! `jobs diff` a CI gate. The diff's live side always measures the
+//! current binary: unlike every other `jobs` action it ignores the
+//! configured results store, using a cache only when `--results DIR` is
+//! passed explicitly (to share one fresh store across the shards or
+//! campaigns of a single gating run).
+//!
 //! The offline vendor set has no `clap`; the parser below is a minimal
 //! `--key value` scanner with a config-file base (`--config file.toml`).
 
 use std::collections::HashMap;
 
 use taskbench_amt::config::ExperimentConfig;
-use taskbench_amt::coordinator::{run_jobs, Shard};
+use taskbench_amt::coordinator::{diff_jobs, run_jobs, Shard};
 use taskbench_amt::core::{
     DependencePattern, GraphConfig, KernelConfig, TaskGraph,
 };
-use taskbench_amt::engine::{Campaign, CampaignKind, JobResult, ResultStore};
+use taskbench_amt::engine::{
+    Campaign, CampaignKind, DiffTolerances, JobResult, ReplayBackend,
+    ResultStore,
+};
 use taskbench_amt::experiments;
 use taskbench_amt::metg::measure_peak_flops;
 use taskbench_amt::runtime::XlaTaskRuntime;
@@ -52,6 +71,8 @@ fn usage() -> ! {
         "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
          \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig3|hpx_ablation|patterns] [--native] [--key value ...]\n\
          \x20      repro jobs calibrate [--results DIR] [--export FILE | --import FILE]\n\
+         \x20      repro jobs snapshot [--campaign ...] [--baseline DIR]\n\
+         \x20      repro jobs diff [--campaign ...] [--baseline DIR] [--tol X] [--strict]\n\
          see the crate docs for details"
     );
     std::process::exit(2);
@@ -275,6 +296,14 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
     campaign
 }
 
+/// Golden-baseline root directory (`--baseline`, default `golden/`).
+/// Campaigns resolve their own subdirectory beneath it.
+fn baseline_root(m: &HashMap<String, String>) -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        m.get("baseline").cloned().unwrap_or_else(|| "golden".to_string()),
+    )
+}
+
 fn jobs_shard(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Shard {
     let spec = m
         .get("shard")
@@ -446,6 +475,124 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                 );
             }
             print!("{}", campaign.dat(&map));
+        }
+        "snapshot" => {
+            // Pin the campaign's *current* numbers as the golden
+            // baseline. Every cell re-measures — records already in the
+            // baseline must not be served back as cache hits, or a
+            // re-pin after an intentional metric change would silently
+            // keep the old numbers.
+            let bdir = campaign.baseline_dir(&baseline_root(m));
+            let bstore = ResultStore::new(&bdir);
+            let threads = get(m, "threads", cfg.threads);
+            let jobs = campaign.jobs();
+            // Drop records for cells the campaign no longer enumerates
+            // (they would read as `extra` — and fail --strict — forever);
+            // cells owned by other shards of this same campaign stay.
+            let listed: std::collections::HashSet<String> =
+                jobs.iter().map(|j| j.id()).collect();
+            for id in bstore.ids() {
+                if !listed.contains(&id) {
+                    let _ = std::fs::remove_file(
+                        bstore.dir().join(format!("{id}.json")),
+                    );
+                }
+            }
+            let summary = run_jobs(&jobs, None, shard, threads, &params)
+                .unwrap_or_else(|e| {
+                    eprintln!("jobs snapshot failed: {e:#}");
+                    std::process::exit(1);
+                });
+            let sim_fp =
+                taskbench_amt::engine::job::params_fingerprint(&params);
+            for (job, result) in &summary.results {
+                let fp = taskbench_amt::engine::job::job_fingerprint_with(
+                    job, sim_fp,
+                );
+                if let Err(e) = bstore.save(job, result, fp) {
+                    eprintln!("jobs snapshot failed: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+            println!(
+                "campaign {}: pinned {} freshly measured cells in {} \
+                 (shard {shard})",
+                campaign.kind.id(),
+                summary.results.len(),
+                bdir.display(),
+            );
+        }
+        "diff" => {
+            let bdir = campaign.baseline_dir(&baseline_root(m));
+            let baseline = ReplayBackend::open(&bdir);
+            let tol = match m.get("tol") {
+                Some(t) => match t.parse::<f64>() {
+                    Ok(v) if v >= 0.0 => DiffTolerances::uniform(v),
+                    _ => {
+                        eprintln!("bad --tol `{t}` (want a number >= 0)");
+                        std::process::exit(2);
+                    }
+                },
+                None => campaign.diff_tolerances(),
+            };
+            let threads = get(m, "threads", cfg.threads);
+            let jobs = campaign.jobs();
+            // The live side must measure the *current* binary. A results
+            // cache would happily serve records a previous build wrote
+            // (the record key is spec + sim params, never code), turning
+            // the gate into a diff of two stale files — so the live
+            // cache is opt-in, only used when --results is passed
+            // explicitly (e.g. to share one fresh store across the
+            // shards or campaigns of a single gating run).
+            let live_store =
+                m.get("results").map(|d| ResultStore::new(d.clone()));
+            let report = diff_jobs(
+                &jobs,
+                live_store.as_ref(),
+                &baseline,
+                shard,
+                threads,
+                &params,
+                tol,
+            )
+            .unwrap_or_else(|e| {
+                eprintln!("jobs diff failed: {e:#}");
+                std::process::exit(1);
+            });
+            print!("{}", report.render());
+            // "Clean because nothing was compared" must not read as a
+            // pass: say so loudly (and --strict turns it into a failure).
+            if report.matches() == 0
+                && report.is_clean()
+                && !report.cells.is_empty()
+            {
+                eprintln!(
+                    "warning: no cells compared — baseline {} holds no \
+                     records for this campaign (run `repro jobs snapshot \
+                     --campaign {} --baseline {}` to pin one)",
+                    bdir.display(),
+                    campaign.kind.id(),
+                    baseline_root(m).display(),
+                );
+            }
+            let ok = if get(m, "strict", false) {
+                report.is_strictly_clean()
+            } else {
+                report.is_clean()
+            };
+            if !ok {
+                eprintln!(
+                    "regression: campaign {} diverged from baseline {}",
+                    campaign.kind.id(),
+                    bdir.display(),
+                );
+                std::process::exit(1);
+            }
+            println!(
+                "campaign {}: no regressions vs {}",
+                campaign.kind.id(),
+                bdir.display(),
+            );
         }
         other => {
             eprintln!("unknown jobs action `{other}`");

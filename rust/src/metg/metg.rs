@@ -109,4 +109,49 @@ mod tests {
         let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
         assert!((m - 10.0).abs() < 1e-9);
     }
+
+    #[test]
+    fn non_monotonic_curve_stops_at_the_first_crossing() {
+        // Efficiency dips below the threshold at 10 µs and recovers at
+        // 1 µs. Task Bench walks from large grains and stops at the
+        // first crossing — a later recovery never rescues the METG, so
+        // the answer is the 100→10 interpolation, not 1.0.
+        let runs = vec![run(100.0, 0.9), run(10.0, 0.3), run(1.0, 0.8)];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        let want =
+            (100f64.ln() + (2.0 / 3.0) * (10f64.ln() - 100f64.ln())).exp();
+        assert!((m - want).abs() / want < 1e-9, "{m} vs {want}");
+        assert!(m > 10.0, "recovery point must not become the METG: {m}");
+    }
+
+    #[test]
+    fn curve_entirely_below_threshold_has_no_metg() {
+        let runs = vec![run(100.0, 0.49), run(10.0, 0.2), run(1.0, 0.01)];
+        assert!(metg_from_curve(&runs, 1.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn single_point_curve_above_threshold_is_that_granularity() {
+        let m = metg_from_curve(&[run(42.0, 0.9)], 1.0, 0.5).unwrap();
+        assert!((m - 42.0).abs() < 1e-12, "{m}");
+    }
+
+    #[test]
+    fn single_point_curve_below_threshold_has_no_metg() {
+        assert!(metg_from_curve(&[run(42.0, 0.1)], 1.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn empty_curve_has_no_metg() {
+        assert!(metg_from_curve(&[], 1.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn flat_curve_at_exactly_the_threshold_returns_smallest_grain() {
+        // >= at every point: the walk never crosses, so the smallest
+        // measured granularity is the METG (the paper's convention).
+        let runs = vec![run(100.0, 0.5), run(10.0, 0.5), run(1.0, 0.5)];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        assert!((m - 1.0).abs() < 1e-12, "{m}");
+    }
 }

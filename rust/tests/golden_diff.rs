@@ -1,0 +1,298 @@
+//! Golden-record regression harness acceptance tests (ISSUE 3):
+//!
+//! * pin a campaign (the in-process twin of `jobs snapshot`: a cached
+//!   run whose store *is* the baseline directory), then diff the same
+//!   campaign against it — the report is strictly clean, every cell a
+//!   bitwise `Match`;
+//! * a perturbed baseline record is detected as metric drift (the CI
+//!   negative check's in-process twin), and a checksum edit is a hard
+//!   failure no tolerance forgives;
+//! * a deleted record reports missing and a stray record reports extra —
+//!   neither fails the default gate, both fail the strict one;
+//! * the live side of a diff caches like any run (a second diff executes
+//!   zero graphs), shards compose, and the baseline is read-only.
+
+use std::path::{Path, PathBuf};
+
+use taskbench_amt::coordinator::{diff_jobs, run_jobs, Shard};
+use taskbench_amt::core::DependencePattern;
+use taskbench_amt::engine::{
+    Campaign, CampaignKind, DiffTolerances, ExecMode, Job, JobSpec,
+    ReplayBackend, ResultStore,
+};
+use taskbench_amt::runtimes::{SystemConfig, SystemKind};
+use taskbench_amt::sim::SimParams;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("taskbench_golden_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// A fig1-shaped campaign small enough for milliseconds of DES.
+fn small_campaign() -> Campaign {
+    let mut c = Campaign::new(
+        CampaignKind::Fig1,
+        vec![SystemKind::MpiLike, SystemKind::CharmLike],
+        6,
+        &[1 << 4, 1 << 8],
+    );
+    c.cores_per_node = 4;
+    c
+}
+
+/// Pin `campaign` under `root/<campaign-id>/` — `jobs snapshot`.
+fn snapshot(campaign: &Campaign, root: &Path, params: &SimParams) {
+    let bstore = ResultStore::new(campaign.baseline_dir(root));
+    run_jobs(&campaign.jobs(), Some(&bstore), Shard::full(), 2, params)
+        .unwrap();
+}
+
+#[test]
+fn snapshot_then_diff_is_strictly_clean() {
+    let root = tmpdir("clean");
+    let c = small_campaign();
+    let p = SimParams::default();
+    snapshot(&c, &root, &p);
+
+    let baseline = ReplayBackend::open(c.baseline_dir(&root));
+    let report = diff_jobs(
+        &c.jobs(),
+        None,
+        &baseline,
+        Shard::full(),
+        2,
+        &p,
+        c.diff_tolerances(),
+    )
+    .unwrap();
+    assert_eq!(report.cells.len(), c.jobs().len());
+    assert_eq!(report.matches(), report.cells.len(), "{}", report.render());
+    assert!(report.is_strictly_clean(), "{}", report.render());
+    // A clean diff is one summary line, however many cells it covered.
+    assert_eq!(report.render().lines().count(), 1, "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn perturbed_baseline_record_fails_the_diff() {
+    let root = tmpdir("perturbed");
+    let c = small_campaign();
+    let p = SimParams::default();
+    snapshot(&c, &root, &p);
+
+    // Nudge one pinned wall clock. The record stays parseable and keeps
+    // its id (ids hash the spec, not the result), so this must surface
+    // as metric drift — not as a missing cell.
+    let bstore = ResultStore::new(c.baseline_dir(&root));
+    let jobs = c.jobs();
+    let victim = &jobs[0];
+    let mut r = bstore.load(victim).unwrap();
+    r.wall_secs *= 1.5;
+    bstore.save(victim, &r, 0).unwrap();
+
+    let baseline = ReplayBackend::open(c.baseline_dir(&root));
+    let report = diff_jobs(
+        &jobs,
+        None,
+        &baseline,
+        Shard::full(),
+        2,
+        &p,
+        c.diff_tolerances(),
+    )
+    .unwrap();
+    assert_eq!(report.regressions(), 1, "{}", report.render());
+    assert!(!report.is_clean());
+    let rendered = report.render();
+    assert!(rendered.contains("DRIFT"), "{rendered}");
+    assert!(rendered.contains("wall_secs"), "{rendered}");
+    assert!(rendered.contains(&victim.id()), "{rendered}");
+
+    // A generous uniform tolerance forgives the same drift (the --tol
+    // override path).
+    let lax = diff_jobs(
+        &jobs,
+        None,
+        &baseline,
+        Shard::full(),
+        2,
+        &p,
+        DiffTolerances::uniform(0.9),
+    )
+    .unwrap();
+    assert!(lax.is_clean(), "{}", lax.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn checksum_mismatch_is_a_hard_failure_end_to_end() {
+    let root = tmpdir("checksum");
+    let p = SimParams::default();
+    // Validate cells persist real runtime checksums, so they exercise
+    // the hard-fail path through the full stack.
+    let job = Job::new(JobSpec {
+        system: SystemKind::MpiLike,
+        config: SystemConfig::default(),
+        pattern: DependencePattern::Stencil1D,
+        nodes: 1,
+        cores_per_node: 2,
+        tasks_per_core: 1,
+        steps: 4,
+        grain: 8,
+        mode: ExecMode::Validate,
+        reps: 1,
+        warmup: 0,
+    });
+    let bstore = ResultStore::new(&root);
+    run_jobs(&[job.clone()], Some(&bstore), Shard::full(), 1, &p).unwrap();
+    let mut pinned = bstore.load(&job).unwrap();
+    let sum = pinned.checksum.expect("validate cells persist checksums");
+    pinned.checksum = Some(sum + 1.0);
+    bstore.save(&job, &pinned, 0).unwrap();
+
+    let baseline = ReplayBackend::open(&root);
+    let report = diff_jobs(
+        &[job],
+        None,
+        &baseline,
+        Shard::full(),
+        1,
+        &p,
+        // An absurd tolerance: checksums must fail anyway.
+        DiffTolerances::uniform(1e9),
+    )
+    .unwrap();
+    assert_eq!(report.checksum_mismatches(), 1, "{}", report.render());
+    assert!(!report.is_clean());
+    assert!(report.render().contains("CHECKSUM"), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn missing_and_extra_cells_report_without_failing() {
+    let root = tmpdir("missing_extra");
+    let c = small_campaign();
+    let p = SimParams::default();
+    snapshot(&c, &root, &p);
+
+    let bstore = ResultStore::new(c.baseline_dir(&root));
+    let jobs = c.jobs();
+    // Forget one pinned cell; pin one cell the campaign no longer has.
+    std::fs::remove_file(bstore.path_for(&jobs[1])).unwrap();
+    let mut widened = small_campaign();
+    widened.grains = vec![1 << 12];
+    run_jobs(&widened.jobs()[..1], Some(&bstore), Shard::full(), 1, &p)
+        .unwrap();
+
+    let baseline = ReplayBackend::open(c.baseline_dir(&root));
+    let report = diff_jobs(
+        &jobs,
+        None,
+        &baseline,
+        Shard::full(),
+        2,
+        &p,
+        c.diff_tolerances(),
+    )
+    .unwrap();
+    assert_eq!(report.missing(), 1, "{}", report.render());
+    assert_eq!(report.extra.len(), 1, "{}", report.render());
+    assert_eq!(report.matches(), jobs.len() - 1);
+    assert!(report.is_clean(), "missing/extra report — they do not fail");
+    assert!(!report.is_strictly_clean(), "--strict upgrades them");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn diff_live_side_caches_like_any_run() {
+    let root = tmpdir("cache_baseline");
+    let live_dir = tmpdir("cache_live");
+    let c = small_campaign();
+    let p = SimParams::default();
+    snapshot(&c, &root, &p);
+
+    let baseline = ReplayBackend::open(c.baseline_dir(&root));
+    let live = ResultStore::new(&live_dir);
+    let first = diff_jobs(
+        &c.jobs(),
+        Some(&live),
+        &baseline,
+        Shard::full(),
+        2,
+        &p,
+        c.diff_tolerances(),
+    )
+    .unwrap();
+    assert_eq!(first.executed, c.jobs().len());
+    assert_eq!(first.cached, 0);
+    assert!(first.is_strictly_clean(), "{}", first.render());
+
+    let second = diff_jobs(
+        &c.jobs(),
+        Some(&live),
+        &baseline,
+        Shard::full(),
+        2,
+        &p,
+        c.diff_tolerances(),
+    )
+    .unwrap();
+    assert_eq!(second.executed, 0, "second diff must be a pure cache hit");
+    assert_eq!(second.cached, c.jobs().len());
+    assert!(second.is_strictly_clean(), "{}", second.render());
+    let _ = std::fs::remove_dir_all(&root);
+    let _ = std::fs::remove_dir_all(&live_dir);
+}
+
+#[test]
+fn sharded_diffs_compose_and_stay_clean() {
+    let root = tmpdir("sharded");
+    let c = small_campaign();
+    let p = SimParams::default();
+    snapshot(&c, &root, &p);
+
+    let baseline = ReplayBackend::open(c.baseline_dir(&root));
+    let jobs = c.jobs();
+    let a = diff_jobs(
+        &jobs,
+        None,
+        &baseline,
+        Shard::parse("1/2").unwrap(),
+        1,
+        &p,
+        c.diff_tolerances(),
+    )
+    .unwrap();
+    let b = diff_jobs(
+        &jobs,
+        None,
+        &baseline,
+        Shard::parse("2/2").unwrap(),
+        1,
+        &p,
+        c.diff_tolerances(),
+    )
+    .unwrap();
+    assert_eq!(a.cells.len() + b.cells.len(), jobs.len());
+    assert!(a.is_strictly_clean(), "{}", a.render());
+    assert!(b.is_strictly_clean(), "{}", b.render());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn replay_baseline_refuses_writes() {
+    let root = tmpdir("read_only");
+    let c = small_campaign();
+    let p = SimParams::default();
+    snapshot(&c, &root, &p);
+
+    let baseline = ReplayBackend::open(c.baseline_dir(&root));
+    let jobs = c.jobs();
+    let job = &jobs[0];
+    let pinned = baseline.lookup(job).expect("snapshot pinned this cell");
+    let err = baseline.store().save(job, &pinned, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("read-only"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&root);
+}
