@@ -1,0 +1,36 @@
+//! Bench: regenerate the large-node scaling campaigns the windowed sim
+//! core makes affordable — `fig2_scale` (METG for the distributed
+//! systems up to 64 simulated nodes / 3072 cores) and `fig3_nodes` (the
+//! five Fig 3 Charm++ builds across the node axis at the reference
+//! grain).
+//!
+//! `cargo bench --bench scale`
+//!
+//! Runs through the experiment engine (one content-hashed job per cell);
+//! for cached/sharded campaigns use `repro jobs run --campaign
+//! fig2_scale` / `--campaign fig3_nodes`.
+
+use taskbench_amt::experiments::{fig2_scale, fig3_nodes};
+use taskbench_amt::sim::SimParams;
+
+fn main() {
+    let params = SimParams::default();
+    let grains: Vec<u64> = (2..=16).step_by(2).map(|p| 1u64 << p).collect();
+
+    let t0 = std::time::Instant::now();
+    let t = fig2_scale(30, &grains, &params);
+    println!("# Fig 2 at scale — METG (µs) vs nodes (to 64), overdecomposition 8");
+    println!("{}", t.to_markdown());
+    println!("fig2_scale wall: {:?}\n", t0.elapsed());
+
+    let t0 = std::time::Instant::now();
+    let t = fig3_nodes(50, &params);
+    println!("# Fig 3 over nodes — Charm++ builds × node count, grain 4096");
+    println!("{}", t.to_markdown());
+    println!("fig3_nodes wall: {:?}", t0.elapsed());
+
+    println!();
+    println!("expected shape: MPI & Charm++ low and flat; HPX-dist and");
+    println!("MPI+OpenMP higher and rising with node count (paper §6.2),");
+    println!("with the build-option deltas of Fig 3 persisting at scale.");
+}

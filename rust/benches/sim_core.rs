@@ -1,0 +1,21 @@
+//! Bench: the simulator's own throughput — streaming windowed core vs
+//! the frozen pre-refactor oracle scheduler, with the bitwise-parity
+//! check embedded. Writes `BENCH_sim.json` (same recorder `repro jobs
+//! bench-sim` runs), so the perf trajectory has persisted data points.
+//!
+//! `cargo bench --bench sim_core`
+
+fn main() {
+    let report = taskbench_amt::engine::simbench::write_sim_bench(
+        "BENCH_sim.json",
+        64,
+        4,
+    )
+    .expect("writing BENCH_sim.json");
+    print!("{}", report.render());
+    println!("recorded in BENCH_sim.json");
+    assert!(
+        report.all_bitwise(),
+        "windowed core diverged from the oracle scheduler"
+    );
+}

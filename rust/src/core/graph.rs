@@ -116,6 +116,27 @@ impl TaskGraph {
         &self.tables[self.dset_at(t)][x]
     }
 
+    /// The dependence window of timestep `t`: both tables the streaming
+    /// engines touch while step `t` is active, with the per-step dset
+    /// resolution done once instead of per point. Borrows straight from
+    /// the cached tables — taking a window allocates nothing, and the
+    /// memory a consumer holds stays `O(width)` per resident step no
+    /// matter how large `steps` grows.
+    pub fn window(&self, t: usize) -> StepWindow<'_> {
+        StepWindow {
+            deps: if t >= 1 && t < self.cfg.steps {
+                Some(&self.tables[self.dset_at(t)])
+            } else {
+                None
+            },
+            consumers: if t + 1 < self.cfg.steps {
+                Some(&self.rtables[self.dset_at(t + 1)])
+            } else {
+                None
+            },
+        }
+    }
+
     /// Points at `t+1` that read `(x, t)`. Empty for the last timestep.
     pub fn reverse_dependencies(&self, x: usize, t: usize) -> &[u32] {
         if t + 1 >= self.cfg.steps {
@@ -142,6 +163,40 @@ impl TaskGraph {
     /// Bytes in one task's output payload.
     pub fn payload_bytes(&self) -> usize {
         self.cfg.kernel.payload_elems * std::mem::size_of::<f32>()
+    }
+}
+
+/// A zero-copy view of one timestep's dependence structure: the edges
+/// *into* step `t` ([`StepWindow::deps`]) and the edges *out of* step `t`
+/// toward `t+1` ([`StepWindow::consumers`]). This is the whole iteration
+/// surface a windowed consumer needs — per-point vectors are never
+/// materialized, only borrowed from the graph's per-dset tables.
+#[derive(Debug, Clone, Copy)]
+pub struct StepWindow<'g> {
+    /// Table of edges into the windowed step (`None` for step 0).
+    deps: Option<&'g [Vec<u32>]>,
+    /// Table of edges out of the windowed step (`None` for the last).
+    consumers: Option<&'g [Vec<u32>]>,
+}
+
+impl<'g> StepWindow<'g> {
+    /// Points at `t-1` that `(x, t)` reads — `TaskGraph::dependencies`
+    /// without the per-call dset resolution. Empty for `t == 0`.
+    pub fn deps(&self, x: usize) -> &'g [u32] {
+        match self.deps {
+            Some(tbl) => &tbl[x],
+            None => &[],
+        }
+    }
+
+    /// Points at `t+1` that read `(x, t)` —
+    /// `TaskGraph::reverse_dependencies` without the per-call dset
+    /// resolution. Empty for the last timestep.
+    pub fn consumers(&self, x: usize) -> &'g [u32] {
+        match self.consumers {
+            Some(tbl) => &tbl[x],
+            None => &[],
+        }
     }
 }
 
@@ -231,5 +286,23 @@ mod tests {
     #[should_panic(expected = "width must be positive")]
     fn zero_width_rejected() {
         graph(Stencil1D, 0, 4);
+    }
+
+    #[test]
+    fn window_agrees_with_pointwise_lookups() {
+        for dep in DependencePattern::all() {
+            let g = graph(dep, 16, 9);
+            for t in 0..g.steps() {
+                let w = g.window(t);
+                for x in 0..g.width() {
+                    assert_eq!(w.deps(x), g.dependencies(x, t), "{dep:?} ({x},{t})");
+                    assert_eq!(
+                        w.consumers(x),
+                        g.reverse_dependencies(x, t),
+                        "{dep:?} ({x},{t})"
+                    );
+                }
+            }
+        }
     }
 }

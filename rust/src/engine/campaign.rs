@@ -34,8 +34,15 @@ pub enum CampaignKind {
     Table2,
     /// Fig 2: METG per system × node count, fixed overdecomposition.
     Fig2,
+    /// Fig 2 extended past the paper: METG for the distributed systems
+    /// at large simulated node counts (to 64 nodes / 3072 cores) — the
+    /// windowed-sim-core scaling campaign.
+    Fig2Scale,
     /// Fig 3 / §5.1: Charm++ build-option ablation × grain sweep, 8 nodes.
     Fig3,
+    /// Fig 3 extended over the node axis: the five Charm++ builds ×
+    /// large node counts at the paper's reference grain.
+    Fig3Nodes,
     /// §5.2: HPX work-stealing on/off × grain sweep, overdecomposed.
     HpxAblation,
     /// §6.3 outlook: METG per system × dependence pattern, 1 node.
@@ -45,7 +52,7 @@ pub enum CampaignKind {
 impl CampaignKind {
     pub fn all() -> Vec<CampaignKind> {
         use CampaignKind::*;
-        vec![Fig1, Table2, Fig2, Fig3, HpxAblation, Patterns]
+        vec![Fig1, Table2, Fig2, Fig2Scale, Fig3, Fig3Nodes, HpxAblation, Patterns]
     }
 
     pub fn id(&self) -> &'static str {
@@ -53,7 +60,9 @@ impl CampaignKind {
             CampaignKind::Fig1 => "fig1",
             CampaignKind::Table2 => "table2",
             CampaignKind::Fig2 => "fig2",
+            CampaignKind::Fig2Scale => "fig2_scale",
             CampaignKind::Fig3 => "fig3",
+            CampaignKind::Fig3Nodes => "fig3_nodes",
             CampaignKind::HpxAblation => "hpx_ablation",
             CampaignKind::Patterns => "patterns",
         }
@@ -68,8 +77,23 @@ impl CampaignKind {
         match self {
             CampaignKind::Fig1 | CampaignKind::Table2 | CampaignKind::Fig3 => 100,
             CampaignKind::Fig2 => 50,
+            // Large-node cells are wide (64 × 48 cores × tpc points per
+            // step); fewer steps keep a cell in the seconds range — the
+            // windowed core's memory is step-independent either way.
+            CampaignKind::Fig2Scale => 30,
+            CampaignKind::Fig3Nodes => 50,
             CampaignKind::HpxAblation | CampaignKind::Patterns => 60,
         }
+    }
+
+    /// Campaigns whose defining axis is the node count: their job set
+    /// sweeps every entry of `Campaign::nodes` and their renderers emit
+    /// one column (or row) per node count.
+    pub fn sweeps_nodes(&self) -> bool {
+        matches!(
+            self,
+            CampaignKind::Fig2 | CampaignKind::Fig2Scale | CampaignKind::Fig3Nodes
+        )
     }
 }
 
@@ -150,25 +174,43 @@ impl Campaign {
         Campaign {
             kind,
             systems: match kind {
-                CampaignKind::Fig3 => vec![SystemKind::CharmLike],
+                CampaignKind::Fig3 | CampaignKind::Fig3Nodes => {
+                    vec![SystemKind::CharmLike]
+                }
                 CampaignKind::HpxAblation => vec![SystemKind::HpxLocal],
+                // Only systems that exist beyond one node can climb the
+                // large-node axis (paper row order preserved).
+                CampaignKind::Fig2Scale => SystemKind::all()
+                    .into_iter()
+                    .filter(|s| !s.is_shared_memory_only())
+                    .collect(),
                 _ => systems,
             },
             cores_per_node: 48,
             steps,
-            grains,
+            grains: match kind {
+                // The node axis is the sweep; pin the paper's Fig 3
+                // reference grain unless the caller overrides it.
+                CampaignKind::Fig3Nodes => vec![4096],
+                _ => grains,
+            },
             nodes: match kind {
                 CampaignKind::Fig2 => vec![1, 2, 4, 8],
+                CampaignKind::Fig2Scale | CampaignKind::Fig3Nodes => {
+                    vec![8, 16, 32, 64]
+                }
                 CampaignKind::Fig3 => vec![8],
                 _ => vec![1],
             },
             tasks_per_core: match kind {
                 CampaignKind::Table2 => vec![1, 8, 16],
-                CampaignKind::Fig2 | CampaignKind::HpxAblation => vec![8],
+                CampaignKind::Fig2
+                | CampaignKind::Fig2Scale
+                | CampaignKind::HpxAblation => vec![8],
                 _ => vec![1],
             },
             configs: match kind {
-                CampaignKind::Fig3 => {
+                CampaignKind::Fig3 | CampaignKind::Fig3Nodes => {
                     SystemConfig::fig3_builds().into_iter().map(label).collect()
                 }
                 CampaignKind::HpxAblation => {
@@ -214,10 +256,13 @@ impl Campaign {
         }
     }
 
-    /// The node count a single-column renderer addresses — must agree
-    /// with [`Campaign::jobs`] when the default axes were overridden.
-    /// `pub(crate)` so out-of-module callers that feed the renderer
-    /// (e.g. `experiments::fig1_table`) key their inserts identically.
+    /// The node count a renderer addresses when the node axis is *not*
+    /// being swept (a single configured count). Node-sweeping campaigns
+    /// and multi-valued `--nodes` overrides never collapse to this: the
+    /// full axis comes from [`Campaign::job_nodes`], and every renderer
+    /// iterates it — one row/column per node count. `pub(crate)` so
+    /// out-of-module callers that feed the renderer (e.g.
+    /// `experiments::fig1_table`) key their inserts identically.
     pub(crate) fn render_nodes(&self) -> usize {
         self.nodes.first().copied().unwrap_or(1)
     }
@@ -278,13 +323,17 @@ impl Campaign {
         )
     }
 
-    /// Node counts [`Campaign::jobs`] enumerates — only Fig 2 sweeps the
-    /// node axis; every other kind pins it to the rendered value so the
-    /// job set and the rendered table always address the same cells.
-    fn job_nodes(&self) -> Vec<usize> {
-        match self.kind {
-            CampaignKind::Fig2 => self.nodes.clone(),
-            _ => vec![self.render_nodes()],
+    /// Node counts [`Campaign::jobs`] enumerates *and* the renderers
+    /// iterate. Node-sweeping kinds (`fig2`, `fig2_scale`, `fig3_nodes`)
+    /// always sweep their whole `nodes` axis; every other kind sweeps it
+    /// too the moment it holds more than one count (a `--nodes 2,4`
+    /// override), instead of silently collapsing to the first entry —
+    /// the job set and the rendered table always address the same cells.
+    pub(crate) fn job_nodes(&self) -> Vec<usize> {
+        if self.kind.sweeps_nodes() || self.nodes.len() > 1 {
+            self.nodes.clone()
+        } else {
+            vec![self.render_nodes()]
         }
     }
 
@@ -367,48 +416,68 @@ impl Campaign {
         match self.kind {
             CampaignKind::Fig1 => self.fig1_table(results),
             CampaignKind::Table2 => self.table2_table(results),
-            CampaignKind::Fig2 => self.fig2_table(results),
+            CampaignKind::Fig2 | CampaignKind::Fig2Scale => {
+                self.fig2_table(results)
+            }
             CampaignKind::Fig3 => self.config_table(results, "Build"),
+            CampaignKind::Fig3Nodes => self.config_nodes_table(results),
             CampaignKind::HpxAblation => self.config_table(results, "Variant"),
             CampaignKind::Patterns => self.patterns_table(results),
         }
     }
 
     fn fig1_table(&self, results: &HashMap<String, JobResult>) -> Table {
-        let mut headers = vec!["grain".to_string()];
+        let nodes_axis = self.job_nodes();
+        let multi = nodes_axis.len() > 1;
+        let mut headers = Vec::new();
+        if multi {
+            headers.push("nodes".to_string());
+        }
+        headers.push("grain".to_string());
         for s in &self.systems {
             headers.push(format!("{} TFLOP/s", s.id()));
             headers.push(format!("{} eff%", s.id()));
         }
         let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(&hdr_refs);
-        for &grain in &self.grains {
-            let mut row = vec![grain.to_string()];
-            for &system in &self.systems {
-                let id = self
-                    .job_for(
-                        system,
-                        DependencePattern::Stencil1D,
-                        self.render_nodes(),
-                        self.render_tpc(),
-                        grain,
-                    )
-                    .id();
-                match results.get(&id) {
-                    Some(r) => {
-                        row.push(format!("{:.4}", r.flops_per_sec / 1e12));
-                        row.push(format!(
-                            "{:.1}",
-                            100.0 * r.flops_per_sec / r.peak_flops
-                        ));
+        for &nodes in &nodes_axis {
+            for &grain in &self.grains {
+                let mut row = Vec::new();
+                if multi {
+                    row.push(nodes.to_string());
+                }
+                row.push(grain.to_string());
+                for &system in &self.systems {
+                    if nodes > 1 && system.is_shared_memory_only() {
+                        row.push("n/a".into());
+                        row.push("n/a".into());
+                        continue;
                     }
-                    None => {
-                        row.push("?".into());
-                        row.push("?".into());
+                    let id = self
+                        .job_for(
+                            system,
+                            DependencePattern::Stencil1D,
+                            nodes,
+                            self.render_tpc(),
+                            grain,
+                        )
+                        .id();
+                    match results.get(&id) {
+                        Some(r) => {
+                            row.push(format!("{:.4}", r.flops_per_sec / 1e12));
+                            row.push(format!(
+                                "{:.1}",
+                                100.0 * r.flops_per_sec / r.peak_flops
+                            ));
+                        }
+                        None => {
+                            row.push("?".into());
+                            row.push("?".into());
+                        }
                     }
                 }
+                t.row(&row);
             }
-            t.row(&row);
         }
         t
     }
@@ -424,33 +493,46 @@ impl Campaign {
         }
         let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(&hdr_refs);
+        let nodes_axis = self.job_nodes();
+        let multi = nodes_axis.len() > 1;
         for &system in &self.systems {
-            let mut row = vec![system.name().to_string()];
-            for &tpc in &self.tasks_per_core {
-                row.push(self.metg_cell(
-                    results,
-                    system,
-                    DependencePattern::Stencil1D,
-                    self.render_nodes(),
-                    tpc,
-                ));
+            for &nodes in &nodes_axis {
+                if nodes > 1 && system.is_shared_memory_only() {
+                    continue; // not enumerated by jobs() either
+                }
+                let mut row = vec![if multi {
+                    format!("{} @{}n", system.name(), nodes)
+                } else {
+                    system.name().to_string()
+                }];
+                for &tpc in &self.tasks_per_core {
+                    row.push(self.metg_cell(
+                        results,
+                        system,
+                        DependencePattern::Stencil1D,
+                        nodes,
+                        tpc,
+                    ));
+                }
+                t.row(&row);
             }
-            t.row(&row);
         }
         t
     }
 
+    /// Fig 2 / Fig 2-scale renderer: one column per swept node count.
     fn fig2_table(&self, results: &HashMap<String, JobResult>) -> Table {
         let tpc = self.render_tpc();
+        let nodes_axis = self.job_nodes();
         let mut headers = vec!["System".to_string()];
-        for &n in &self.nodes {
+        for &n in &nodes_axis {
             headers.push(format!("{n} node{}", if n == 1 { "" } else { "s" }));
         }
         let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(&hdr_refs);
         for &system in &self.systems {
             let mut row = vec![system.name().to_string()];
-            for &nodes in &self.nodes {
+            for &nodes in &nodes_axis {
                 if nodes > 1 && system.is_shared_memory_only() {
                     row.push("n/a".into());
                     continue;
@@ -478,7 +560,9 @@ impl Campaign {
         row_label: &str,
     ) -> Table {
         let system = self.systems[0];
-        let (nodes, tpc) = (self.render_nodes(), self.render_tpc());
+        let tpc = self.render_tpc();
+        let nodes_axis = self.job_nodes();
+        let multi = nodes_axis.len() > 1;
         let mut headers = vec![row_label.to_string()];
         for &g in &self.grains {
             headers.push(format!("tasks/s @{g}"));
@@ -487,7 +571,7 @@ impl Campaign {
         let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(&hdr_refs);
 
-        let tput = |config: SystemConfig, grain: u64| -> Option<f64> {
+        let tput = |config: SystemConfig, nodes: usize, grain: u64| -> Option<f64> {
             let id = self
                 .job_for_config(
                     system,
@@ -501,24 +585,94 @@ impl Campaign {
             results.get(&id).map(JobResult::tasks_per_sec)
         };
         let ref_grain = self.grains.first().copied();
-        let base = ref_grain.and_then(|g| tput(self.configs[0].1, g));
-        for (label, config) in &self.configs {
-            let mut row = vec![label.clone()];
-            for &g in &self.grains {
-                row.push(match tput(*config, g) {
-                    Some(v) => format!("{v:.0}"),
-                    None => "?".into(),
-                });
+        for &nodes in &nodes_axis {
+            if nodes > 1 && system.is_shared_memory_only() {
+                continue; // not enumerated by jobs() either
             }
-            row.push(
-                match (base, ref_grain.and_then(|g| tput(*config, g))) {
+            // The "vs" delta compares builds at the same node count.
+            let base = ref_grain.and_then(|g| tput(self.configs[0].1, nodes, g));
+            for (label, config) in &self.configs {
+                let mut row = vec![if multi {
+                    format!("{label} @{nodes}n")
+                } else {
+                    label.clone()
+                }];
+                for &g in &self.grains {
+                    row.push(match tput(*config, nodes, g) {
+                        Some(v) => format!("{v:.0}"),
+                        None => "?".into(),
+                    });
+                }
+                row.push(
+                    match (base, ref_grain.and_then(|g| tput(*config, nodes, g))) {
+                        (Some(b), Some(v)) => {
+                            format!("{:+.1}%", (v / b - 1.0) * 100.0)
+                        }
+                        _ => "?".into(),
+                    },
+                );
+                t.row(&row);
+            }
+        }
+        t
+    }
+
+    /// Fig 3-over-nodes renderer: one row per Charm++ build (per grain,
+    /// when a `--grains` override widened the pinned reference-grain
+    /// axis — every enumerated cell renders somewhere), one column per
+    /// node count, task throughput, plus the build's delta vs the
+    /// reference build at the largest node count (where scheduling
+    /// overhead differences matter most).
+    fn config_nodes_table(&self, results: &HashMap<String, JobResult>) -> Table {
+        let system = self.systems[0];
+        let tpc = self.render_tpc();
+        let nodes_axis = self.job_nodes();
+        let multi_grain = self.grains.len() > 1;
+        let mut headers = vec!["Build".to_string()];
+        for &n in &nodes_axis {
+            headers.push(format!("tasks/s @{n} node{}", if n == 1 { "" } else { "s" }));
+        }
+        let last = nodes_axis.last().copied().unwrap_or(1);
+        headers.push(format!("vs {} @{last}n", self.configs[0].0));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+
+        let tput = |config: SystemConfig, nodes: usize, grain: u64| -> Option<f64> {
+            let id = self
+                .job_for_config(
+                    system,
+                    DependencePattern::Stencil1D,
+                    nodes,
+                    tpc,
+                    grain,
+                    config,
+                )
+                .id();
+            results.get(&id).map(JobResult::tasks_per_sec)
+        };
+        for &grain in &self.grains {
+            // The delta compares builds at the same (grain, node count).
+            let base = tput(self.configs[0].1, last, grain);
+            for (label, config) in &self.configs {
+                let mut row = vec![if multi_grain {
+                    format!("{label} @g{grain}")
+                } else {
+                    label.clone()
+                }];
+                for &n in &nodes_axis {
+                    row.push(match tput(*config, n, grain) {
+                        Some(v) => format!("{v:.0}"),
+                        None => "?".into(),
+                    });
+                }
+                row.push(match (base, tput(*config, last, grain)) {
                     (Some(b), Some(v)) => {
                         format!("{:+.1}%", (v / b - 1.0) * 100.0)
                     }
                     _ => "?".into(),
-                },
-            );
-            t.row(&row);
+                });
+                t.row(&row);
+            }
         }
         t
     }
@@ -531,18 +685,29 @@ impl Campaign {
         }
         let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(&hdr_refs);
+        let nodes_axis = self.job_nodes();
+        let multi = nodes_axis.len() > 1;
         for &system in &self.systems {
-            let mut row = vec![system.name().to_string()];
-            for &pattern in &patterns {
-                row.push(self.metg_cell(
-                    results,
-                    system,
-                    pattern,
-                    self.render_nodes(),
-                    self.render_tpc(),
-                ));
+            for &nodes in &nodes_axis {
+                if nodes > 1 && system.is_shared_memory_only() {
+                    continue;
+                }
+                let mut row = vec![if multi {
+                    format!("{} @{}n", system.name(), nodes)
+                } else {
+                    system.name().to_string()
+                }];
+                for &pattern in &patterns {
+                    row.push(self.metg_cell(
+                        results,
+                        system,
+                        pattern,
+                        nodes,
+                        self.render_tpc(),
+                    ));
+                }
+                t.row(&row);
             }
-            t.row(&row);
         }
         t
     }
@@ -554,59 +719,124 @@ impl Campaign {
         let mut out = String::new();
         match self.kind {
             CampaignKind::Fig1 => {
+                let nodes_axis = self.job_nodes();
+                let multi = nodes_axis.len() > 1;
                 for &system in &self.systems {
-                    let mut t = Table::new(&["grain", "flops", "eff"]);
-                    for &grain in &self.grains {
-                        let id = self
-                            .job_for(
-                                system,
-                                DependencePattern::Stencil1D,
-                                self.render_nodes(),
-                                self.render_tpc(),
-                                grain,
-                            )
-                            .id();
-                        if let Some(r) = results.get(&id) {
-                            t.row(&[
-                                grain.to_string(),
-                                format!("{:e}", r.flops_per_sec),
-                                format!(
-                                    "{:.4}",
-                                    r.flops_per_sec / r.peak_flops
-                                ),
-                            ]);
+                    for &nodes in &nodes_axis {
+                        if nodes > 1 && system.is_shared_memory_only() {
+                            continue;
                         }
+                        let mut t = Table::new(&["grain", "flops", "eff"]);
+                        for &grain in &self.grains {
+                            let id = self
+                                .job_for(
+                                    system,
+                                    DependencePattern::Stencil1D,
+                                    nodes,
+                                    self.render_tpc(),
+                                    grain,
+                                )
+                                .id();
+                            if let Some(r) = results.get(&id) {
+                                t.row(&[
+                                    grain.to_string(),
+                                    format!("{:e}", r.flops_per_sec),
+                                    format!(
+                                        "{:.4}",
+                                        r.flops_per_sec / r.peak_flops
+                                    ),
+                                ]);
+                            }
+                        }
+                        if multi {
+                            out.push_str(&format!(
+                                "# system {} nodes {nodes}\n",
+                                system.id()
+                            ));
+                        } else {
+                            out.push_str(&format!("# system {}\n", system.id()));
+                        }
+                        out.push_str(&t.to_dat());
+                        out.push('\n');
                     }
-                    out.push_str(&format!("# system {}\n", system.id()));
-                    out.push_str(&t.to_dat());
-                    out.push('\n');
                 }
             }
             CampaignKind::Fig3 | CampaignKind::HpxAblation => {
                 let system = self.systems[0];
+                let nodes_axis = self.job_nodes();
+                let multi = nodes_axis.len() > 1;
                 for (label, config) in &self.configs {
-                    let mut t = Table::new(&["grain", "tasks_per_sec"]);
-                    for &grain in &self.grains {
-                        let id = self
-                            .job_for_config(
-                                system,
-                                DependencePattern::Stencil1D,
-                                self.render_nodes(),
-                                self.render_tpc(),
-                                grain,
-                                *config,
-                            )
-                            .id();
-                        if let Some(r) = results.get(&id) {
-                            t.row(&[
-                                grain.to_string(),
-                                format!("{:.3}", r.tasks_per_sec()),
-                            ]);
+                    for &nodes in &nodes_axis {
+                        if nodes > 1 && system.is_shared_memory_only() {
+                            continue; // not enumerated by jobs() either
                         }
+                        let mut t = Table::new(&["grain", "tasks_per_sec"]);
+                        for &grain in &self.grains {
+                            let id = self
+                                .job_for_config(
+                                    system,
+                                    DependencePattern::Stencil1D,
+                                    nodes,
+                                    self.render_tpc(),
+                                    grain,
+                                    *config,
+                                )
+                                .id();
+                            if let Some(r) = results.get(&id) {
+                                t.row(&[
+                                    grain.to_string(),
+                                    format!("{:.3}", r.tasks_per_sec()),
+                                ]);
+                            }
+                        }
+                        if multi {
+                            out.push_str(&format!(
+                                "# build {label} nodes {nodes}\n"
+                            ));
+                        } else {
+                            out.push_str(&format!("# build {label}\n"));
+                        }
+                        out.push_str(&t.to_dat());
+                        out.push('\n');
                     }
-                    out.push_str(&format!("# build {label}\n"));
-                    out.push_str(&t.to_dat());
-                    out.push('\n');
+                }
+            }
+            CampaignKind::Fig3Nodes => {
+                // One block per build (× grain, when the pinned axis was
+                // widened); the node count is the row axis.
+                let system = self.systems[0];
+                let multi_grain = self.grains.len() > 1;
+                for (label, config) in &self.configs {
+                    for &grain in &self.grains {
+                        let mut t = Table::new(&["nodes", "tasks_per_sec"]);
+                        for &nodes in &self.job_nodes() {
+                            let id = self
+                                .job_for_config(
+                                    system,
+                                    DependencePattern::Stencil1D,
+                                    nodes,
+                                    self.render_tpc(),
+                                    grain,
+                                    *config,
+                                )
+                                .id();
+                            if let Some(r) = results.get(&id) {
+                                t.row(&[
+                                    nodes.to_string(),
+                                    format!("{:.3}", r.tasks_per_sec()),
+                                ]);
+                            }
+                        }
+                        if multi_grain {
+                            out.push_str(&format!(
+                                "# build {label} grain {grain}\n"
+                            ));
+                        } else {
+                            out.push_str(&format!("# build {label}\n"));
+                        }
+                        out.push_str(&t.to_dat());
+                        out.push('\n');
+                    }
                 }
             }
             _ => {
@@ -614,41 +844,62 @@ impl Campaign {
                     CampaignKind::Table2 => {
                         ("tasks_per_core", self.tasks_per_core.clone())
                     }
-                    CampaignKind::Fig2 => ("nodes", self.nodes.clone()),
+                    CampaignKind::Fig2 | CampaignKind::Fig2Scale => {
+                        ("nodes", self.job_nodes())
+                    }
                     _ => ("pattern_index", (0..self.patterns().len()).collect()),
                 };
+                // For artifacts whose columns are *not* the node axis, a
+                // multi-valued node override emits one block per count
+                // instead of silently collapsing to the first.
+                let node_blocks: Vec<usize> = match self.kind {
+                    CampaignKind::Fig2 | CampaignKind::Fig2Scale => vec![0],
+                    _ => self.job_nodes(),
+                };
                 for &system in &self.systems {
-                    let mut t = Table::new(&[col_name, "metg_us"]);
-                    for &c in &cols {
-                        let (pattern, nodes, tpc) = match self.kind {
-                            CampaignKind::Table2 => (
-                                DependencePattern::Stencil1D,
-                                self.render_nodes(),
-                                c,
-                            ),
-                            CampaignKind::Fig2 => (
-                                DependencePattern::Stencil1D,
-                                c,
-                                self.render_tpc(),
-                            ),
-                            _ => (
-                                self.patterns()[c],
-                                self.render_nodes(),
-                                self.render_tpc(),
-                            ),
-                        };
-                        if nodes > 1 && system.is_shared_memory_only() {
-                            continue;
+                    for &bnodes in &node_blocks {
+                        if bnodes > 1 && system.is_shared_memory_only() {
+                            continue; // not enumerated by jobs() either
                         }
-                        if let Some(Some(us)) = self.group_metg(
-                            results, system, pattern, nodes, tpc,
-                        ) {
-                            t.row(&[c.to_string(), format!("{us:.3}")]);
+                        let mut t = Table::new(&[col_name, "metg_us"]);
+                        for &c in &cols {
+                            let (pattern, nodes, tpc) = match self.kind {
+                                CampaignKind::Table2 => (
+                                    DependencePattern::Stencil1D,
+                                    bnodes,
+                                    c,
+                                ),
+                                CampaignKind::Fig2 | CampaignKind::Fig2Scale => (
+                                    DependencePattern::Stencil1D,
+                                    c,
+                                    self.render_tpc(),
+                                ),
+                                _ => (
+                                    self.patterns()[c],
+                                    bnodes,
+                                    self.render_tpc(),
+                                ),
+                            };
+                            if nodes > 1 && system.is_shared_memory_only() {
+                                continue;
+                            }
+                            if let Some(Some(us)) = self.group_metg(
+                                results, system, pattern, nodes, tpc,
+                            ) {
+                                t.row(&[c.to_string(), format!("{us:.3}")]);
+                            }
                         }
+                        if node_blocks.len() > 1 {
+                            out.push_str(&format!(
+                                "# system {} nodes {bnodes}\n",
+                                system.id()
+                            ));
+                        } else {
+                            out.push_str(&format!("# system {}\n", system.id()));
+                        }
+                        out.push_str(&t.to_dat());
+                        out.push('\n');
                     }
-                    out.push_str(&format!("# system {}\n", system.id()));
-                    out.push_str(&t.to_dat());
-                    out.push('\n');
                 }
             }
         }
@@ -671,13 +922,17 @@ mod tests {
         );
         c.cores_per_node = 4;
         c.nodes = match kind {
-            CampaignKind::Fig2 => vec![1, 2],
+            CampaignKind::Fig2
+            | CampaignKind::Fig2Scale
+            | CampaignKind::Fig3Nodes => vec![1, 2],
             CampaignKind::Fig3 => vec![2],
             _ => vec![1],
         };
         c.tasks_per_core = match kind {
             CampaignKind::Table2 => vec![1, 2],
-            CampaignKind::Fig2 | CampaignKind::HpxAblation => vec![2],
+            CampaignKind::Fig2
+            | CampaignKind::Fig2Scale
+            | CampaignKind::HpxAblation => vec![2],
             _ => vec![1],
         };
         c
@@ -831,5 +1086,137 @@ mod tests {
             assert_eq!(CampaignKind::parse(k.id()), Some(k));
         }
         assert_eq!(CampaignKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn fig2_scale_defaults_reach_sixty_four_nodes() {
+        let c = Campaign::new(CampaignKind::Fig2Scale, Vec::new(), 30, &[4096]);
+        assert!(c.nodes.contains(&64), "{:?}", c.nodes);
+        assert!(c.systems.iter().all(|s| !s.is_shared_memory_only()));
+        assert!(!c.systems.is_empty());
+        // Every enumerated cell is multi-node-capable.
+        assert!(c
+            .jobs()
+            .iter()
+            .all(|j| !j.spec.system.is_shared_memory_only()));
+        assert_eq!(
+            c.jobs().len(),
+            c.systems.len() * c.nodes.len() * c.grains.len()
+        );
+    }
+
+    #[test]
+    fn fig3_nodes_defaults_pin_the_reference_grain() {
+        let c = Campaign::new(
+            CampaignKind::Fig3Nodes,
+            Vec::new(),
+            50,
+            &[16, 1024], // ignored: the node axis is the sweep
+        );
+        assert_eq!(c.grains, vec![4096]);
+        assert_eq!(c.systems, vec![SystemKind::CharmLike]);
+        assert_eq!(c.configs.len(), 5);
+        assert!(c.nodes.contains(&64));
+        assert_eq!(c.jobs().len(), 5 * c.nodes.len());
+    }
+
+    #[test]
+    fn fig2_scale_table_has_one_column_per_node_count() {
+        let c = small(CampaignKind::Fig2Scale);
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("1 node"), "{md}");
+        assert!(md.contains("2 nodes"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+        let dat = c.dat(&map);
+        assert!(dat.contains("# system mpi"), "{dat}");
+        assert!(dat.contains("nodes"), "{dat}");
+    }
+
+    #[test]
+    fn fig3_nodes_table_renders_builds_by_node_count() {
+        let c = small(CampaignKind::Fig3Nodes);
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        for (label, _) in SystemConfig::fig3_builds() {
+            assert!(md.contains(label), "{label} row missing from {md}");
+        }
+        assert!(md.contains("@1 node"), "{md}");
+        assert!(md.contains("@2 nodes"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+        // The reference build's own delta is exactly +0.0%.
+        let default_line =
+            md.lines().find(|l| l.starts_with("| Default")).unwrap();
+        assert!(default_line.contains("+0.0%"), "{default_line}");
+        let dat = c.dat(&map);
+        assert_eq!(dat.matches("# build").count(), 5, "{dat}");
+    }
+
+    #[test]
+    fn node_override_no_longer_collapses_to_the_first_count() {
+        // Regression for the render_nodes bug: a multi-valued --nodes
+        // override on a non-node-sweeping campaign must enumerate and
+        // render every count, not silently keep nodes[0] only.
+        let mut c = small(CampaignKind::Table2);
+        c.nodes = vec![1, 2];
+        let jobs = c.jobs();
+        // MPI gets both node counts; shared-memory HpxLocal only node 1.
+        let tpcs = c.tasks_per_core.len();
+        let grains = c.grains.len();
+        assert_eq!(jobs.len(), (2 + 1) * tpcs * grains, "{jobs:#?}");
+        assert!(jobs.iter().any(|j| j.spec.nodes == 2));
+
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("MPI (like) @1n"), "{md}");
+        assert!(md.contains("MPI (like) @2n"), "{md}");
+        assert!(!md.contains("HPX local (like) @2n"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+    }
+
+    #[test]
+    fn shared_memory_config_campaign_never_renders_unenumerated_nodes() {
+        // hpx_ablation's system (HpxLocal) is shared-memory-only: with a
+        // multi-node override, jobs() only enumerates the 1-node cells,
+        // and the config renderer / dat must address exactly those.
+        let mut c = small(CampaignKind::HpxAblation);
+        c.nodes = vec![1, 2];
+        let jobs = c.jobs();
+        assert!(jobs.iter().all(|j| j.spec.nodes == 1), "{jobs:#?}");
+
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("@1n"), "{md}");
+        assert!(!md.contains("@2n"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+        let dat = c.dat(&map);
+        assert!(dat.contains("# build Stealing on nodes 1"), "{dat}");
+        assert!(!dat.contains("nodes 2"), "{dat}");
+    }
+
+    #[test]
+    fn single_node_tables_keep_their_original_shape() {
+        // The no-collapse fix must not change how default (single-count)
+        // campaigns render: no node suffixes, no nodes column.
+        let c = small(CampaignKind::Table2);
+        let md = c.table(&HashMap::new()).to_markdown();
+        assert!(md.contains("| MPI (like) "), "{md}");
+        assert!(!md.contains("@1n"), "{md}");
     }
 }

@@ -25,12 +25,14 @@ pub mod exec;
 pub mod job;
 pub mod json;
 pub mod params;
+pub mod simbench;
 pub mod store;
 
 pub use backend::{Backend, Backends, NativeBackend, ReplayBackend, SimBackend};
 pub use campaign::{Campaign, CampaignKind, DiffTolerances};
 pub use exec::execute_job;
 pub use job::{ExecMode, Job, JobResult, JobSpec};
+pub use simbench::{run_sim_bench, write_sim_bench, SimBenchReport};
 pub use store::ResultStore;
 
 // The coordinator is the execution half of the engine; re-export its

@@ -1,0 +1,267 @@
+//! Sim-throughput recorder: how fast is the simulator itself?
+//!
+//! The windowed DES core exists to make large-node campaigns cheap, so
+//! its own performance is a tracked artifact: [`run_sim_bench`] times the
+//! streaming engine against the frozen pre-refactor oracle on
+//! representative cells (8- and 64-node machines, every event-driven
+//! system), verifies the two stay **bitwise identical** while it is at
+//! it, and [`write_sim_bench`] persists the result as `BENCH_sim.json` —
+//! simulated tasks/sec per engine, the speedup, and the peak resident
+//! frontier (slabs × width) next to what the oracle materializes
+//! (width × steps). CI publishes the file as a build artifact, so the
+//! perf trajectory has data points instead of anecdotes.
+//!
+//! Entry points: `repro jobs bench-sim [--out FILE]` and
+//! `cargo bench --bench sim_core`.
+
+use std::time::Instant;
+
+use anyhow::Context;
+
+use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use crate::harness::report::Table;
+use crate::runtimes::{SystemConfig, SystemKind};
+use crate::sim::{simulate_oracle, simulate_with_stats, Machine, SimParams};
+
+use super::json::Json;
+
+/// One benchmarked (system × machine) cell.
+#[derive(Debug, Clone)]
+pub struct SimBenchCell {
+    pub system: SystemKind,
+    pub nodes: usize,
+    /// Simulated tasks in the cell's graph (width × steps).
+    pub tasks: usize,
+    /// Host-side throughput of the windowed engine, simulated tasks/sec.
+    pub windowed_tasks_per_sec: f64,
+    /// Host-side throughput of the oracle list scheduler.
+    pub oracle_tasks_per_sec: f64,
+    /// `windowed / oracle` throughput ratio.
+    pub speedup: f64,
+    /// Peak resident frontier depth (timestep slabs) of the windowed run.
+    pub peak_window_steps: usize,
+    /// Peak resident frontier entries (slabs × width).
+    pub peak_frontier_tasks: usize,
+    /// What the oracle materializes instead: one entry per task.
+    pub oracle_resident_tasks: usize,
+    /// Did the two engines agree bitwise on makespan and messages?
+    pub bitwise_match: bool,
+}
+
+/// A full recorder run.
+#[derive(Debug, Clone)]
+pub struct SimBenchReport {
+    pub steps: usize,
+    pub tasks_per_core: usize,
+    pub grain: u64,
+    pub cells: Vec<SimBenchCell>,
+}
+
+impl SimBenchReport {
+    /// Geometric-mean speedup of the windowed engine over the oracle.
+    pub fn geomean_speedup(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 1.0;
+        }
+        let ln_sum: f64 = self.cells.iter().map(|c| c.speedup.ln()).sum();
+        (ln_sum / self.cells.len() as f64).exp()
+    }
+
+    /// Every cell reproduced the oracle bitwise.
+    pub fn all_bitwise(&self) -> bool {
+        self.cells.iter().all(|c| c.bitwise_match)
+    }
+
+    /// The `BENCH_sim.json` byte stream.
+    pub fn to_json(&self) -> String {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                Json::Obj(vec![
+                    ("system".into(), Json::Str(c.system.id().into())),
+                    ("nodes".into(), Json::Num(c.nodes as f64)),
+                    ("tasks".into(), Json::Num(c.tasks as f64)),
+                    (
+                        "windowed_tasks_per_sec".into(),
+                        Json::Num(c.windowed_tasks_per_sec),
+                    ),
+                    (
+                        "oracle_tasks_per_sec".into(),
+                        Json::Num(c.oracle_tasks_per_sec),
+                    ),
+                    ("speedup".into(), Json::Num(c.speedup)),
+                    (
+                        "peak_window_steps".into(),
+                        Json::Num(c.peak_window_steps as f64),
+                    ),
+                    (
+                        "peak_frontier_tasks".into(),
+                        Json::Num(c.peak_frontier_tasks as f64),
+                    ),
+                    (
+                        "oracle_resident_tasks".into(),
+                        Json::Num(c.oracle_resident_tasks as f64),
+                    ),
+                    ("bitwise_match".into(), Json::Bool(c.bitwise_match)),
+                ])
+            })
+            .collect();
+        let mut text = Json::Obj(vec![
+            ("v".into(), Json::Num(1.0)),
+            ("steps".into(), Json::Num(self.steps as f64)),
+            ("tasks_per_core".into(), Json::Num(self.tasks_per_core as f64)),
+            ("grain".into(), Json::Num(self.grain as f64)),
+            ("geomean_speedup".into(), Json::Num(self.geomean_speedup())),
+            ("all_bitwise".into(), Json::Bool(self.all_bitwise())),
+            ("cells".into(), Json::Arr(cells)),
+        ])
+        .render();
+        text.push('\n');
+        text
+    }
+
+    /// Human-readable summary table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "system",
+            "nodes",
+            "tasks",
+            "windowed tasks/s",
+            "oracle tasks/s",
+            "speedup",
+            "frontier (tasks)",
+            "oracle resident",
+        ]);
+        for c in &self.cells {
+            t.row(&[
+                c.system.id().to_string(),
+                c.nodes.to_string(),
+                c.tasks.to_string(),
+                format!("{:.3e}", c.windowed_tasks_per_sec),
+                format!("{:.3e}", c.oracle_tasks_per_sec),
+                format!("{:.2}x", c.speedup),
+                c.peak_frontier_tasks.to_string(),
+                c.oracle_resident_tasks.to_string(),
+            ]);
+        }
+        format!(
+            "{}\ngeomean speedup {:.2}x, bitwise parity: {}\n",
+            t.to_markdown(),
+            self.geomean_speedup(),
+            if self.all_bitwise() { "OK" } else { "FAILED" },
+        )
+    }
+}
+
+/// Time one engine run; returns (measurement makespan bits, messages,
+/// host seconds).
+fn timed<F: FnOnce() -> (u64, usize)>(f: F) -> (u64, usize, f64) {
+    let t0 = Instant::now();
+    let (bits, messages) = f();
+    (bits, messages, t0.elapsed().as_secs_f64().max(1e-9))
+}
+
+/// Run the recorder matrix: every event-driven system on an 8-node and a
+/// 64-node simulated Rostam machine, stencil pattern, fixed grain.
+pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
+    const GRAIN: u64 = 1024;
+    let params = SimParams::default();
+    let cfg = SystemConfig::default();
+    let mut cells = Vec::new();
+    for &nodes in &[8usize, 64] {
+        for system in [
+            SystemKind::MpiLike,
+            SystemKind::CharmLike,
+            SystemKind::HpxDistributed,
+        ] {
+            let machine = Machine::rostam(nodes);
+            let graph = TaskGraph::new(GraphConfig {
+                width: machine.total_cores() * tasks_per_core,
+                steps,
+                dependence: DependencePattern::Stencil1D,
+                kernel: KernelConfig::compute_bound(GRAIN),
+                ..GraphConfig::default()
+            });
+            let n = graph.num_points();
+
+            let mut stats = None;
+            let (w_bits, w_msgs, w_secs) = timed(|| {
+                let (m, s) =
+                    simulate_with_stats(&graph, system, machine, &params, &cfg);
+                stats = Some(s);
+                (m.wall_secs.to_bits(), m.messages)
+            });
+            let stats = stats.expect("windowed run always reports stats");
+            let (o_bits, o_msgs, o_secs) = timed(|| {
+                let m = simulate_oracle(&graph, system, machine, &params, &cfg);
+                (m.wall_secs.to_bits(), m.messages)
+            });
+
+            cells.push(SimBenchCell {
+                system,
+                nodes,
+                tasks: n,
+                windowed_tasks_per_sec: n as f64 / w_secs,
+                oracle_tasks_per_sec: n as f64 / o_secs,
+                speedup: o_secs / w_secs,
+                peak_window_steps: stats.peak_window_steps,
+                peak_frontier_tasks: stats.peak_frontier_tasks,
+                oracle_resident_tasks: n,
+                bitwise_match: w_bits == o_bits && w_msgs == o_msgs,
+            });
+        }
+    }
+    SimBenchReport { steps, tasks_per_core, grain: GRAIN, cells }
+}
+
+/// [`run_sim_bench`] and persist the JSON record at `path`.
+pub fn write_sim_bench(
+    path: &str,
+    steps: usize,
+    tasks_per_core: usize,
+) -> crate::Result<SimBenchReport> {
+    let report = run_sim_bench(steps, tasks_per_core);
+    std::fs::write(path, report.to_json())
+        .with_context(|| format!("writing sim bench record to {path}"))?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_produces_parity_checked_cells() {
+        // Tiny shape: the recorder's value in tests is the schema and the
+        // embedded parity check, not representative throughput numbers.
+        let r = run_sim_bench(4, 1);
+        assert_eq!(r.cells.len(), 6);
+        assert!(r.all_bitwise(), "windowed/oracle divergence: {r:#?}");
+        for c in &r.cells {
+            assert!(c.windowed_tasks_per_sec > 0.0);
+            assert!(c.oracle_tasks_per_sec > 0.0);
+            assert!(c.speedup > 0.0);
+            assert!(c.peak_frontier_tasks <= c.oracle_resident_tasks);
+        }
+        assert!(r.geomean_speedup() > 0.0);
+    }
+
+    #[test]
+    fn json_record_parses_back() {
+        let r = run_sim_bench(3, 1);
+        let text = r.to_json();
+        let v = Json::parse(&text).expect("recorder JSON must parse");
+        assert_eq!(v.get("v").and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            v.get("cells").map(|c| match c {
+                Json::Arr(items) => items.len(),
+                _ => 0,
+            }),
+            Some(6)
+        );
+        assert!(matches!(v.get("all_bitwise"), Some(Json::Bool(true))));
+        let rendered = r.render();
+        assert!(rendered.contains("geomean speedup"), "{rendered}");
+    }
+}

@@ -175,6 +175,25 @@ pub fn hpx_ablation(steps: usize, grains: &[u64], params: &SimParams) -> Table {
     campaign.table(&results)
 }
 
+/// Fig 2 beyond the paper: METG vs *large* node counts (to 64 simulated
+/// nodes / 3072 cores) for every multi-node-capable system — the
+/// `fig2_scale` campaign the streaming windowed sim core exists for.
+pub fn fig2_scale(steps: usize, grains: &[u64], params: &SimParams) -> Table {
+    let campaign =
+        Campaign::new(CampaignKind::Fig2Scale, Vec::new(), steps, grains);
+    let results = run_campaign(&campaign, params);
+    campaign.table(&results)
+}
+
+/// Fig 3 over the node axis: the five Charm++ builds × large node counts
+/// at the paper's reference grain (the `fig3_nodes` campaign).
+pub fn fig3_nodes(steps: usize, params: &SimParams) -> Table {
+    let campaign =
+        Campaign::new(CampaignKind::Fig3Nodes, Vec::new(), steps, &[4096]);
+    let results = run_campaign(&campaign, params);
+    campaign.table(&results)
+}
+
 /// Render a Fig 1 row set as a markdown table (grain, TFLOP/s and
 /// efficiency per system). Delegates to the campaign renderer — `repro
 /// sweep`, the benches and `repro jobs table --campaign fig1` all emit
@@ -330,6 +349,30 @@ mod tests {
         // SHMEM row should show a positive delta.
         let shmem_line = md.lines().find(|l| l.contains("SHMEM")).unwrap();
         assert!(shmem_line.contains('+'), "{shmem_line}");
+    }
+
+    #[test]
+    fn fig2_scale_covers_large_node_counts() {
+        // Short steps keep the test quick; the windowed core's memory is
+        // step-independent, so the shape is representative regardless.
+        let p = SimParams::default();
+        let t = fig2_scale(4, &[1 << 4, 1 << 14], &p);
+        let md = t.to_markdown();
+        assert!(md.contains("64 nodes"), "{md}");
+        assert!(md.contains("MPI (like)"), "{md}");
+        // Shared-memory systems are excluded up front, not rendered n/a.
+        assert!(!md.contains("n/a"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+    }
+
+    #[test]
+    fn fig3_nodes_covers_all_builds() {
+        let p = SimParams::default();
+        let t = fig3_nodes(4, &p);
+        let md = t.to_markdown();
+        assert!(md.contains("SHMEM") && md.contains("Combined"), "{md}");
+        assert!(md.contains("@64 node"), "{md}");
+        assert!(!md.contains('?'), "{md}");
     }
 
     #[test]

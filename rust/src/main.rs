@@ -12,13 +12,14 @@
 //! repro peak                                               # peak FLOP/s
 //! repro dispatch                                           # PJRT overhead
 //!
-//! repro jobs list  [--campaign fig1|table2|fig2|fig3|hpx_ablation|patterns] [--shard k/N]
+//! repro jobs list  [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns] [--shard k/N]
 //! repro jobs run   [--campaign ...] [--native] [--results DIR] [--shard k/N] [--threads N]
 //! repro jobs table [--campaign ...] [--native] [--results DIR]
 //! repro jobs dat   [--campaign ...] [--native] [--results DIR]
 //! repro jobs calibrate [--results DIR] [--export FILE | --import FILE]
 //! repro jobs snapshot [--campaign ...] [--baseline DIR]      # pin goldens
 //! repro jobs diff  [--campaign ...] [--baseline DIR] [--tol X] [--strict]
+//! repro jobs bench-sim [--out BENCH_sim.json] [--steps N]    # DES throughput
 //! ```
 //!
 //! The `jobs` family is the engine path: enumerate an artifact's cells as
@@ -69,10 +70,11 @@ use taskbench_amt::sim::{calibrate, SimParams};
 fn usage() -> ! {
     eprintln!(
         "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
-         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig3|hpx_ablation|patterns] [--native] [--key value ...]\n\
+         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns] [--native] [--key value ...]\n\
          \x20      repro jobs calibrate [--results DIR] [--export FILE | --import FILE]\n\
          \x20      repro jobs snapshot [--campaign ...] [--baseline DIR]\n\
          \x20      repro jobs diff [--campaign ...] [--baseline DIR] [--tol X] [--strict]\n\
+         \x20      repro jobs bench-sim [--out BENCH_sim.json] [--steps N] [--overdecompose N]\n\
          see the crate docs for details"
     );
     std::process::exit(2);
@@ -270,7 +272,7 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
     let Some(kind) = CampaignKind::parse(kind_id) else {
         eprintln!(
             "unknown campaign `{kind_id}` \
-             (want fig1|table2|fig2|fig3|hpx_ablation|patterns)"
+             (want fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns)"
         );
         std::process::exit(2);
     };
@@ -281,6 +283,31 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
     campaign.tasks_per_core =
         get_list(m, "overdecompose", campaign.tasks_per_core.clone());
     campaign.cores_per_node = get(m, "cores", campaign.cores_per_node);
+    if let Some(v) = m.get("grains") {
+        // Explicit grain ladder (e.g. a time-budgeted CI smoke slice).
+        // A malformed token is a hard error — silently falling back to
+        // the default ladder would run a very different campaign (and
+        // blow a CI time budget opaquely). Kept sorted descending +
+        // deduped — the campaign invariant.
+        let mut gs: Vec<u64> = Vec::new();
+        for tok in v.split(',') {
+            match tok.trim().parse() {
+                Ok(g) => gs.push(g),
+                Err(_) => {
+                    eprintln!(
+                        "bad --grains entry `{tok}` (want comma-separated \
+                         integers, e.g. --grains 1024,65536)"
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+        // `split(',')` always yields a token and unparsable tokens
+        // (including empty ones) exited above, so `gs` is non-empty here.
+        gs.sort_unstable_by(|a, b| b.cmp(a));
+        gs.dedup();
+        campaign.grains = gs;
+    }
     if get(m, "native", false) {
         // Same cells, measured by the real runtimes on this host. The
         // mode is hashed, so native records never collide with sim ones.
@@ -382,6 +409,35 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
     );
     if action == "calibrate" {
         cmd_jobs_calibrate(&store, m);
+        return;
+    }
+    if action == "bench-sim" {
+        // DES throughput recorder: windowed core vs the frozen oracle,
+        // with the embedded bitwise-parity check as a hard gate.
+        let out = m
+            .get("out")
+            .cloned()
+            .unwrap_or_else(|| "BENCH_sim.json".to_string());
+        let steps = get(m, "steps", 64usize);
+        let tpc = get(m, "overdecompose", 4usize);
+        match taskbench_amt::engine::simbench::write_sim_bench(&out, steps, tpc)
+        {
+            Ok(report) => {
+                print!("{}", report.render());
+                println!("recorded in {out}");
+                if !report.all_bitwise() {
+                    eprintln!(
+                        "windowed core diverged from the oracle scheduler — \
+                         this is a correctness bug, not a perf datum"
+                    );
+                    std::process::exit(1);
+                }
+            }
+            Err(e) => {
+                eprintln!("jobs bench-sim failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         return;
     }
     let campaign = jobs_campaign(m, &cfg);

@@ -10,6 +10,17 @@ pub struct Machine {
 impl Machine {
     pub fn new(nodes: usize, cores_per_node: usize) -> Self {
         assert!(nodes > 0 && cores_per_node > 0);
+        // The windowed DES stores executing-core ids as `u32`; any
+        // machine a scaling campaign can express must fit. (256 simulated
+        // Rostam nodes is 12_288 cores — nowhere near the limit — but an
+        // overflowing product must fail loudly, not wrap.)
+        let total = nodes
+            .checked_mul(cores_per_node)
+            .expect("machine size overflows");
+        assert!(
+            total < u32::MAX as usize,
+            "machine has {total} cores; the simulator addresses cores as u32"
+        );
         Self { nodes, cores_per_node }
     }
 
@@ -50,5 +61,21 @@ mod tests {
     #[should_panic]
     fn zero_rejected() {
         Machine::new(0, 4);
+    }
+
+    #[test]
+    fn large_node_machines_are_accepted() {
+        // The scaling campaigns' upper end, and well past it.
+        for nodes in [64usize, 128, 256] {
+            let m = Machine::rostam(nodes);
+            assert_eq!(m.total_cores(), nodes * 48);
+            assert!(!m.same_node(0, m.total_cores() - 1));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "u32")]
+    fn absurd_core_counts_rejected() {
+        Machine::new(1 << 20, 1 << 13);
     }
 }

@@ -22,11 +22,20 @@
 //! stealing, hybrid ranks), so the engine's `SimBackend`
 //! ([`crate::engine::backend`]) is a drop-in peer of the native backend
 //! rather than a separately-typed code path.
+//!
+//! The event-driven core is streaming and windowed (memory `O(width)`,
+//! independent of `steps` — see [`des`]), which is what makes the
+//! 64–256-node scaling campaigns tractable; [`simulate_oracle`] is the
+//! frozen pre-refactor list scheduler it is bitwise-diffed against, and
+//! [`simulate_with_stats`] exposes the frontier counters `jobs
+//! bench-sim` records.
 
 mod des;
 mod machine;
+mod oracle;
 mod params;
 
-pub use des::simulate;
+pub use des::{simulate, simulate_with_stats, SimStats};
 pub use machine::Machine;
+pub use oracle::simulate_oracle;
 pub use params::{calibrate, SimParams};

@@ -1,0 +1,181 @@
+//! The pre-refactor whole-graph list scheduler, kept **only** as the
+//! parity oracle for the streaming windowed core in [`super::des`].
+//!
+//! This is the original event-driven engine, verbatim: it materializes
+//! `O(width × steps)` per-point state (`pending`, `ready_at`,
+//! `exec_core`) and drives one global `BinaryHeap` over every task in the
+//! graph. The windowed core must be **bitwise identical** to it on every
+//! (system × pattern × config × machine) cell — that contract is what
+//! lets golden baselines and cached `results/` records survive the
+//! refactor without a `BASELINE_VERSION` bump, and it is enforced by the
+//! `tests/sim_parity.rs` propcheck suite and recorded by `jobs
+//! bench-sim`. Nothing routes production cells through this module; do
+//! not "fix" or optimize it — its value is being frozen.
+//!
+//! The fork-join paths (OpenMP-like, hybrid) were step-synchronous and
+//! `O(width)` before the refactor and are unchanged, so
+//! [`simulate_oracle`] shares them with the live engine.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::core::{PointCoord, TaskGraph};
+use crate::runtimes::{Measurement, Partition, SystemConfig, SystemKind};
+
+use super::des::{
+    base_task_ns, compute_ns, edge_cost, measurement_of, queue_multiplier,
+    simulate_hybrid, simulate_openmp,
+};
+use super::machine::Machine;
+use super::params::SimParams;
+
+/// [`super::des::simulate`] as computed by the pre-refactor list
+/// scheduler. Same inputs, same [`Measurement`] — the reference the
+/// windowed core is diffed against.
+pub fn simulate_oracle(
+    graph: &TaskGraph,
+    system: SystemKind,
+    machine: Machine,
+    params: &SimParams,
+    cfg: &SystemConfig,
+) -> Measurement {
+    let (makespan_ns, messages) = match system {
+        SystemKind::OpenMpLike => simulate_openmp(graph, machine, params),
+        SystemKind::Hybrid => simulate_hybrid(graph, machine, params, cfg),
+        _ => oracle_event_driven(graph, system, machine, params, cfg),
+    };
+    measurement_of(graph, system, makespan_ns, messages)
+}
+
+/// The original whole-graph list scheduler (frozen).
+fn oracle_event_driven(
+    graph: &TaskGraph,
+    system: SystemKind,
+    machine: Machine,
+    params: &SimParams,
+    cfg: &SystemConfig,
+) -> (f64, usize) {
+    let charm = &cfg.charm;
+    let width = graph.width();
+    let steps = graph.steps();
+    let n = graph.num_points();
+    let cores = machine.total_cores();
+    let part = Partition::new(width, cores);
+    let steal = system == SystemKind::HpxLocal && cfg.hpx.work_stealing;
+
+    let place = |x: usize| -> usize {
+        match system {
+            SystemKind::CharmLike => x % cores,
+            _ => part.owner(x),
+        }
+    };
+
+    let mut pending: Vec<u32> = Vec::with_capacity(n);
+    for t in 0..steps {
+        for x in 0..width {
+            pending.push(graph.dependencies(x, t).len() as u32);
+        }
+    }
+    let mut ready_at = vec![0.0f64; n];
+    let mut exec_core = vec![u32::MAX; n];
+    let mut core_free = vec![0.0f64; cores];
+    let mut messages = 0usize;
+    let mut makespan = 0.0f64;
+    let mut qmul = queue_multiplier(system, params, width as f64 / cores as f64);
+    if system == SystemKind::HpxDistributed {
+        qmul *= 1.0 + params.hpx_dist_node_factor * (machine.nodes as f64 - 1.0);
+    }
+
+    // (ready time, seq, task index) — min-heap via Reverse of ordered bits.
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    for x in 0..width {
+        if graph.dependencies(x, 0).is_empty() {
+            heap.push(Reverse((0, PointCoord::new(x, 0).index(width))));
+        }
+    }
+
+    let key = |ns: f64| -> u64 { (ns.max(0.0) * 8.0) as u64 };
+
+    while let Some(Reverse((_, task))) = heap.pop() {
+        let (x, t) = (task % width, task / width);
+        let ready = ready_at[task];
+
+        let core = if steal {
+            (0..cores)
+                .min_by(|&a, &b| core_free[a].total_cmp(&core_free[b]))
+                .unwrap()
+        } else {
+            place(x)
+        };
+
+        // Receiver-side cost of each input + base cost + compute.
+        let mut dur = base_task_ns(system, params) * qmul
+            + compute_ns(graph, params, x, t);
+        for &d in graph.dependencies(x, t) {
+            let cp = exec_core[PointCoord::new(d as usize, t - 1).index(width)];
+            let (_, _, rx) =
+                edge_cost(system, machine, params, charm, cp as usize, core);
+            dur += rx * qmul;
+        }
+        if steal {
+            let stolen = graph.dependencies(x, t).iter().any(|&d| {
+                exec_core[PointCoord::new(d as usize, t - 1).index(width)]
+                    != core as u32
+            });
+            if stolen && t > 0 {
+                dur += params.hpx_steal_ns;
+            }
+        }
+
+        let start = ready.max(core_free[core]);
+        let mut end = start + dur;
+
+        // Sender-side costs + consumer arrivals.
+        if t + 1 < steps {
+            let rdeps = graph.reverse_dependencies(x, t);
+            let mut sent: Vec<usize> = Vec::with_capacity(rdeps.len());
+            for &c in rdeps {
+                let cc = match system {
+                    SystemKind::HpxLocal if steal => core,
+                    SystemKind::CharmLike => c as usize % cores,
+                    _ => part.owner(c as usize),
+                };
+                let (tx, _, _) =
+                    edge_cost(system, machine, params, charm, core, cc);
+                if cc != core && !sent.contains(&cc) {
+                    sent.push(cc);
+                    end += tx;
+                    messages += 1;
+                }
+            }
+            let send_done = end;
+            for &c in rdeps {
+                let cc = match system {
+                    SystemKind::HpxLocal if steal => core,
+                    SystemKind::CharmLike => c as usize % cores,
+                    _ => part.owner(c as usize),
+                };
+                let (_, wire, _) =
+                    edge_cost(system, machine, params, charm, core, cc);
+                let arrival = send_done + wire;
+                let cons = PointCoord::new(c as usize, t + 1).index(width);
+                ready_at[cons] = ready_at[cons].max(arrival);
+                pending[cons] -= 1;
+                if pending[cons] == 0 {
+                    heap.push(Reverse((key(ready_at[cons]), cons)));
+                }
+            }
+            if graph.dependencies(x, t + 1).is_empty() {
+                let cons = PointCoord::new(x, t + 1).index(width);
+                ready_at[cons] = ready_at[cons].max(end);
+                heap.push(Reverse((key(end), cons)));
+            }
+        }
+
+        core_free[core] = end;
+        exec_core[task] = core as u32;
+        makespan = makespan.max(end);
+    }
+
+    (makespan, messages)
+}

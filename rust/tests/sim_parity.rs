@@ -1,0 +1,249 @@
+//! Windowed-vs-oracle parity suite: the streaming frontier engine in
+//! `sim::des` must be **bitwise identical** to the frozen pre-refactor
+//! list scheduler (`sim::simulate_oracle`) on every
+//! (system × pattern × config × machine × kernel) cell.
+//!
+//! This is the contract that lets golden baselines (`jobs diff`) and
+//! every cached `results/` record survive the windowed-core refactor
+//! with no `BASELINE_VERSION` bump: same inputs, same bits out. Any
+//! intentional change to the simulated *numbers* must go to both engines
+//! or retire the oracle — and bump the baseline version.
+
+use taskbench_amt::core::{
+    DependencePattern, GraphConfig, KernelConfig, TaskGraph,
+};
+use taskbench_amt::runtimes::{SystemConfig, SystemKind};
+use taskbench_amt::sim::{
+    simulate, simulate_oracle, simulate_with_stats, Machine, SimParams,
+};
+use taskbench_amt::util::propcheck;
+
+/// Every build/ablation config shape the job engine can express.
+fn configs() -> Vec<SystemConfig> {
+    let mut out = vec![SystemConfig::default()];
+    out.extend(SystemConfig::fig3_builds().into_iter().map(|(_, c)| c));
+    out.extend(SystemConfig::hpx_ablation().into_iter().map(|(_, c)| c));
+    out.push(SystemConfig { hybrid_ranks: 3, ..Default::default() });
+    out
+}
+
+fn kernels() -> Vec<KernelConfig> {
+    vec![
+        KernelConfig::empty(),
+        KernelConfig::compute_bound(64),
+        KernelConfig::busy_wait(2),
+        KernelConfig::memory_bound(4),
+        KernelConfig::load_imbalance(64, 4),
+    ]
+}
+
+fn graph(
+    dep: DependencePattern,
+    width: usize,
+    steps: usize,
+    kernel: KernelConfig,
+    seed: u64,
+) -> TaskGraph {
+    TaskGraph::new(GraphConfig {
+        width,
+        steps,
+        dependence: dep,
+        kernel,
+        seed,
+        ..GraphConfig::default()
+    })
+}
+
+/// Bitwise comparison of the two engines on one cell.
+fn parity(
+    g: &TaskGraph,
+    system: SystemKind,
+    m: Machine,
+    cfg: &SystemConfig,
+) -> Result<(), String> {
+    let p = SimParams::default();
+    let w = simulate(g, system, m, &p, cfg);
+    let o = simulate_oracle(g, system, m, &p, cfg);
+    if w.wall_secs.to_bits() != o.wall_secs.to_bits() {
+        return Err(format!(
+            "{system:?}: makespan {} (windowed) != {} (oracle)",
+            w.wall_secs, o.wall_secs
+        ));
+    }
+    if w.messages != o.messages {
+        return Err(format!(
+            "{system:?}: messages {} (windowed) != {} (oracle)",
+            w.messages, o.messages
+        ));
+    }
+    if w.tasks != o.tasks {
+        return Err(format!(
+            "{system:?}: tasks {} != {}",
+            w.tasks, o.tasks
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn parity_matrix_every_system_every_pattern() {
+    let m = Machine::new(2, 3);
+    for dep in DependencePattern::all() {
+        let g = graph(dep, 10, 7, KernelConfig::compute_bound(8), 5);
+        for system in SystemKind::all() {
+            parity(&g, system, m, &SystemConfig::default())
+                .unwrap_or_else(|e| panic!("{dep:?}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn parity_matrix_every_config_every_system() {
+    let g = graph(
+        DependencePattern::Stencil1D,
+        12,
+        9,
+        KernelConfig::compute_bound(16),
+        3,
+    );
+    let m = Machine::new(2, 4);
+    for cfg in configs() {
+        for system in SystemKind::all() {
+            parity(&g, system, m, &cfg)
+                .unwrap_or_else(|e| panic!("{cfg:?}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn property_windowed_core_is_bitwise_identical_to_oracle() {
+    let deps = DependencePattern::all();
+    let systems = SystemKind::all();
+    let cfgs = configs();
+    let kerns = kernels();
+    propcheck::check(
+        "windowed DES bitwise-equals the oracle list scheduler",
+        40,
+        |rng| {
+            (
+                deps[rng.gen_range(deps.len())],
+                1 + rng.gen_range(20),                 // width
+                1 + rng.gen_range(12),                 // steps
+                1 + rng.gen_range(4),                  // nodes
+                1 + rng.gen_range(6),                  // cores per node
+                systems[rng.gen_range(systems.len())],
+                cfgs[rng.gen_range(cfgs.len())],
+                kerns[rng.gen_range(kerns.len())],
+                rng.next_u64(),                        // graph seed
+            )
+        },
+        |&(dep, width, steps, nodes, cores, system, cfg, kernel, seed)| {
+            let g = graph(dep, width, steps, kernel, seed);
+            parity(&g, system, Machine::new(nodes, cores), &cfg)
+                .map_err(|e| format!("{dep:?} {width}x{steps}: {e}"))
+        },
+    );
+}
+
+#[test]
+fn parity_holds_at_large_node_counts() {
+    // A fig2_scale-shaped spot check: 64 nodes, overdecomposed stencil.
+    // (Modest width per node keeps the oracle side of the test quick.)
+    let m = Machine::new(64, 4);
+    let g = graph(
+        DependencePattern::Stencil1D,
+        64 * 4 * 2,
+        12,
+        KernelConfig::compute_bound(32),
+        9,
+    );
+    for system in [
+        SystemKind::MpiLike,
+        SystemKind::CharmLike,
+        SystemKind::HpxDistributed,
+        SystemKind::Hybrid,
+    ] {
+        parity(&g, system, m, &SystemConfig::default())
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+#[test]
+fn frontier_stays_bounded_while_steps_grow() {
+    // The acceptance criterion behind the refactor: the engine's peak
+    // resident state must not scale with `steps` (the oracle's does —
+    // that is exactly what made long node sweeps cost-prohibitive).
+    //
+    // Three honest categories:
+    //  * Mutually-constrained patterns (every column is bounded by a
+    //    neighbour in both directions — the stencil every campaign
+    //    sweeps, and friends): peak depth must be *identical* between a
+    //    short and a long run.
+    //  * Set-cycling patterns (`spread`, `random_nearest`, up to 64
+    //    steps per cycle): peak must not drift once both runs are past
+    //    the cycle.
+    //  * Source-driven patterns (`dom`, `tree`: column 0 depends only on
+    //    itself, so nothing ever holds it back): the frontier legally
+    //    deepens with the source's lead. Parity still holds bitwise (no
+    //    capping); memory stays `O(width × spread)` — never worse than
+    //    the oracle's `O(width × steps)` — which is what we assert.
+    let p = SimParams::default();
+    let m = Machine::new(4, 4);
+    let slow_cycling = |dep: DependencePattern| {
+        matches!(
+            dep,
+            DependencePattern::Spread { .. }
+                | DependencePattern::RandomNearest { .. }
+        )
+    };
+    let source_driven = |dep: DependencePattern| {
+        matches!(dep, DependencePattern::Dom | DependencePattern::Tree)
+    };
+    for dep in DependencePattern::all() {
+        let (short_steps, long_steps) =
+            if slow_cycling(dep) { (400, 800) } else { (40, 400) };
+        let short =
+            graph(dep, 16, short_steps, KernelConfig::compute_bound(4), 7);
+        let long =
+            graph(dep, 16, long_steps, KernelConfig::compute_bound(4), 7);
+        for system in SystemKind::all() {
+            let (_, s_short) = simulate_with_stats(
+                &short,
+                system,
+                m,
+                &p,
+                &SystemConfig::default(),
+            );
+            let (_, s_long) = simulate_with_stats(
+                &long,
+                system,
+                m,
+                &p,
+                &SystemConfig::default(),
+            );
+            if source_driven(dep) {
+                assert!(
+                    s_long.peak_frontier_tasks <= long.num_points(),
+                    "{system:?} on {dep:?}: frontier exceeded the graph"
+                );
+            } else if slow_cycling(dep) {
+                assert!(
+                    s_long.peak_window_steps <= s_short.peak_window_steps + 4,
+                    "{system:?} on {dep:?}: frontier depth drifted \
+                     ({} -> {})",
+                    s_short.peak_window_steps,
+                    s_long.peak_window_steps
+                );
+            } else {
+                assert_eq!(
+                    s_short.peak_window_steps, s_long.peak_window_steps,
+                    "{system:?} on {dep:?}: frontier depth grew with steps"
+                );
+            }
+            assert!(
+                s_long.peak_frontier_tasks < long.num_points(),
+                "{system:?} on {dep:?}: frontier not smaller than the graph"
+            );
+        }
+    }
+}
