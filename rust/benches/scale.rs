@@ -1,16 +1,19 @@
 //! Bench: regenerate the large-node scaling campaigns the windowed sim
 //! core makes affordable — `fig2_scale` (METG for the distributed
-//! systems up to 64 simulated nodes / 3072 cores) and `fig3_nodes` (the
+//! systems up to 64 simulated nodes / 3072 cores), `fig3_nodes` (the
 //! five Fig 3 Charm++ builds across the node axis at the reference
-//! grain).
+//! grain) and `fig5_stress` (the latency-hiding payload sweep under the
+//! NIC-contention wire model).
 //!
 //! `cargo bench --bench scale`
 //!
 //! Runs through the experiment engine (one content-hashed job per cell);
 //! for cached/sharded campaigns use `repro jobs run --campaign
-//! fig2_scale` / `--campaign fig3_nodes`.
+//! fig2_scale` / `--campaign fig3_nodes` / `--campaign fig5_stress`
+//! (and `--campaign fig2_huge` for the 256-node contention sweep — too
+//! large for this quick driver).
 
-use taskbench_amt::experiments::{fig2_scale, fig3_nodes};
+use taskbench_amt::experiments::{fig2_scale, fig3_nodes, fig5_stress};
 use taskbench_amt::sim::SimParams;
 
 fn main() {
@@ -29,8 +32,16 @@ fn main() {
     println!("{}", t.to_markdown());
     println!("fig3_nodes wall: {:?}", t0.elapsed());
 
+    let t0 = std::time::Instant::now();
+    let t = fig5_stress(30, &[], &params);
+    println!("# Latency hiding — payload × tasks/core, wire vs NIC contention");
+    println!("{}", t.to_markdown());
+    println!("fig5_stress wall: {:?}", t0.elapsed());
+
     println!();
     println!("expected shape: MPI & Charm++ low and flat; HPX-dist and");
     println!("MPI+OpenMP higher and rising with node count (paper §6.2),");
-    println!("with the build-option deltas of Fig 3 persisting at scale.");
+    println!("with the build-option deltas of Fig 3 persisting at scale;");
+    println!("fig5 slowdown factors shrink from tpc 1 to tpc 8 where a");
+    println!("runtime's overdecomposition actually hides the NIC queueing.");
 }

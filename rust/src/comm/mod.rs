@@ -11,5 +11,5 @@ mod model;
 mod serialize;
 
 pub use fabric::{Endpoint, Fabric};
-pub use model::{IntranodeTransport, NetworkModel};
+pub use model::{IntranodeTransport, NetworkModel, NIC_LOOPBACK_LATENCY_FRAC};
 pub use serialize::{marshal, unmarshal, MsgPayload};

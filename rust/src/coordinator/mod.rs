@@ -431,6 +431,7 @@ mod tests {
     use crate::core::DependencePattern;
     use crate::engine::job::{ExecMode, JobSpec};
     use crate::runtimes::{SystemConfig, SystemKind};
+    use crate::sim::NetConfig;
 
     fn sim_jobs(n: usize) -> Vec<Job> {
         (0..n)
@@ -444,6 +445,8 @@ mod tests {
                     tasks_per_core: 1,
                     steps: 6,
                     grain: 1 << (4 + i as u32),
+                    payload: 0,
+                    net: NetConfig::default(),
                     mode: ExecMode::Sim,
                     reps: 1,
                     warmup: 0,

@@ -113,7 +113,17 @@ impl Backend for SimBackend {
             s.mode.id()
         );
         let machine = Machine::new(s.nodes, s.cores_per_node);
-        let mut m = simulate(graph, s.system, machine, &self.params, &s.config);
+        // A job-level payload override moves the *wire* volume only (the
+        // fig5_stress axis): compute stays governed by the kernel grain,
+        // so peak FLOP/s — and with it METG normalization — is computed
+        // from the unmodified params.
+        let params = if s.payload != 0 {
+            SimParams { payload_bytes: s.payload, ..self.params }
+        } else {
+            self.params
+        };
+        let mut m =
+            simulate(graph, s.system, machine, &params, &s.config, &s.net);
         m.peak_flops = sim_peak_flops(machine, &self.params);
         if self.oracle_checksum {
             m.checksum = Some(oracle_outputs(graph).final_checksum(graph));
@@ -178,6 +188,11 @@ impl Backend for NativeBackend {
             s.nodes == 1,
             "native jobs are single-node (got {} nodes)",
             s.nodes
+        );
+        anyhow::ensure!(
+            s.net.is_default() && s.payload == 0,
+            "the wire model and payload override are simulator dimensions; \
+             native cells measure the real machine"
         );
         let opts = RunOptions::new(s.cores_per_node).with_config(&s.config);
         match s.mode {
@@ -331,6 +346,8 @@ mod tests {
             tasks_per_core: 2,
             steps: 5,
             grain: 8,
+            payload: 0,
+            net: crate::sim::NetConfig::default(),
             mode,
             reps: 1,
             warmup: 0,
@@ -405,6 +422,43 @@ mod tests {
         let err = replay.execute(&missing, &graph).unwrap_err();
         assert!(format!("{err:#}").contains("no baseline record"), "{err:#}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn native_backend_rejects_sim_only_dimensions() {
+        let b = Backends::new(&SimParams::default());
+        let mut s = spec(ExecMode::Native);
+        s.net = crate::sim::NetConfig::contention();
+        let job = Job::new(s);
+        let graph = job_graph(&job.spec);
+        let err = b.native.execute(&job, &graph).unwrap_err();
+        assert!(format!("{err:#}").contains("simulator dimensions"), "{err:#}");
+        let mut s = spec(ExecMode::Native);
+        s.payload = 4096;
+        let job = Job::new(s);
+        assert!(b.native.execute(&job, &graph).is_err());
+    }
+
+    #[test]
+    fn payload_override_moves_the_wire_but_not_the_peak() {
+        let b = Backends::new(&SimParams::default());
+        let base = Job::new(spec(ExecMode::Sim));
+        let mut s = spec(ExecMode::Sim);
+        s.payload = 1 << 20; // 1 MiB on the wire per task output
+        let heavy = Job::new(s);
+        let rb = b.run(&base).unwrap();
+        let rh = b.run(&heavy).unwrap();
+        assert!(
+            rh.wall_secs > rb.wall_secs,
+            "bigger wire payload must cost wall time: {} vs {}",
+            rh.wall_secs,
+            rb.wall_secs
+        );
+        assert_eq!(
+            rh.peak_flops.to_bits(),
+            rb.peak_flops.to_bits(),
+            "peak normalization must ignore the wire payload"
+        );
     }
 
     #[test]

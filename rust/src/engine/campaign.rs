@@ -8,12 +8,17 @@
 //! never executes anything — `jobs table` after a partial `jobs run`
 //! shows `?` for the missing cells instead of recomputing them.
 //!
-//! Two engine dimensions are campaign axes here: the execution backend
+//! Three engine dimensions are campaign axes here: the execution backend
 //! ([`Campaign::mode`] — `jobs run --native` flips a whole campaign from
 //! `SimBackend` to `NativeBackend`, caching native cells under their own
-//! fingerprints) and the system build config ([`Campaign::configs`] —
+//! fingerprints), the system build config ([`Campaign::configs`] —
 //! Fig 3 and the HPX ablation are ordinary campaigns whose cells differ
-//! only in [`SystemConfig`]).
+//! only in [`SystemConfig`]), and the wire model ([`Campaign::nets`] —
+//! the latency-hiding campaign `fig5_stress` runs every cell under both
+//! the congestion-free wire and the NIC-contention model, and
+//! `fig2_huge` climbs to 256 nodes with contention on). `fig5_stress`
+//! additionally sweeps the wire payload ([`Campaign::payloads`], the
+//! `--payloads` override).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -22,6 +27,7 @@ use crate::core::DependencePattern;
 use crate::harness::report::Table;
 use crate::metg::{metg_from_curve, GrainRun};
 use crate::runtimes::{SystemConfig, SystemKind};
+use crate::sim::NetConfig;
 
 use super::job::{ExecMode, Job, JobResult, JobSpec};
 
@@ -47,12 +53,23 @@ pub enum CampaignKind {
     HpxAblation,
     /// §6.3 outlook: METG per system × dependence pattern, 1 node.
     Patterns,
+    /// The paper's latency-hiding comparison (RQ3): wire payload ×
+    /// tasks-per-core per event-driven system, every cell priced under
+    /// both the congestion-free wire and the NIC-contention model — the
+    /// contention slowdown is the "did overlap hide it?" metric.
+    Fig5Stress,
+    /// Fig 2 pushed to the 64–256-node range under the NIC-contention
+    /// model, where link sharing is the point.
+    Fig2Huge,
 }
 
 impl CampaignKind {
     pub fn all() -> Vec<CampaignKind> {
         use CampaignKind::*;
-        vec![Fig1, Table2, Fig2, Fig2Scale, Fig3, Fig3Nodes, HpxAblation, Patterns]
+        vec![
+            Fig1, Table2, Fig2, Fig2Scale, Fig3, Fig3Nodes, HpxAblation,
+            Patterns, Fig5Stress, Fig2Huge,
+        ]
     }
 
     pub fn id(&self) -> &'static str {
@@ -65,6 +82,8 @@ impl CampaignKind {
             CampaignKind::Fig3Nodes => "fig3_nodes",
             CampaignKind::HpxAblation => "hpx_ablation",
             CampaignKind::Patterns => "patterns",
+            CampaignKind::Fig5Stress => "fig5_stress",
+            CampaignKind::Fig2Huge => "fig2_huge",
         }
     }
 
@@ -83,6 +102,10 @@ impl CampaignKind {
             CampaignKind::Fig2Scale => 30,
             CampaignKind::Fig3Nodes => 50,
             CampaignKind::HpxAblation | CampaignKind::Patterns => 60,
+            CampaignKind::Fig5Stress => 30,
+            // 256 × 48 cores × tpc 8 is ~100k tasks per step: keep the
+            // step count low and let the grain ladder do the sweeping.
+            CampaignKind::Fig2Huge => 20,
         }
     }
 
@@ -92,17 +115,22 @@ impl CampaignKind {
     pub fn sweeps_nodes(&self) -> bool {
         matches!(
             self,
-            CampaignKind::Fig2 | CampaignKind::Fig2Scale | CampaignKind::Fig3Nodes
+            CampaignKind::Fig2
+                | CampaignKind::Fig2Scale
+                | CampaignKind::Fig3Nodes
+                | CampaignKind::Fig2Huge
         )
     }
 }
 
 /// Per-metric relative tolerances for golden-record diffing (`jobs
 /// diff`). `0.0` on a metric demands bitwise equality — the contract sim
-/// results already honor; native wall clocks measure a real machine and
-/// need an envelope. Task counts and checksums are never tolerated:
-/// both are structural, and a mismatch is a hard failure regardless of
-/// any tolerance here.
+/// results already honor, *including* NIC-contention cells (the channel
+/// busy-times are plain deterministic f64 state, so `fig5_stress` and
+/// `fig2_huge` gate bitwise like every other sim campaign); native wall
+/// clocks measure a real machine and need an envelope. Task counts and
+/// checksums are never tolerated: both are structural, and a mismatch is
+/// a hard failure regardless of any tolerance here.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiffTolerances {
     /// Relative tolerance on mean wall seconds.
@@ -151,6 +179,15 @@ pub struct Campaign {
     /// the five Fig 3 builds / the two HPX stealing variants for the
     /// ablation kinds. The first entry is the reference row.
     pub configs: Vec<(String, SystemConfig)>,
+    /// Wire payload bytes per task output (`[0]` = inherit the sim
+    /// params' calibrated payload — the default, which contributes
+    /// nothing to job ids). `fig5_stress` sweeps this axis; `--payloads`
+    /// overrides it anywhere.
+    pub payloads: Vec<usize>,
+    /// Labelled wire models. One congestion-free entry for most kinds
+    /// (the historical wire, id-neutral); both models for `fig5_stress`;
+    /// contention-only for `fig2_huge`. The first entry is the reference.
+    pub nets: Vec<(String, NetConfig)>,
     /// Which backend measures the cells (`jobs run --native` flips this
     /// campaign-wide; ids change with it, so sim and native results for
     /// the same cell coexist in one store).
@@ -180,10 +217,20 @@ impl Campaign {
                 CampaignKind::HpxAblation => vec![SystemKind::HpxLocal],
                 // Only systems that exist beyond one node can climb the
                 // large-node axis (paper row order preserved).
-                CampaignKind::Fig2Scale => SystemKind::all()
-                    .into_iter()
-                    .filter(|s| !s.is_shared_memory_only())
-                    .collect(),
+                CampaignKind::Fig2Scale | CampaignKind::Fig2Huge => {
+                    SystemKind::all()
+                        .into_iter()
+                        .filter(|s| !s.is_shared_memory_only())
+                        .collect()
+                }
+                // Latency hiding is a property of the event-driven
+                // runtimes; the fork-join analytic paths price their
+                // wire congestion-free by construction.
+                CampaignKind::Fig5Stress => vec![
+                    SystemKind::MpiLike,
+                    SystemKind::CharmLike,
+                    SystemKind::HpxDistributed,
+                ],
                 _ => systems,
             },
             cores_per_node: 48,
@@ -192,6 +239,8 @@ impl Campaign {
                 // The node axis is the sweep; pin the paper's Fig 3
                 // reference grain unless the caller overrides it.
                 CampaignKind::Fig3Nodes => vec![4096],
+                // The payload axis is the sweep; pin the reference grain.
+                CampaignKind::Fig5Stress => vec![4096],
                 _ => grains,
             },
             nodes: match kind {
@@ -199,14 +248,19 @@ impl Campaign {
                 CampaignKind::Fig2Scale | CampaignKind::Fig3Nodes => {
                     vec![8, 16, 32, 64]
                 }
-                CampaignKind::Fig3 => vec![8],
+                CampaignKind::Fig2Huge => vec![64, 128, 256],
+                CampaignKind::Fig3 | CampaignKind::Fig5Stress => vec![8],
                 _ => vec![1],
             },
             tasks_per_core: match kind {
                 CampaignKind::Table2 => vec![1, 8, 16],
                 CampaignKind::Fig2
                 | CampaignKind::Fig2Scale
+                | CampaignKind::Fig2Huge
                 | CampaignKind::HpxAblation => vec![8],
+                // Overdecomposition is the latency-hiding lever: compare
+                // no-slack against the paper's reference factor.
+                CampaignKind::Fig5Stress => vec![1, 8],
                 _ => vec![1],
             },
             configs: match kind {
@@ -217,6 +271,22 @@ impl Campaign {
                     SystemConfig::hpx_ablation().into_iter().map(label).collect()
                 }
                 _ => vec![("default".to_string(), SystemConfig::default())],
+            },
+            payloads: match kind {
+                // 64 B (the calibrated default, spelled explicitly so the
+                // sweep is self-describing) up to bandwidth-bound 64 KiB.
+                CampaignKind::Fig5Stress => vec![64, 4096, 65536],
+                _ => vec![0],
+            },
+            nets: match kind {
+                CampaignKind::Fig5Stress => vec![
+                    ("wire".to_string(), NetConfig::default()),
+                    ("nic".to_string(), NetConfig::contention()),
+                ],
+                CampaignKind::Fig2Huge => {
+                    vec![("nic".to_string(), NetConfig::contention())]
+                }
+                _ => vec![("wire".to_string(), NetConfig::default())],
             },
             mode: ExecMode::Sim,
         }
@@ -277,10 +347,24 @@ impl Campaign {
         self.configs.first().map(|(_, c)| *c).unwrap_or_default()
     }
 
-    /// The job for one cell at an explicit build config. Every caller
-    /// (enumeration, rendering, the experiments drivers) builds cells
-    /// through here so ids always agree.
-    pub fn job_for_config(
+    /// The wire model a single-model renderer addresses (the reference
+    /// entry — contention for `fig2_huge`, the congestion-free wire
+    /// everywhere else).
+    pub(crate) fn render_net(&self) -> NetConfig {
+        self.nets.first().map(|(_, n)| *n).unwrap_or_default()
+    }
+
+    /// The wire payload a single-payload renderer addresses.
+    pub(crate) fn render_payload(&self) -> usize {
+        self.payloads.first().copied().unwrap_or(0)
+    }
+
+    /// The job for one fully-addressed cell (explicit build config, wire
+    /// model and payload). Every caller — enumeration, rendering, the
+    /// experiments drivers — builds cells through here so ids always
+    /// agree.
+    #[allow(clippy::too_many_arguments)]
+    pub fn job_for_cell(
         &self,
         system: SystemKind,
         pattern: DependencePattern,
@@ -288,6 +372,8 @@ impl Campaign {
         tasks_per_core: usize,
         grain: u64,
         config: SystemConfig,
+        payload: usize,
+        net: NetConfig,
     ) -> Job {
         Job::new(JobSpec {
             system,
@@ -298,10 +384,35 @@ impl Campaign {
             tasks_per_core,
             steps: self.steps,
             grain,
+            payload,
+            net,
             mode: self.mode,
             reps: 1,
             warmup: 0,
         })
+    }
+
+    /// [`Campaign::job_for_cell`] at the campaign's reference wire model
+    /// and payload.
+    pub fn job_for_config(
+        &self,
+        system: SystemKind,
+        pattern: DependencePattern,
+        nodes: usize,
+        tasks_per_core: usize,
+        grain: u64,
+        config: SystemConfig,
+    ) -> Job {
+        self.job_for_cell(
+            system,
+            pattern,
+            nodes,
+            tasks_per_core,
+            grain,
+            config,
+            self.render_payload(),
+            self.render_net(),
+        )
     }
 
     /// [`Campaign::job_for_config`] at the campaign's reference config.
@@ -337,33 +448,65 @@ impl Campaign {
         }
     }
 
-    /// Overdecomposition factors [`Campaign::jobs`] enumerates — only
-    /// Table 2 sweeps the tpc axis (same reasoning as [`Self::job_nodes`]).
+    /// Overdecomposition factors [`Campaign::jobs`] enumerates — Table 2
+    /// and the latency-hiding stress sweep the tpc axis (same reasoning
+    /// as [`Self::job_nodes`]).
     fn job_tpcs(&self) -> Vec<usize> {
         match self.kind {
-            CampaignKind::Table2 => self.tasks_per_core.clone(),
+            CampaignKind::Table2 | CampaignKind::Fig5Stress => {
+                self.tasks_per_core.clone()
+            }
             _ => vec![self.render_tpc()],
         }
     }
 
+    /// The (system, nodes, grain, tasks-per-core) axis walk the
+    /// `fig5_stress` renderers address — the same walk (same order, same
+    /// shared-memory skip) [`Campaign::jobs`] performs over those axes,
+    /// shared so the table, the dat blocks and the enumeration can never
+    /// drift apart.
+    fn fig5_cells(&self) -> Vec<(SystemKind, usize, u64, usize)> {
+        let mut out = Vec::new();
+        for &system in &self.systems {
+            for &nodes in &self.job_nodes() {
+                if nodes > 1 && system.is_shared_memory_only() {
+                    continue; // not enumerated by jobs() either
+                }
+                for &grain in &self.grains {
+                    for &tpc in &self.job_tpcs() {
+                        out.push((system, nodes, grain, tpc));
+                    }
+                }
+            }
+        }
+        out
+    }
+
     /// Enumerate every cell, deterministically: systems outer (paper row
-    /// order), then configs (ablation row order), then columns, then
-    /// grains descending. The set is exactly what the renderers address —
-    /// no executed-but-invisible cells.
+    /// order), then configs (ablation row order), then wire models, then
+    /// payloads, then columns, then grains descending. The set is
+    /// exactly what the renderers address — no executed-but-invisible
+    /// cells.
     pub fn jobs(&self) -> Vec<Job> {
         let mut out = Vec::new();
         for &system in &self.systems {
             for pattern in self.patterns() {
                 for (_, config) in &self.configs {
-                    for &nodes in &self.job_nodes() {
-                        if nodes > 1 && system.is_shared_memory_only() {
-                            continue; // the paper compares these on 1 node only
-                        }
-                        for &tpc in &self.job_tpcs() {
-                            for &grain in &self.grains {
-                                out.push(self.job_for_config(
-                                    system, pattern, nodes, tpc, grain, *config,
-                                ));
+                    for (_, net) in &self.nets {
+                        for &payload in &self.payloads {
+                            for &nodes in &self.job_nodes() {
+                                if nodes > 1 && system.is_shared_memory_only() {
+                                    // the paper compares these on 1 node only
+                                    continue;
+                                }
+                                for &tpc in &self.job_tpcs() {
+                                    for &grain in &self.grains {
+                                        out.push(self.job_for_cell(
+                                            system, pattern, nodes, tpc,
+                                            grain, *config, payload, *net,
+                                        ));
+                                    }
+                                }
                             }
                         }
                     }
@@ -416,13 +559,14 @@ impl Campaign {
         match self.kind {
             CampaignKind::Fig1 => self.fig1_table(results),
             CampaignKind::Table2 => self.table2_table(results),
-            CampaignKind::Fig2 | CampaignKind::Fig2Scale => {
-                self.fig2_table(results)
-            }
+            CampaignKind::Fig2
+            | CampaignKind::Fig2Scale
+            | CampaignKind::Fig2Huge => self.fig2_table(results),
             CampaignKind::Fig3 => self.config_table(results, "Build"),
             CampaignKind::Fig3Nodes => self.config_nodes_table(results),
             CampaignKind::HpxAblation => self.config_table(results, "Variant"),
             CampaignKind::Patterns => self.patterns_table(results),
+            CampaignKind::Fig5Stress => self.fig5_table(results),
         }
     }
 
@@ -544,6 +688,87 @@ impl Campaign {
                     nodes,
                     tpc,
                 ));
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    /// Latency-hiding stress renderer (`fig5_stress`): one row per
+    /// system × tasks-per-core, one column pair per wire payload — the
+    /// makespan under the reference (congestion-free) wire and the
+    /// contention slowdown factor next to it. A factor near 1.00x means
+    /// the runtime's overlap hid the NIC serialization; a large one
+    /// means the latency was exposed. Rows where overdecomposition
+    /// shrinks the factor are the paper's RQ3 answer in one glance.
+    fn fig5_table(&self, results: &HashMap<String, JobResult>) -> Table {
+        let nodes_axis = self.job_nodes();
+        let multi_nodes = nodes_axis.len() > 1;
+        let multi_grain = self.grains.len() > 1;
+        let mut headers = vec!["System".to_string(), "tasks/core".to_string()];
+        for &p in &self.payloads {
+            let label = if p == 0 {
+                "default".to_string()
+            } else {
+                format!("{p}B")
+            };
+            headers.push(format!("wall ms @{label}"));
+            headers.push(format!("slowdown @{label}"));
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+        let wall = |system: SystemKind,
+                    nodes: usize,
+                    grain: u64,
+                    tpc: usize,
+                    payload: usize,
+                    net: NetConfig|
+         -> Option<f64> {
+            let id = self
+                .job_for_cell(
+                    system,
+                    DependencePattern::Stencil1D,
+                    nodes,
+                    tpc,
+                    grain,
+                    self.render_config(),
+                    payload,
+                    net,
+                )
+                .id();
+            results.get(&id).map(|r| r.wall_secs)
+        };
+        // The reference model is the first nets entry; the stressed one
+        // the second (fig5's default layout: wire then nic). A campaign
+        // narrowed to one model (e.g. a --net override) still renders
+        // its walls, with the slowdown column honestly unknown. A
+        // multi-valued --nodes/--grains override emits one row per
+        // (node count, grain) — every enumerated cell renders somewhere.
+        let stressed = self.nets.get(1).map(|(_, n)| *n);
+        for &(system, nodes, grain, tpc) in &self.fig5_cells() {
+            let mut name = system.name().to_string();
+            if multi_nodes {
+                name.push_str(&format!(" @{nodes}n"));
+            }
+            if multi_grain {
+                name.push_str(&format!(" @g{grain}"));
+            }
+            let mut row = vec![name, tpc.to_string()];
+            for &p in &self.payloads {
+                let base =
+                    wall(system, nodes, grain, tpc, p, self.render_net());
+                row.push(match base {
+                    Some(w) => format!("{:.3}", w * 1e3),
+                    None => "?".into(),
+                });
+                let nic =
+                    stressed.and_then(|n| wall(system, nodes, grain, tpc, p, n));
+                row.push(match (base, nic) {
+                    (Some(b), Some(s)) if b > 0.0 => {
+                        format!("{:.2}x", s / b)
+                    }
+                    _ => "?".into(),
+                });
             }
             t.row(&row);
         }
@@ -839,21 +1064,71 @@ impl Campaign {
                     }
                 }
             }
+            CampaignKind::Fig5Stress => {
+                // One block per enumerated (system, nodes, grain, tpc)
+                // cell group × wire model (the shared `fig5_cells` walk
+                // — every enumerated cell lands in some block): payload
+                // bytes vs makespan (ms), so gnuplot overlays the wire
+                // and nic curves to show the exposed latency.
+                let multi_nodes = self.job_nodes().len() > 1;
+                let multi_grain = self.grains.len() > 1;
+                for &(system, nodes, grain, tpc) in &self.fig5_cells() {
+                    for (label, net) in &self.nets {
+                        let mut t = Table::new(&["payload_bytes", "wall_ms"]);
+                        for &p in &self.payloads {
+                            let id = self
+                                .job_for_cell(
+                                    system,
+                                    DependencePattern::Stencil1D,
+                                    nodes,
+                                    tpc,
+                                    grain,
+                                    self.render_config(),
+                                    p,
+                                    *net,
+                                )
+                                .id();
+                            if let Some(r) = results.get(&id) {
+                                t.row(&[
+                                    p.to_string(),
+                                    format!("{:.6}", r.wall_secs * 1e3),
+                                ]);
+                            }
+                        }
+                        let mut hdr = format!(
+                            "# system {} tpc {tpc} net {label}",
+                            system.id()
+                        );
+                        if multi_nodes {
+                            hdr.push_str(&format!(" nodes {nodes}"));
+                        }
+                        if multi_grain {
+                            hdr.push_str(&format!(" grain {grain}"));
+                        }
+                        hdr.push('\n');
+                        out.push_str(&hdr);
+                        out.push_str(&t.to_dat());
+                        out.push('\n');
+                    }
+                }
+            }
             _ => {
                 let (col_name, cols): (&str, Vec<usize>) = match self.kind {
                     CampaignKind::Table2 => {
                         ("tasks_per_core", self.tasks_per_core.clone())
                     }
-                    CampaignKind::Fig2 | CampaignKind::Fig2Scale => {
-                        ("nodes", self.job_nodes())
-                    }
+                    CampaignKind::Fig2
+                    | CampaignKind::Fig2Scale
+                    | CampaignKind::Fig2Huge => ("nodes", self.job_nodes()),
                     _ => ("pattern_index", (0..self.patterns().len()).collect()),
                 };
                 // For artifacts whose columns are *not* the node axis, a
                 // multi-valued node override emits one block per count
                 // instead of silently collapsing to the first.
                 let node_blocks: Vec<usize> = match self.kind {
-                    CampaignKind::Fig2 | CampaignKind::Fig2Scale => vec![0],
+                    CampaignKind::Fig2
+                    | CampaignKind::Fig2Scale
+                    | CampaignKind::Fig2Huge => vec![0],
                     _ => self.job_nodes(),
                 };
                 for &system in &self.systems {
@@ -869,7 +1144,9 @@ impl Campaign {
                                     bnodes,
                                     c,
                                 ),
-                                CampaignKind::Fig2 | CampaignKind::Fig2Scale => (
+                                CampaignKind::Fig2
+                                | CampaignKind::Fig2Scale
+                                | CampaignKind::Fig2Huge => (
                                     DependencePattern::Stencil1D,
                                     c,
                                     self.render_tpc(),
@@ -924,17 +1201,23 @@ mod tests {
         c.nodes = match kind {
             CampaignKind::Fig2
             | CampaignKind::Fig2Scale
-            | CampaignKind::Fig3Nodes => vec![1, 2],
-            CampaignKind::Fig3 => vec![2],
+            | CampaignKind::Fig3Nodes
+            | CampaignKind::Fig2Huge => vec![1, 2],
+            CampaignKind::Fig3 | CampaignKind::Fig5Stress => vec![2],
             _ => vec![1],
         };
         c.tasks_per_core = match kind {
             CampaignKind::Table2 => vec![1, 2],
             CampaignKind::Fig2
             | CampaignKind::Fig2Scale
+            | CampaignKind::Fig2Huge
             | CampaignKind::HpxAblation => vec![2],
+            CampaignKind::Fig5Stress => vec![1, 2],
             _ => vec![1],
         };
+        if kind == CampaignKind::Fig5Stress {
+            c.payloads = vec![64, 65536];
+        }
         c
     }
 
@@ -1158,6 +1441,172 @@ mod tests {
         assert!(default_line.contains("+0.0%"), "{default_line}");
         let dat = c.dat(&map);
         assert_eq!(dat.matches("# build").count(), 5, "{dat}");
+    }
+
+    #[test]
+    fn fig5_stress_enumerates_both_models_with_distinct_ids() {
+        let c = small(CampaignKind::Fig5Stress);
+        let jobs = c.jobs();
+        // 3 pinned systems × 2 nets × 2 payloads × 2 tpc × 1 grain.
+        assert_eq!(jobs.len(), 3 * 2 * 2 * 2);
+        let mut ids: Vec<String> = jobs.iter().map(Job::id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), jobs.len(), "net/payload must reach the hash");
+        // Half the cells are contention-model, half congestion-free.
+        let nic = jobs.iter().filter(|j| !j.spec.net.is_default()).count();
+        assert_eq!(nic, jobs.len() / 2);
+        // No fork-join system sneaks into the latency-hiding comparison.
+        assert!(jobs.iter().all(|j| {
+            !matches!(
+                j.spec.system,
+                SystemKind::OpenMpLike | SystemKind::Hybrid
+            )
+        }));
+    }
+
+    #[test]
+    fn fig5_stress_contention_twin_is_strictly_slower_when_comm_bound() {
+        // The acceptance criterion, end to end through the engine: the
+        // big-payload no-overdecomposition cell is communication-bound,
+        // so its contention-model twin must report a strictly higher
+        // makespan; the congestion-free twin's numbers are what they
+        // always were.
+        let c = small(CampaignKind::Fig5Stress);
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let wire = c.render_net();
+        let nic = c.nets[1].1;
+        let grain = c.grains[0];
+        for &system in &c.systems {
+            let cell = |net| {
+                let id = c
+                    .job_for_cell(
+                        system,
+                        DependencePattern::Stencil1D,
+                        2,
+                        1,
+                        grain,
+                        c.render_config(),
+                        65536,
+                        net,
+                    )
+                    .id();
+                map[&id].wall_secs
+            };
+            assert!(
+                cell(nic) > cell(wire),
+                "{system:?}: contention twin not slower \
+                 ({} vs {})",
+                cell(nic),
+                cell(wire)
+            );
+        }
+    }
+
+    #[test]
+    fn fig5_table_renders_slowdown_columns() {
+        let c = small(CampaignKind::Fig5Stress);
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("slowdown @65536B"), "{md}");
+        assert!(md.contains("MPI (like)"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+        assert!(md.contains('x'), "{md}");
+        let dat = c.dat(&map);
+        assert!(dat.contains("# system mpi tpc 1 net wire"), "{dat}");
+        assert!(dat.contains("net nic"), "{dat}");
+        // One block per system × tpc × net.
+        assert_eq!(dat.matches("# system").count(), 3 * 2 * 2, "{dat}");
+    }
+
+    #[test]
+    fn fig5_node_override_renders_every_enumerated_cell() {
+        // A multi-valued --nodes (or --grains) override on fig5_stress
+        // widens the job set; the renderer and dat must emit one
+        // row/block per (node count, grain) instead of silently showing
+        // only the first — the no-executed-but-invisible-cells contract.
+        let mut c = small(CampaignKind::Fig5Stress);
+        c.nodes = vec![1, 2];
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("@1n"), "{md}");
+        assert!(md.contains("@2n"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+        let dat = c.dat(&map);
+        assert!(dat.contains("nodes 1"), "{dat}");
+        assert!(dat.contains("nodes 2"), "{dat}");
+    }
+
+    #[test]
+    fn fig2_huge_defaults_reach_256_nodes_under_contention() {
+        let c = Campaign::new(CampaignKind::Fig2Huge, Vec::new(), 20, &[4096]);
+        assert_eq!(c.nodes, vec![64, 128, 256]);
+        assert!(c.systems.iter().all(|s| !s.is_shared_memory_only()));
+        assert_eq!(c.nets.len(), 1);
+        assert!(!c.nets[0].1.is_default(), "contention is the point");
+        // Every enumerated cell carries the contention model.
+        assert!(c.jobs().iter().all(|j| !j.spec.net.is_default()));
+        assert_eq!(
+            c.jobs().len(),
+            c.systems.len() * c.nodes.len() * c.grains.len()
+        );
+    }
+
+    #[test]
+    fn fig2_huge_small_campaign_runs_and_renders() {
+        let c = small(CampaignKind::Fig2Huge);
+        let params = SimParams::default();
+        let summary =
+            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+        let map: HashMap<String, JobResult> =
+            summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("1 node"), "{md}");
+        assert!(md.contains("2 nodes"), "{md}");
+        assert!(!md.contains('?'), "{md}");
+        let dat = c.dat(&map);
+        assert!(dat.contains("# system mpi"), "{dat}");
+        assert!(dat.contains("nodes"), "{dat}");
+    }
+
+    #[test]
+    fn default_campaigns_carry_the_id_neutral_wire() {
+        // Every pre-contention campaign keeps payload 0 + default net in
+        // all its cells — the canonical forms (hence record ids) are
+        // untouched by the NetModel refactor.
+        for kind in [
+            CampaignKind::Fig1,
+            CampaignKind::Table2,
+            CampaignKind::Fig2,
+            CampaignKind::Fig2Scale,
+            CampaignKind::Fig3,
+            CampaignKind::Fig3Nodes,
+            CampaignKind::HpxAblation,
+            CampaignKind::Patterns,
+        ] {
+            let c = small(kind);
+            for j in c.jobs() {
+                assert!(j.spec.net.is_default(), "{kind:?}");
+                assert_eq!(j.spec.payload, 0, "{kind:?}");
+                assert!(
+                    !j.spec.canonical().contains("net="),
+                    "{kind:?}: {}",
+                    j.spec.canonical()
+                );
+            }
+        }
     }
 
     #[test]

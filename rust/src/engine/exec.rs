@@ -15,7 +15,10 @@ use super::backend::{Backend, Backends, NativeBackend};
 pub use super::backend::{job_graph, sim_peak_flops};
 use super::job::{ExecMode, Job, JobResult, JobSpec};
 
-/// One simulated grain run (the sim-mode [`GrainRun`]).
+/// One simulated grain run (the sim-mode [`GrainRun`]) — on the default
+/// congestion-free wire; contention cells go through the campaign path
+/// (`fig5_stress`, `fig2_huge`), where the wire model is a hashed job
+/// dimension.
 #[allow(clippy::too_many_arguments)]
 pub fn sim_grain_run(
     system: SystemKind,
@@ -34,7 +37,14 @@ pub fn sim_grain_run(
         kernel: KernelConfig::compute_bound(grain),
         ..GraphConfig::default()
     });
-    let m = simulate(&graph, system, machine, params, cfg);
+    let m = simulate(
+        &graph,
+        system,
+        machine,
+        params,
+        cfg,
+        &crate::sim::NetConfig::default(),
+    );
     GrainRun {
         grain_iters: grain,
         tasks: m.tasks,
@@ -73,6 +83,8 @@ pub fn native_grain_run(
         tasks_per_core,
         steps,
         grain,
+        payload: 0,
+        net: crate::sim::NetConfig::default(),
         mode: ExecMode::Native,
         reps,
         warmup,
@@ -102,6 +114,7 @@ mod tests {
     use super::*;
     use crate::core::DependencePattern;
     use crate::engine::job::{ExecMode, JobSpec};
+    use crate::sim::NetConfig;
 
     fn sim_job(grain: u64) -> Job {
         Job::new(JobSpec {
@@ -113,6 +126,8 @@ mod tests {
             tasks_per_core: 1,
             steps: 8,
             grain,
+            payload: 0,
+            net: NetConfig::default(),
             mode: ExecMode::Sim,
             reps: 1,
             warmup: 0,
@@ -151,6 +166,8 @@ mod tests {
             tasks_per_core: 1,
             steps: 6,
             grain: 32,
+            payload: 0,
+            net: NetConfig::default(),
             mode: ExecMode::Native,
             reps: 1,
             warmup: 0,
@@ -172,6 +189,8 @@ mod tests {
             tasks_per_core: 2,
             steps: 5,
             grain: 8,
+            payload: 0,
+            net: NetConfig::default(),
             mode: ExecMode::Validate,
             reps: 1,
             warmup: 0,
@@ -199,6 +218,8 @@ mod tests {
             tasks_per_core: 1,
             steps: 4,
             grain: 8,
+            payload: 0,
+            net: NetConfig::default(),
             mode: ExecMode::Validate,
             reps: 1,
             warmup: 0,

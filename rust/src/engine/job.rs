@@ -8,17 +8,21 @@
 //! record, and any config change produces a new record instead of
 //! silently overwriting an old one.
 //!
-//! ## Record schema v2 and the back-compat rule
+//! ## Record schema v3 and the back-compat rule
 //!
-//! Since the [`SystemConfig`] dimension landed, records carry `"v": 2`
-//! and (for non-default configs) a `"config"` object inside `"job"`.
-//! Both are governed by one rule: **a default `SystemConfig` contributes
-//! nothing** — no canonical-form fields, no JSON members. A v1 record
-//! (no `v`, no `config`) therefore parses as a default-config v2 cell
-//! *and keeps its id*: every record PR 1 wrote remains a valid cache hit
-//! for the cell it described. Only non-default configs (Fig 3 builds,
-//! the HPX stealing ablation, hybrid rank overrides) extend the
-//! canonical form, so their ids are new — exactly the cells v1 could not
+//! Since the [`SystemConfig`] dimension landed (v2), records carry a
+//! version stamp and (for non-default configs) a `"config"` object
+//! inside `"job"`; the network-model dimension (v3) added `"net"` and
+//! `"payload"` the same way. All are governed by one rule: **a default
+//! dimension contributes nothing** — no canonical-form fields, no JSON
+//! members. A v1 record (no `v`, no `config`) therefore parses as a
+//! default-config v3 cell *and keeps its id*, and a v2 record parses as
+//! a congestion-free default-payload cell and keeps *its* id: every
+//! record an earlier PR wrote remains a valid cache hit for the cell it
+//! described. Only non-default dimensions (Fig 3 builds, the HPX
+//! stealing ablation, hybrid rank overrides, the NIC-contention wire
+//! model, fig5_stress payload overrides) extend the canonical form, so
+//! their ids are new — exactly the cells older schemas could not
 //! express.
 //!
 //! The same rule governs the result side: a [`JobResult`] whose
@@ -39,10 +43,10 @@ use crate::metg::GrainRun;
 use crate::runtimes::{
     CharmOptions, HpxOptions, SystemConfig, SystemKind,
 };
-use crate::sim::SimParams;
+use crate::sim::{NetConfig, NetModelKind, SimParams};
 
 /// Current on-disk record schema version (see the module docs).
-pub const RECORD_SCHEMA_VERSION: u64 = 2;
+pub const RECORD_SCHEMA_VERSION: u64 = 3;
 
 /// How a job is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,6 +104,15 @@ pub struct JobSpec {
     pub steps: usize,
     /// Compute grain, kernel iterations.
     pub grain: u64,
+    /// Wire payload bytes per task output — the latency-hiding stress
+    /// axis (`fig5_stress`). `0` = the calibrated `SimParams` payload
+    /// (the default; contributes nothing to the canonical form). Only
+    /// the message volume moves: compute stays governed by `grain`.
+    pub payload: usize,
+    /// Which wire model prices this cell's messages ([`NetConfig`]).
+    /// Hashed — a contention-model cell never collides with its
+    /// congestion-free twin. The default contributes nothing.
+    pub net: NetConfig,
     pub mode: ExecMode,
     /// Repetitions / discarded warmups (native mode; sim is deterministic
     /// and ignores both).
@@ -122,7 +135,9 @@ impl JobSpec {
     /// Canonical key/value form: the hash input and the human summary.
     /// Field order is part of the on-disk contract — never reorder. A
     /// default [`SystemConfig`] appends nothing (the v1 back-compat
-    /// rule); non-default configs append their knobs after `warmup`.
+    /// rule); non-default configs append their knobs after `warmup`,
+    /// then a non-default payload, then a non-default [`NetConfig`] —
+    /// each independently subject to default-contributes-nothing.
     pub fn canonical(&self) -> String {
         let mut s = format!(
             "system={};pattern={};radix={};nodes={};cores={};tpc={};steps={};\
@@ -150,13 +165,34 @@ impl JobSpec {
                 c.hybrid_ranks,
             ));
         }
+        if self.payload != 0 {
+            s.push_str(&format!(";payload={}", self.payload));
+        }
+        if !self.net.is_default() {
+            s.push_str(&format!(
+                ";net={};nicbw={};nicmsgus={}",
+                self.net.model.id(),
+                self.net.nic_bytes_per_ns,
+                self.net.nic_msgs_per_us,
+            ));
+        }
         s
     }
 
-    /// Compact listing summary of the system + its build config, e.g.
-    /// `charm[8B-prio,shmem]` (the `jobs list` column).
+    /// Compact listing summary of the system + its build config plus any
+    /// non-default wire model / payload, e.g.
+    /// `charm[8B-prio,shmem]+nic[25B/ns,150m/us]+pay65536`
+    /// (the `jobs list` column).
     pub fn config_summary(&self) -> String {
-        self.config.summary(self.system)
+        let mut s = self.config.summary(self.system);
+        if !self.net.is_default() {
+            s.push('+');
+            s.push_str(&self.net.summary());
+        }
+        if self.payload != 0 {
+            s.push_str(&format!("+pay{}", self.payload));
+        }
+        s
     }
 
     fn to_json(&self) -> Json {
@@ -175,6 +211,12 @@ impl JobSpec {
         ];
         if !self.config.is_default() {
             members.push(("config".into(), config_to_json(&self.config)));
+        }
+        if self.payload != 0 {
+            members.push(("payload".into(), Json::Num(self.payload as f64)));
+        }
+        if !self.net.is_default() {
+            members.push(("net".into(), net_to_json(&self.net)));
         }
         Json::Obj(members)
     }
@@ -200,11 +242,16 @@ impl JobSpec {
         let mode_id = str_field("mode")?;
         let mode = ExecMode::parse(mode_id)
             .with_context(|| format!("unknown mode `{mode_id}`"))?;
-        // Back-compat: v1 records (and default-config v2 records) have no
-        // `config` member — that *is* the default config.
+        // Back-compat: v1 records (and default-config v2+ records) have
+        // no `config` member — that *is* the default config. The same
+        // rule covers `payload` and `net` (absent = default wire).
         let config = match v.get("config") {
             Some(c) => config_from_json(c)?,
             None => SystemConfig::default(),
+        };
+        let net = match v.get("net") {
+            Some(n) => net_from_json(n)?,
+            None => NetConfig::default(),
         };
         Ok(JobSpec {
             system,
@@ -218,6 +265,13 @@ impl JobSpec {
                 .get("grain")
                 .and_then(Json::as_u64)
                 .context("job record missing integer `grain`")?,
+            payload: match v.get("payload") {
+                Some(p) => p
+                    .as_usize()
+                    .context("job record `payload` is not an integer")?,
+                None => 0,
+            },
+            net,
             mode,
             reps: num_field("reps")?,
             warmup: num_field("warmup")?,
@@ -236,6 +290,33 @@ fn config_to_json(c: &SystemConfig) -> Json {
         ("hpx_work_stealing".into(), Json::Bool(c.hpx.work_stealing)),
         ("hybrid_ranks".into(), Json::Num(c.hybrid_ranks as f64)),
     ])
+}
+
+fn net_to_json(n: &NetConfig) -> Json {
+    Json::Obj(vec![
+        ("model".into(), Json::Str(n.model.id().into())),
+        ("nic_bytes_per_ns".into(), Json::Num(n.nic_bytes_per_ns)),
+        ("nic_msgs_per_us".into(), Json::Num(n.nic_msgs_per_us)),
+    ])
+}
+
+fn net_from_json(v: &Json) -> anyhow::Result<NetConfig> {
+    let model_id = v
+        .get("model")
+        .and_then(Json::as_str)
+        .context("net record missing string `model`")?;
+    let model: NetModelKind = NetModelKind::parse(model_id)
+        .with_context(|| format!("unknown net model `{model_id}`"))?;
+    let f = |k: &str| {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("net record missing number `{k}`"))
+    };
+    Ok(NetConfig {
+        model,
+        nic_bytes_per_ns: f("nic_bytes_per_ns")?,
+        nic_msgs_per_us: f("nic_msgs_per_us")?,
+    })
 }
 
 fn config_from_json(v: &Json) -> anyhow::Result<SystemConfig> {
@@ -296,7 +377,11 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 ///
 /// The `Debug` form enumerates every field deterministically (f64 via
 /// shortest round-trip formatting), so equal params hash equal and any
-/// field change hashes different.
+/// field change hashes different. Late-addition fields (e.g.
+/// `NetworkModel::nic_loopback_latency_frac`) omit themselves from the
+/// Debug form at their default value — the same default-contributes-
+/// nothing rule as the record schema — so fingerprints computed before
+/// the field existed stay valid and cached records survive the addition.
 pub fn params_fingerprint(params: &SimParams) -> u64 {
     fnv1a64(format!("{params:?}").as_bytes())
 }
@@ -481,6 +566,8 @@ mod tests {
             tasks_per_core: 1,
             steps: 100,
             grain: 4096,
+            payload: 0,
+            net: NetConfig::default(),
             mode: ExecMode::Sim,
             reps: 1,
             warmup: 0,
@@ -499,7 +586,7 @@ mod tests {
     fn distinct_fields_change_the_id() {
         let base = Job::new(spec());
         let mut variants = Vec::new();
-        for f in 0..9 {
+        for f in 0..11 {
             let mut s = spec();
             match f {
                 0 => s.system = SystemKind::CharmLike,
@@ -510,6 +597,8 @@ mod tests {
                 5 => s.steps = 50,
                 6 => s.grain = 16,
                 7 => s.config.hpx.work_stealing = false,
+                8 => s.payload = 65536,
+                9 => s.net = NetConfig::contention(),
                 _ => s.mode = ExecMode::Native,
             }
             variants.push(Job::new(s).id());
@@ -540,6 +629,87 @@ mod tests {
         let c2 = s.canonical();
         assert!(c2.contains("charm8b=1"), "{c2}");
         assert!(c2.contains("hpxsteal=1"), "{c2}");
+    }
+
+    #[test]
+    fn default_net_and_payload_keep_the_v2_canonical_form() {
+        // Same contract, one schema later: the congestion-free wire and
+        // the inherit-from-params payload contribute nothing, so every
+        // pre-contention id survives. Non-defaults append after the
+        // config block, in a fixed order.
+        let c = spec().canonical();
+        assert!(!c.contains("net="), "{c}");
+        assert!(!c.contains("payload="), "{c}");
+        let mut s = spec();
+        s.payload = 4096;
+        s.net = NetConfig::contention();
+        s.config.charm.eight_byte_prio = true;
+        let c2 = s.canonical();
+        assert!(c2.contains(";payload=4096;net=nic;"), "{c2}");
+        let charm_at = c2.find("charm8b").unwrap();
+        let pay_at = c2.find("payload=").unwrap();
+        assert!(charm_at < pay_at, "order is part of the contract: {c2}");
+    }
+
+    #[test]
+    fn net_summary_reaches_the_listing() {
+        let mut s = spec();
+        assert_eq!(s.config_summary(), "mpi");
+        s.net = NetConfig::contention();
+        s.payload = 65536;
+        assert_eq!(s.config_summary(), "mpi+nic[25B/ns,150m/us]+pay65536");
+    }
+
+    #[test]
+    fn record_with_nondefault_net_round_trips() {
+        let mut s = spec();
+        s.net = NetConfig {
+            model: NetModelKind::Contention,
+            nic_bytes_per_ns: 12.5,
+            nic_msgs_per_us: 75.0,
+        };
+        s.payload = 65536;
+        let job = Job::new(s);
+        let result = JobResult {
+            tasks: 10,
+            wall_secs: 1.0,
+            flops_per_sec: 1.0,
+            granularity_us: 1.0,
+            peak_flops: 1.0,
+            checksum: None,
+        };
+        let text = record_to_json(&job, &result, 5);
+        assert!(text.contains("\"net\""), "{text}");
+        assert!(text.contains("\"payload\":65536"), "{text}");
+        let (job2, result2, fp) = record_from_json(&text).unwrap();
+        assert_eq!(job2, job);
+        assert_eq!(result2, result);
+        assert_eq!(fp, 5);
+        assert_eq!(record_to_json(&job2, &result2, fp), text);
+
+        // A damaged net member is corruption, not a silent default.
+        let bad = text.replace("\"model\":\"nic\"", "\"model\":\"bogus\"");
+        assert!(record_from_json(&bad).is_err(), "{bad}");
+    }
+
+    #[test]
+    fn every_net_knob_reaches_the_fingerprint() {
+        let base = Job::new(spec()).id();
+        let mut ids = vec![base];
+        for f in 0..3 {
+            let mut s = spec();
+            s.net = NetConfig::contention();
+            match f {
+                0 => {}
+                1 => s.net.nic_bytes_per_ns = 50.0,
+                _ => s.net.nic_msgs_per_us = 10.0,
+            }
+            ids.push(Job::new(s).id());
+        }
+        let mut dedup = ids.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ids.len(), "a net knob is not hashed");
     }
 
     #[test]
@@ -577,15 +747,38 @@ mod tests {
             peak_flops: 2e9,
             checksum: None,
         };
-        let v2 = record_to_json(&job, &result, 7);
-        // Strip the v2-only member to reconstruct the v1 byte stream.
-        let v1 = v2.replace("\"v\":2,", "");
+        let v3 = record_to_json(&job, &result, 7);
+        // Strip the version member to reconstruct the v1 byte stream.
+        let v1 = v3.replace("\"v\":3,", "");
         assert!(!v1.contains("\"v\""), "{v1}");
         let (job2, result2, fp) = record_from_json(&v1).expect("v1 record");
         assert_eq!(job2, job);
         assert_eq!(job2.spec.config, SystemConfig::default());
         assert_eq!(result2, result);
         assert_eq!(fp, 7);
+    }
+
+    #[test]
+    fn v2_record_parses_as_default_net_and_keeps_its_id() {
+        // A literal PR 2–4 record: `"v":2`, no `net`, no `payload`. Its
+        // id came from the v2 canonical form, which a default NetConfig
+        // and payload must reproduce exactly.
+        let job = Job::new(spec());
+        let result = JobResult {
+            tasks: 4800,
+            wall_secs: 0.5,
+            flops_per_sec: 1e9,
+            granularity_us: 10.0,
+            peak_flops: 2e9,
+            checksum: None,
+        };
+        let v2 = record_to_json(&job, &result, 9).replace("\"v\":3", "\"v\":2");
+        let (job2, result2, fp) = record_from_json(&v2).expect("v2 record");
+        assert_eq!(job2, job);
+        assert_eq!(job2.spec.net, NetConfig::default());
+        assert_eq!(job2.spec.payload, 0);
+        assert_eq!(result2, result);
+        assert_eq!(fp, 9);
     }
 
     #[test]
@@ -599,7 +792,7 @@ mod tests {
             peak_flops: 1.0,
             checksum: None,
         };
-        let text = record_to_json(&job, &result, 7).replace("\"v\":2", "\"v\":3");
+        let text = record_to_json(&job, &result, 7).replace("\"v\":3", "\"v\":4");
         assert!(record_from_json(&text).is_err());
     }
 

@@ -10,7 +10,9 @@
 
 use anyhow::Context;
 
-use crate::comm::{IntranodeTransport, NetworkModel};
+use crate::comm::{
+    IntranodeTransport, NetworkModel, NIC_LOOPBACK_LATENCY_FRAC,
+};
 use crate::sim::SimParams;
 
 use super::json::Json;
@@ -26,8 +28,12 @@ fn num(k: &str, v: f64) -> (String, Json) {
 }
 
 /// Serialize params field-by-field (f64s keep exact round-trip values).
+///
+/// Late-addition fields follow the record-schema back-compat rule: a
+/// default value contributes no member, so calibration files exported
+/// before the field existed keep parsing — and round-trip byte-stably.
 pub fn params_to_json(p: &SimParams) -> Json {
-    Json::Obj(vec![
+    let mut members = vec![
         num("ns_per_iter", p.ns_per_iter),
         num("payload_bytes", p.payload_bytes as f64),
         num("marshal_ns_per_byte", p.marshal_ns_per_byte),
@@ -69,7 +75,14 @@ pub fn params_to_json(p: &SimParams) -> Json {
                 .to_string(),
             ),
         ),
-    ])
+    ];
+    if p.network.nic_loopback_latency_frac != NIC_LOOPBACK_LATENCY_FRAC {
+        members.push(num(
+            "net_nic_loopback_latency_frac",
+            p.network.nic_loopback_latency_frac,
+        ));
+    }
+    Json::Obj(members)
 }
 
 /// Parse params back; every field is required (a partial record means a
@@ -126,6 +139,12 @@ pub fn params_from_json(v: &Json) -> anyhow::Result<SimParams> {
             intra_node_latency_ns: f("net_intra_node_latency_ns")?,
             intra_node_bytes_per_ns: f("net_intra_node_bytes_per_ns")?,
             intranode,
+            // Absent member = the named former-magic-constant default
+            // (exports predating the field stay valid).
+            nic_loopback_latency_frac: v
+                .get("net_nic_loopback_latency_frac")
+                .and_then(Json::as_f64)
+                .unwrap_or(NIC_LOOPBACK_LATENCY_FRAC),
         },
     })
 }
@@ -238,6 +257,32 @@ mod tests {
     fn partial_record_rejected() {
         let v = Json::parse("{\"ns_per_iter\":12}").unwrap();
         assert!(params_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn loopback_frac_member_follows_the_default_contributes_nothing_rule() {
+        // Default: no member — a calibration export predating the field
+        // parses (and re-renders) unchanged.
+        let p = SimParams::default();
+        let text = params_to_json(&p).render();
+        assert!(!text.contains("net_nic_loopback_latency_frac"), "{text}");
+        let back = params_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(
+            back.network.nic_loopback_latency_frac.to_bits(),
+            NIC_LOOPBACK_LATENCY_FRAC.to_bits()
+        );
+        // Non-default: round-trips bit-exactly through the member.
+        let p = SimParams {
+            network: NetworkModel {
+                nic_loopback_latency_frac: 0.125,
+                ..NetworkModel::default()
+            },
+            ..SimParams::default()
+        };
+        let text = params_to_json(&p).render();
+        assert!(text.contains("net_nic_loopback_latency_frac"), "{text}");
+        let back = params_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(params_fingerprint(&back), params_fingerprint(&p));
     }
 
     fn tmp_store(tag: &str) -> ResultStore {

@@ -21,7 +21,9 @@ use anyhow::Context;
 use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
 use crate::harness::report::Table;
 use crate::runtimes::{SystemConfig, SystemKind};
-use crate::sim::{simulate_oracle, simulate_with_stats, Machine, SimParams};
+use crate::sim::{
+    simulate_oracle, simulate_with_stats, Machine, NetConfig, SimParams,
+};
 
 use super::json::Json;
 
@@ -46,6 +48,14 @@ pub struct SimBenchCell {
     pub oracle_resident_tasks: usize,
     /// Did the two engines agree bitwise on makespan and messages?
     pub bitwise_match: bool,
+    /// Host-side throughput of the windowed engine on the same cell
+    /// under the NIC-contention wire model, simulated tasks/sec.
+    pub contention_tasks_per_sec: f64,
+    /// `contention / congestion-free` windowed-throughput ratio: what
+    /// the per-node channel bookkeeping costs the simulator itself.
+    pub contention_ratio: f64,
+    /// Did windowed and oracle also agree bitwise under contention?
+    pub contention_bitwise: bool,
 }
 
 /// A full recorder run.
@@ -67,9 +77,11 @@ impl SimBenchReport {
         (ln_sum / self.cells.len() as f64).exp()
     }
 
-    /// Every cell reproduced the oracle bitwise.
+    /// Every cell reproduced the oracle bitwise — under both wire models.
     pub fn all_bitwise(&self) -> bool {
-        self.cells.iter().all(|c| c.bitwise_match)
+        self.cells
+            .iter()
+            .all(|c| c.bitwise_match && c.contention_bitwise)
     }
 
     /// The `BENCH_sim.json` byte stream.
@@ -104,6 +116,15 @@ impl SimBenchReport {
                         Json::Num(c.oracle_resident_tasks as f64),
                     ),
                     ("bitwise_match".into(), Json::Bool(c.bitwise_match)),
+                    (
+                        "contention_tasks_per_sec".into(),
+                        Json::Num(c.contention_tasks_per_sec),
+                    ),
+                    ("contention_ratio".into(), Json::Num(c.contention_ratio)),
+                    (
+                        "contention_bitwise".into(),
+                        Json::Bool(c.contention_bitwise),
+                    ),
                 ])
             })
             .collect();
@@ -130,6 +151,8 @@ impl SimBenchReport {
             "windowed tasks/s",
             "oracle tasks/s",
             "speedup",
+            "nic tasks/s",
+            "nic ratio",
             "frontier (tasks)",
             "oracle resident",
         ]);
@@ -141,6 +164,8 @@ impl SimBenchReport {
                 format!("{:.3e}", c.windowed_tasks_per_sec),
                 format!("{:.3e}", c.oracle_tasks_per_sec),
                 format!("{:.2}x", c.speedup),
+                format!("{:.3e}", c.contention_tasks_per_sec),
+                format!("{:.2}x", c.contention_ratio),
                 c.peak_frontier_tasks.to_string(),
                 c.oracle_resident_tasks.to_string(),
             ]);
@@ -163,11 +188,16 @@ fn timed<F: FnOnce() -> (u64, usize)>(f: F) -> (u64, usize, f64) {
 }
 
 /// Run the recorder matrix: every event-driven system on an 8-node and a
-/// 64-node simulated Rostam machine, stencil pattern, fixed grain.
+/// 64-node simulated Rostam machine, stencil pattern, fixed grain. Each
+/// cell is timed under the congestion-free wire *and* the NIC-contention
+/// model (both parity-checked against the oracle), so `BENCH_sim.json`
+/// tracks what the contention bookkeeping costs the simulator itself.
 pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
     const GRAIN: u64 = 1024;
     let params = SimParams::default();
     let cfg = SystemConfig::default();
+    let wire = NetConfig::default();
+    let nic = NetConfig::contention();
     let mut cells = Vec::new();
     for &nodes in &[8usize, 64] {
         for system in [
@@ -187,16 +217,30 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
 
             let mut stats = None;
             let (w_bits, w_msgs, w_secs) = timed(|| {
-                let (m, s) =
-                    simulate_with_stats(&graph, system, machine, &params, &cfg);
+                let (m, s) = simulate_with_stats(
+                    &graph, system, machine, &params, &cfg, &wire,
+                );
                 stats = Some(s);
                 (m.wall_secs.to_bits(), m.messages)
             });
             let stats = stats.expect("windowed run always reports stats");
             let (o_bits, o_msgs, o_secs) = timed(|| {
-                let m = simulate_oracle(&graph, system, machine, &params, &cfg);
+                let m = simulate_oracle(
+                    &graph, system, machine, &params, &cfg, &wire,
+                );
                 (m.wall_secs.to_bits(), m.messages)
             });
+
+            // The same cell under NIC contention, windowed and oracle.
+            let (c_bits, c_msgs, c_secs) = timed(|| {
+                let (m, _) = simulate_with_stats(
+                    &graph, system, machine, &params, &cfg, &nic,
+                );
+                (m.wall_secs.to_bits(), m.messages)
+            });
+            let co = simulate_oracle(
+                &graph, system, machine, &params, &cfg, &nic,
+            );
 
             cells.push(SimBenchCell {
                 system,
@@ -209,6 +253,10 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
                 peak_frontier_tasks: stats.peak_frontier_tasks,
                 oracle_resident_tasks: n,
                 bitwise_match: w_bits == o_bits && w_msgs == o_msgs,
+                contention_tasks_per_sec: n as f64 / c_secs,
+                contention_ratio: w_secs / c_secs,
+                contention_bitwise: c_bits == co.wall_secs.to_bits()
+                    && c_msgs == co.messages,
             });
         }
     }
@@ -243,6 +291,9 @@ mod tests {
             assert!(c.oracle_tasks_per_sec > 0.0);
             assert!(c.speedup > 0.0);
             assert!(c.peak_frontier_tasks <= c.oracle_resident_tasks);
+            assert!(c.contention_tasks_per_sec > 0.0);
+            assert!(c.contention_ratio > 0.0);
+            assert!(c.contention_bitwise, "{c:#?}");
         }
         assert!(r.geomean_speedup() > 0.0);
     }
@@ -261,7 +312,10 @@ mod tests {
             Some(6)
         );
         assert!(matches!(v.get("all_bitwise"), Some(Json::Bool(true))));
+        assert!(text.contains("contention_ratio"), "{text}");
+        assert!(text.contains("contention_tasks_per_sec"), "{text}");
         let rendered = r.render();
         assert!(rendered.contains("geomean speedup"), "{rendered}");
+        assert!(rendered.contains("nic ratio"), "{rendered}");
     }
 }

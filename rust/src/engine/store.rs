@@ -189,6 +189,8 @@ mod tests {
             tasks_per_core: 1,
             steps: 10,
             grain,
+            payload: 0,
+            net: crate::sim::NetConfig::default(),
             mode: ExecMode::Sim,
             reps: 1,
             warmup: 0,

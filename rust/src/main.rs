@@ -12,8 +12,9 @@
 //! repro peak                                               # peak FLOP/s
 //! repro dispatch                                           # PJRT overhead
 //!
-//! repro jobs list  [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns] [--shard k/N]
+//! repro jobs list  [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns|fig5_stress|fig2_huge] [--shard k/N]
 //! repro jobs run   [--campaign ...] [--native] [--results DIR] [--shard k/N] [--threads N]
+//!                  [--payloads 64,65536] [--net wire|nic]
 //! repro jobs table [--campaign ...] [--native] [--results DIR]
 //! repro jobs dat   [--campaign ...] [--native] [--results DIR]
 //! repro jobs calibrate [--results DIR] [--export FILE | --import FILE]
@@ -28,6 +29,10 @@
 //! routes a campaign through the real-runtime `NativeBackend` instead of
 //! the simulator (native cells hash — and therefore cache — separately
 //! from their sim twins); `--cores N` sizes the cells to this host.
+//! `--payloads A,B` overrides the wire-payload axis (the `fig5_stress`
+//! latency-hiding sweep) and `--net wire|nic` pins every cell of a
+//! campaign onto one wire model — both are hashed job dimensions, so
+//! overridden cells cache separately from the defaults.
 //! `jobs calibrate` manages the store's persisted `_calibration.json`:
 //! `--export` publishes it for other hosts, `--import` installs a file a
 //! peer exported, so multi-host campaigns share one calibration without
@@ -70,7 +75,7 @@ use taskbench_amt::sim::{calibrate, SimParams};
 fn usage() -> ! {
     eprintln!(
         "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
-         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns] [--native] [--key value ...]\n\
+         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns|fig5_stress|fig2_huge] [--native] [--payloads A,B] [--net wire|nic] [--key value ...]\n\
          \x20      repro jobs calibrate [--results DIR] [--export FILE | --import FILE]\n\
          \x20      repro jobs snapshot [--campaign ...] [--baseline DIR]\n\
          \x20      repro jobs diff [--campaign ...] [--baseline DIR] [--tol X] [--strict]\n\
@@ -272,7 +277,8 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
     let Some(kind) = CampaignKind::parse(kind_id) else {
         eprintln!(
             "unknown campaign `{kind_id}` \
-             (want fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns)"
+             (want fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|\
+             patterns|fig5_stress|fig2_huge)"
         );
         std::process::exit(2);
     };
@@ -308,6 +314,59 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
         gs.dedup();
         campaign.grains = gs;
     }
+    if let Some(v) = m.get("payloads") {
+        // Wire-payload ladder override (the fig5_stress axis). Same
+        // contract as --grains: a malformed token is a hard error, not a
+        // silent fallback to a very different campaign. Order is kept as
+        // given (it is a rendered axis, not a sweep-descending ladder);
+        // duplicates are dropped.
+        let mut ps: Vec<usize> = Vec::new();
+        for tok in v.split(',') {
+            match tok.trim().parse() {
+                Ok(p) => {
+                    if !ps.contains(&p) {
+                        ps.push(p);
+                    }
+                }
+                Err(_) => {
+                    eprintln!(
+                        "bad --payloads entry `{tok}` (want comma-separated \
+                         byte counts, e.g. --payloads 64,65536; 0 = the \
+                         calibrated default payload)"
+                    );
+                    std::process::exit(2);
+                }
+            }
+        }
+        // Only fig5_stress renders a payload *axis*; every other
+        // campaign's tables/dat address a single payload, so a
+        // multi-valued override there would execute (and cache) cells no
+        // renderer ever shows — reject it instead of running invisible
+        // work.
+        if ps.len() > 1 && kind != CampaignKind::Fig5Stress {
+            eprintln!(
+                "--payloads with multiple values is only supported for \
+                 --campaign fig5_stress (campaign `{}` renders one \
+                 payload; pass a single value)",
+                kind.id()
+            );
+            std::process::exit(2);
+        }
+        campaign.payloads = ps;
+    }
+    if let Some(v) = m.get("net") {
+        // Pin the whole campaign onto one wire model. Unknown names are
+        // hard errors for the same reason as malformed --grains.
+        let Some(model) = taskbench_amt::sim::NetModelKind::parse(v) else {
+            eprintln!("bad --net `{v}` (want wire|nic)");
+            std::process::exit(2);
+        };
+        let net = taskbench_amt::sim::NetConfig {
+            model,
+            ..taskbench_amt::sim::NetConfig::default()
+        };
+        campaign.nets = vec![(v.clone(), net)];
+    }
     if get(m, "native", false) {
         // Same cells, measured by the real runtimes on this host. The
         // mode is hashed, so native records never collide with sim ones.
@@ -316,6 +375,17 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
             eprintln!(
                 "--native campaigns are single-node; pass --nodes 1 \
                  (and --cores N to size cells to this host)"
+            );
+            std::process::exit(2);
+        }
+        if campaign.nets.iter().any(|(_, n)| !n.is_default())
+            || campaign.payloads.iter().any(|&p| p != 0)
+        {
+            eprintln!(
+                "--native campaigns measure the real wire; the network \
+                 model and payload override are simulator dimensions \
+                 (drop --net/--payloads, or the fig5_stress/fig2_huge \
+                 campaigns, from a --native run)"
             );
             std::process::exit(2);
         }

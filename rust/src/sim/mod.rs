@@ -29,13 +29,23 @@
 //! frozen pre-refactor list scheduler it is bitwise-diffed against, and
 //! [`simulate_with_stats`] exposes the frontier counters `jobs
 //! bench-sim` records.
+//!
+//! The point-to-point wire is a pluggable [`NetModel`] ([`net`]): the
+//! congestion-free default reproduces the historical latency+bandwidth
+//! arithmetic bitwise, while [`NetConfig::contention`] serializes
+//! inter-node messages through per-node NIC injection/ejection channels
+//! — the dimension the latency-hiding campaigns (`fig5_stress`,
+//! `fig2_huge`) sweep. Both engines drive the same wire state, so
+//! parity holds under either model.
 
 mod des;
 mod machine;
+mod net;
 mod oracle;
 mod params;
 
 pub use des::{simulate, simulate_with_stats, SimStats};
 pub use machine::Machine;
+pub use net::{CongestionFree, NetConfig, NetModel, NetModelKind, NicContention};
 pub use oracle::simulate_oracle;
 pub use params::{calibrate, SimParams};

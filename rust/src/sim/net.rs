@@ -1,0 +1,410 @@
+//! The pluggable point-to-point wire model: how a message's *arrival
+//! time* is computed from its congestion-free wire time.
+//!
+//! The paper's third research question — each system's ability to hide
+//! communication latency — needs a wire that can push back: with the
+//! historical latency + bandwidth cost every edge was priced
+//! independently, so overlap always succeeded and communication-bound
+//! cells were optimistically wrong exactly where Charm++/HPX latency
+//! hiding should (or should fail to) pay off. [`NetModel`] makes the
+//! wire a pluggable dimension with two implementations:
+//!
+//! * [`CongestionFree`] — the historical model, **bitwise-preserving**:
+//!   `arrival = send_done + wire`, stateless. The default; every golden
+//!   baseline and cached record was produced under it and stays valid.
+//! * [`NicContention`] — per-node NIC injection/ejection channels with
+//!   finite bandwidth and a message-rate cap. Every inter-node message
+//!   serializes through its source node's injection channel and its
+//!   destination node's ejection channel; the channels are rolling
+//!   per-node busy-times that advance with the simulation clock (the
+//!   same discipline as the per-core timelines in the windowed
+//!   `Frontier`), so when many cores inject at once, later messages
+//!   queue — and a runtime's overdecomposition either hides that
+//!   queueing delay or exposes it in the makespan.
+//!
+//! Both engines — the streaming windowed core (`sim::des`) and the
+//! frozen oracle list scheduler (`sim::oracle`) — drive the *same*
+//! [`WireState`] at the same points of their event loops, so
+//! windowed-vs-oracle parity stays bitwise under either model
+//! (`tests/sim_parity.rs` propchecks both).
+//!
+//! Which model prices a cell is a *job* dimension, not a sim parameter:
+//! [`NetConfig`] is a hashed field of `engine::job::JobSpec` following
+//! the schema-v2 back-compat rule (a default config contributes nothing,
+//! so pre-contention record ids stay valid). The fork-join analytic
+//! paths (OpenMP-like, hybrid) are step-synchronous with no task-level
+//! asynchrony — there is no latency hiding to model — and always price
+//! their wire congestion-free.
+
+use super::machine::Machine;
+
+/// Which [`NetModel`] prices a cell's messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetModelKind {
+    /// Independent latency + bandwidth per edge (the historical wire).
+    CongestionFree,
+    /// Per-node NIC injection/ejection serialization ([`NicContention`]).
+    Contention,
+}
+
+impl NetModelKind {
+    pub fn id(&self) -> &'static str {
+        match self {
+            NetModelKind::CongestionFree => "wire",
+            NetModelKind::Contention => "nic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<NetModelKind> {
+        match s {
+            "wire" => Some(NetModelKind::CongestionFree),
+            "nic" => Some(NetModelKind::Contention),
+            _ => None,
+        }
+    }
+}
+
+/// Job-level network-model selection + parameters. Hashed into the job
+/// id (two models of the same cell are two distinct records); the
+/// default — the congestion-free wire — contributes nothing to the
+/// canonical form, so every pre-contention record keeps its id.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetConfig {
+    pub model: NetModelKind,
+    /// Per-node NIC injection/ejection bandwidth, bytes/ns. Each message
+    /// occupies both channels for `payload / nic_bytes_per_ns` ns (or
+    /// the message-rate floor, whichever is larger).
+    pub nic_bytes_per_ns: f64,
+    /// Per-NIC message-rate cap, messages per microsecond: no channel
+    /// accepts messages closer together than `1000 / nic_msgs_per_us` ns
+    /// — the small-message injection-rate limit real NICs have.
+    pub nic_msgs_per_us: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            model: NetModelKind::CongestionFree,
+            // EDR IB NIC: injection keeps up with the 25 B/ns link;
+            // ~150 M msg/s small-message rate.
+            nic_bytes_per_ns: 25.0,
+            nic_msgs_per_us: 150.0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The NIC-contention model at the default EDR-IB-like parameters.
+    pub fn contention() -> NetConfig {
+        NetConfig { model: NetModelKind::Contention, ..NetConfig::default() }
+    }
+
+    /// Does this config contribute nothing to a job's canonical form?
+    pub fn is_default(&self) -> bool {
+        *self == NetConfig::default()
+    }
+
+    /// Compact listing marker, e.g. `nic[25B/ns,150m/us]` (`jobs list`).
+    pub fn summary(&self) -> String {
+        format!(
+            "{}[{}B/ns,{}m/us]",
+            self.model.id(),
+            self.nic_bytes_per_ns,
+            self.nic_msgs_per_us
+        )
+    }
+
+    /// Per-message channel occupancy for `bytes` on the wire, ns.
+    pub fn nic_ser_ns(&self, bytes: usize) -> f64 {
+        (bytes as f64 / self.nic_bytes_per_ns).max(1_000.0 / self.nic_msgs_per_us)
+    }
+}
+
+/// One way of turning (send time, congestion-free wire time) into an
+/// arrival time. Implementations may carry state (channel busy-times);
+/// determinism is guaranteed by the engines calling [`NetModel::arrival_ns`]
+/// exactly once per message, in event order.
+pub trait NetModel {
+    fn name(&self) -> &'static str;
+
+    /// Arrival time at the consumer of one message leaving core `cp` for
+    /// core `cc` at `send_done`, whose congestion-free wire time is
+    /// `wire` ns.
+    fn arrival_ns(
+        &mut self,
+        machine: Machine,
+        cp: usize,
+        cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64;
+}
+
+/// The historical wire: every edge priced independently.
+///
+/// `arrival = send_done + wire`, literally — the identical f64 sum the
+/// pre-refactor engines computed, so default-model runs are bitwise
+/// identical to pre-refactor output.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CongestionFree;
+
+impl NetModel for CongestionFree {
+    fn name(&self) -> &'static str {
+        "wire"
+    }
+
+    #[inline]
+    fn arrival_ns(
+        &mut self,
+        _machine: Machine,
+        _cp: usize,
+        _cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64 {
+        send_done + wire
+    }
+}
+
+/// Finite per-node NIC channels: inter-node messages serialize through
+/// the sender's injection channel and the receiver's ejection channel.
+///
+/// Channel state is one rolling busy-time per node per direction —
+/// `O(nodes)`, step-independent, riding the windowed frontier loop the
+/// same way the per-core timelines do. Saturation ordering is
+/// deterministic: busy-times only move forward and the engines present
+/// messages in event order, so two messages contending for a channel
+/// always resolve the same way (first presented departs first).
+#[derive(Debug, Clone)]
+pub struct NicContention {
+    /// Injection-channel busy-time per source node, ns.
+    inj: Vec<f64>,
+    /// Ejection-channel busy-time per destination node, ns.
+    ej: Vec<f64>,
+    /// Per-message channel occupancy, ns (bandwidth or rate-cap bound).
+    ser_ns: f64,
+}
+
+impl NicContention {
+    pub fn new(cfg: &NetConfig, nodes: usize, payload_bytes: usize) -> Self {
+        NicContention {
+            inj: vec![0.0; nodes],
+            ej: vec![0.0; nodes],
+            ser_ns: cfg.nic_ser_ns(payload_bytes),
+        }
+    }
+
+    /// Per-message channel occupancy this model was built with, ns.
+    pub fn ser_ns(&self) -> f64 {
+        self.ser_ns
+    }
+}
+
+impl NetModel for NicContention {
+    fn name(&self) -> &'static str {
+        "nic"
+    }
+
+    fn arrival_ns(
+        &mut self,
+        machine: Machine,
+        cp: usize,
+        cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64 {
+        if cp == cc || machine.same_node(cp, cc) {
+            // Intra-node traffic never crosses the NIC fabric channels
+            // (the Charm++ NIC-loopback *CPU* detour is an edge cost,
+            // not fabric occupancy).
+            return send_done + wire;
+        }
+        let src = machine.node_of(cp);
+        let dst = machine.node_of(cc);
+        let depart = send_done.max(self.inj[src]) + self.ser_ns;
+        self.inj[src] = depart;
+        let at_dst = depart + wire;
+        let arrival = at_dst.max(self.ej[dst]) + self.ser_ns;
+        self.ej[dst] = arrival;
+        arrival
+    }
+}
+
+/// The per-run wire-model state both simulation engines drive — built
+/// from the job's [`NetConfig`], shared verbatim between the windowed
+/// core and the oracle so the two can never diverge.
+///
+/// An enum rather than a `Box<dyn NetModel>` on the hot path: the
+/// congestion-free arm must stay a bare `send_done + wire` (the bitwise
+/// contract), and the match makes that guarantee inspectable.
+pub(super) enum WireState {
+    Free(CongestionFree),
+    Contended {
+        nic: NicContention,
+        /// Per-destination-core message dedup for the current send phase:
+        /// consumers on one core share one message, hence one NIC
+        /// transit. `stamp[cc] == epoch` → `cached[cc]` is this task's
+        /// arrival for core `cc`.
+        stamp: Vec<u64>,
+        cached: Vec<f64>,
+        epoch: u64,
+    },
+}
+
+impl WireState {
+    pub(super) fn new(
+        net: &NetConfig,
+        machine: Machine,
+        payload_bytes: usize,
+    ) -> WireState {
+        match net.model {
+            NetModelKind::CongestionFree => WireState::Free(CongestionFree),
+            NetModelKind::Contention => WireState::Contended {
+                nic: NicContention::new(net, machine.nodes, payload_bytes),
+                stamp: vec![0; machine.total_cores()],
+                cached: vec![0.0; machine.total_cores()],
+                epoch: 0,
+            },
+        }
+    }
+
+    /// Start one task's send phase (resets the per-destination dedup).
+    #[inline]
+    pub(super) fn begin_send(&mut self) {
+        if let WireState::Contended { epoch, .. } = self {
+            *epoch += 1;
+        }
+    }
+
+    /// Arrival time of the message from `cp` to `cc` sent at `send_done`
+    /// with congestion-free wire time `wire`. At most one NIC transit per
+    /// destination core per send phase — repeated consumers on one core
+    /// reuse the first arrival.
+    #[inline]
+    pub(super) fn arrival(
+        &mut self,
+        machine: Machine,
+        cp: usize,
+        cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64 {
+        match self {
+            WireState::Free(free) => {
+                free.arrival_ns(machine, cp, cc, send_done, wire)
+            }
+            WireState::Contended { nic, stamp, cached, epoch } => {
+                if stamp[cc] == *epoch {
+                    return cached[cc];
+                }
+                stamp[cc] = *epoch;
+                let a = nic.arrival_ns(machine, cp, cc, send_done, wire);
+                cached[cc] = a;
+                a
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_config_default_is_default_and_ids_round_trip() {
+        assert!(NetConfig::default().is_default());
+        assert!(!NetConfig::contention().is_default());
+        for k in [NetModelKind::CongestionFree, NetModelKind::Contention] {
+            assert_eq!(NetModelKind::parse(k.id()), Some(k));
+        }
+        assert_eq!(NetModelKind::parse("bogus"), None);
+        assert_eq!(NetConfig::contention().summary(), "nic[25B/ns,150m/us]");
+    }
+
+    #[test]
+    fn congestion_free_is_the_bare_sum() {
+        let m = Machine::new(2, 2);
+        let mut free = CongestionFree;
+        let a = free.arrival_ns(m, 0, 3, 123.25, 1000.5);
+        assert_eq!(a.to_bits(), (123.25f64 + 1000.5).to_bits());
+    }
+
+    #[test]
+    fn zero_byte_payload_pays_the_message_rate_floor() {
+        // Channel occupancy never collapses to zero: the message-rate cap
+        // floors it, so even empty messages serialize.
+        let cfg = NetConfig::contention();
+        let floor = 1_000.0 / cfg.nic_msgs_per_us;
+        assert_eq!(cfg.nic_ser_ns(0).to_bits(), floor.to_bits());
+        // Large payloads are bandwidth-bound instead.
+        assert_eq!(
+            cfg.nic_ser_ns(65536).to_bits(),
+            (65536.0 / cfg.nic_bytes_per_ns).to_bits()
+        );
+        let m = Machine::new(2, 1);
+        let mut nic = NicContention::new(&cfg, 2, 0);
+        let a = nic.arrival_ns(m, 0, 1, 0.0, 1_000.0);
+        assert!(a >= 1_000.0 + 2.0 * floor, "{a}");
+    }
+
+    #[test]
+    fn intra_node_messages_bypass_the_nic() {
+        let cfg = NetConfig::contention();
+        let m = Machine::new(2, 4);
+        let mut nic = NicContention::new(&cfg, 2, 64);
+        // Same node (cores 0 and 3): bare sum, no channel advance.
+        let a = nic.arrival_ns(m, 0, 3, 10.0, 150.0);
+        assert_eq!(a.to_bits(), 160.0f64.to_bits());
+        // The channels are untouched: a later inter-node message sees
+        // idle channels.
+        let b = nic.arrival_ns(m, 0, 4, 0.0, 1_000.0);
+        assert_eq!(
+            b.to_bits(),
+            (nic.ser_ns() + 1_000.0 + nic.ser_ns()).to_bits()
+        );
+    }
+
+    #[test]
+    fn saturated_channel_orders_messages_deterministically() {
+        // Many messages injected at the same instant from one node:
+        // arrivals are strictly increasing in presentation order (the
+        // channel serializes), and a re-run reproduces them bitwise.
+        let cfg = NetConfig::contention();
+        let m = Machine::new(2, 8);
+        let run = || {
+            let mut nic = NicContention::new(&cfg, 2, 4096);
+            (0..8)
+                .map(|c| nic.arrival_ns(m, c, 8 + c, 0.0, 1_000.0))
+                .collect::<Vec<f64>>()
+        };
+        let a = run();
+        for w in a.windows(2) {
+            assert!(w[1] > w[0], "saturated arrivals must serialize: {a:?}");
+        }
+        let b = run();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Each extra message delays the tail by at least one occupancy on
+        // each channel pair.
+        let ser = cfg.nic_ser_ns(4096);
+        assert!(a[7] >= 1_000.0 + 8.0 * ser, "{a:?}");
+    }
+
+    #[test]
+    fn wire_state_dedups_per_destination_core_within_a_send() {
+        let cfg = NetConfig::contention();
+        let m = Machine::new(2, 2);
+        let mut w = WireState::new(&cfg, m, 64);
+        w.begin_send();
+        let first = w.arrival(m, 0, 2, 5.0, 1_000.0);
+        // Second consumer on the same destination core, same send phase:
+        // one message, one transit, same arrival.
+        let again = w.arrival(m, 0, 2, 5.0, 1_000.0);
+        assert_eq!(first.to_bits(), again.to_bits());
+        // A new send phase is a new message and queues behind the first.
+        w.begin_send();
+        let second = w.arrival(m, 0, 2, 5.0, 1_000.0);
+        assert!(second > first);
+    }
+}

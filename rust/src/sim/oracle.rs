@@ -5,12 +5,19 @@
 //! `O(width × steps)` per-point state (`pending`, `ready_at`,
 //! `exec_core`) and drives one global `BinaryHeap` over every task in the
 //! graph. The windowed core must be **bitwise identical** to it on every
-//! (system × pattern × config × machine) cell — that contract is what
-//! lets golden baselines and cached `results/` records survive the
-//! refactor without a `BASELINE_VERSION` bump, and it is enforced by the
-//! `tests/sim_parity.rs` propcheck suite and recorded by `jobs
-//! bench-sim`. Nothing routes production cells through this module; do
-//! not "fix" or optimize it — its value is being frozen.
+//! (system × pattern × config × machine × wire-model) cell — that
+//! contract is what lets golden baselines and cached `results/` records
+//! survive the refactor without a `BASELINE_VERSION` bump, and it is
+//! enforced by the `tests/sim_parity.rs` propcheck suite and recorded by
+//! `jobs bench-sim`. Nothing routes production cells through this
+//! module; do not "fix" or optimize it — its value is being frozen.
+//!
+//! One deliberate exception to "frozen": the pluggable wire model
+//! ([`super::net`]) is *mirrored* here — both engines drive the shared
+//! [`WireState`] at the same event-loop points, so the congestion-free
+//! default still reproduces the original arithmetic bitwise (the state
+//! degenerates to a bare `send_done + wire`) and the NIC-contention
+//! model stays oracle-checkable too.
 //!
 //! The fork-join paths (OpenMP-like, hybrid) were step-synchronous and
 //! `O(width)` before the refactor and are unchanged, so
@@ -27,6 +34,7 @@ use super::des::{
     simulate_hybrid, simulate_openmp,
 };
 use super::machine::Machine;
+use super::net::{NetConfig, WireState};
 use super::params::SimParams;
 
 /// [`super::des::simulate`] as computed by the pre-refactor list
@@ -38,22 +46,25 @@ pub fn simulate_oracle(
     machine: Machine,
     params: &SimParams,
     cfg: &SystemConfig,
+    net: &NetConfig,
 ) -> Measurement {
     let (makespan_ns, messages) = match system {
         SystemKind::OpenMpLike => simulate_openmp(graph, machine, params),
         SystemKind::Hybrid => simulate_hybrid(graph, machine, params, cfg),
-        _ => oracle_event_driven(graph, system, machine, params, cfg),
+        _ => oracle_event_driven(graph, system, machine, params, cfg, net),
     };
     measurement_of(graph, system, makespan_ns, messages)
 }
 
-/// The original whole-graph list scheduler (frozen).
+/// The original whole-graph list scheduler (frozen; the wire model is
+/// the one mirrored addition — see the module docs).
 fn oracle_event_driven(
     graph: &TaskGraph,
     system: SystemKind,
     machine: Machine,
     params: &SimParams,
     cfg: &SystemConfig,
+    net: &NetConfig,
 ) -> (f64, usize) {
     let charm = &cfg.charm;
     let width = graph.width();
@@ -79,6 +90,10 @@ fn oracle_event_driven(
     let mut ready_at = vec![0.0f64; n];
     let mut exec_core = vec![u32::MAX; n];
     let mut core_free = vec![0.0f64; cores];
+    // Shared wire-model state — identical construction and call points
+    // as the windowed core, so the two engines stay bitwise twins under
+    // both the congestion-free and the NIC-contention model.
+    let mut wire_state = WireState::new(net, machine, params.payload_bytes);
     let mut messages = 0usize;
     let mut makespan = 0.0f64;
     let mut qmul = queue_multiplier(system, params, width as f64 / cores as f64);
@@ -149,6 +164,7 @@ fn oracle_event_driven(
                 }
             }
             let send_done = end;
+            wire_state.begin_send();
             for &c in rdeps {
                 let cc = match system {
                     SystemKind::HpxLocal if steal => core,
@@ -157,7 +173,8 @@ fn oracle_event_driven(
                 };
                 let (_, wire, _) =
                     edge_cost(system, machine, params, charm, core, cc);
-                let arrival = send_done + wire;
+                let arrival =
+                    wire_state.arrival(machine, core, cc, send_done, wire);
                 let cons = PointCoord::new(c as usize, t + 1).index(width);
                 ready_at[cons] = ready_at[cons].max(arrival);
                 pending[cons] -= 1;

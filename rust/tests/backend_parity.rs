@@ -38,6 +38,8 @@ fn small_spec(mode: ExecMode) -> JobSpec {
         tasks_per_core: 2,
         steps: 6,
         grain: 16,
+        payload: 0,
+        net: taskbench_amt::sim::NetConfig::default(),
         mode,
         reps: 1,
         warmup: 0,

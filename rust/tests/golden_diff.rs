@@ -21,7 +21,7 @@ use taskbench_amt::engine::{
     ReplayBackend, ResultStore,
 };
 use taskbench_amt::runtimes::{SystemConfig, SystemKind};
-use taskbench_amt::sim::SimParams;
+use taskbench_amt::sim::{NetConfig, SimParams};
 
 fn tmpdir(tag: &str) -> PathBuf {
     let p = std::env::temp_dir()
@@ -141,6 +141,8 @@ fn checksum_mismatch_is_a_hard_failure_end_to_end() {
         tasks_per_core: 1,
         steps: 4,
         grain: 8,
+        payload: 0,
+        net: NetConfig::default(),
         mode: ExecMode::Validate,
         reps: 1,
         warmup: 0,

@@ -1,7 +1,7 @@
 //! Windowed-vs-oracle parity suite: the streaming frontier engine in
 //! `sim::des` must be **bitwise identical** to the frozen pre-refactor
 //! list scheduler (`sim::simulate_oracle`) on every
-//! (system × pattern × config × machine × kernel) cell.
+//! (system × pattern × config × machine × kernel × wire-model) cell.
 //!
 //! This is the contract that lets golden baselines (`jobs diff`) and
 //! every cached `results/` record survive the windowed-core refactor
@@ -14,7 +14,8 @@ use taskbench_amt::core::{
 };
 use taskbench_amt::runtimes::{SystemConfig, SystemKind};
 use taskbench_amt::sim::{
-    simulate, simulate_oracle, simulate_with_stats, Machine, SimParams,
+    simulate, simulate_oracle, simulate_with_stats, Machine, NetConfig,
+    NetModelKind, SimParams,
 };
 use taskbench_amt::util::propcheck;
 
@@ -25,6 +26,22 @@ fn configs() -> Vec<SystemConfig> {
     out.extend(SystemConfig::hpx_ablation().into_iter().map(|(_, c)| c));
     out.push(SystemConfig { hybrid_ranks: 3, ..Default::default() });
     out
+}
+
+/// Every wire-model shape a job can select: the id-neutral default,
+/// the stock contention model, and a deliberately starved NIC (tiny
+/// bandwidth + rate cap) where queueing dominates — the regime most
+/// likely to surface an engine-order divergence.
+fn nets() -> Vec<NetConfig> {
+    vec![
+        NetConfig::default(),
+        NetConfig::contention(),
+        NetConfig {
+            model: NetModelKind::Contention,
+            nic_bytes_per_ns: 0.05,
+            nic_msgs_per_us: 2.0,
+        },
+    ]
 }
 
 fn kernels() -> Vec<KernelConfig> {
@@ -60,10 +77,11 @@ fn parity(
     system: SystemKind,
     m: Machine,
     cfg: &SystemConfig,
+    net: &NetConfig,
 ) -> Result<(), String> {
     let p = SimParams::default();
-    let w = simulate(g, system, m, &p, cfg);
-    let o = simulate_oracle(g, system, m, &p, cfg);
+    let w = simulate(g, system, m, &p, cfg, net);
+    let o = simulate_oracle(g, system, m, &p, cfg, net);
     if w.wall_secs.to_bits() != o.wall_secs.to_bits() {
         return Err(format!(
             "{system:?}: makespan {} (windowed) != {} (oracle)",
@@ -90,9 +108,11 @@ fn parity_matrix_every_system_every_pattern() {
     let m = Machine::new(2, 3);
     for dep in DependencePattern::all() {
         let g = graph(dep, 10, 7, KernelConfig::compute_bound(8), 5);
-        for system in SystemKind::all() {
-            parity(&g, system, m, &SystemConfig::default())
-                .unwrap_or_else(|e| panic!("{dep:?}: {e}"));
+        for net in nets() {
+            for system in SystemKind::all() {
+                parity(&g, system, m, &SystemConfig::default(), &net)
+                    .unwrap_or_else(|e| panic!("{dep:?} {:?}: {e}", net.model));
+            }
         }
     }
 }
@@ -108,9 +128,13 @@ fn parity_matrix_every_config_every_system() {
     );
     let m = Machine::new(2, 4);
     for cfg in configs() {
-        for system in SystemKind::all() {
-            parity(&g, system, m, &cfg)
-                .unwrap_or_else(|e| panic!("{cfg:?}: {e}"));
+        // Both the default wire (the golden-baseline bitwise contract)
+        // and the contention model, exhaustively per config.
+        for net in [NetConfig::default(), NetConfig::contention()] {
+            for system in SystemKind::all() {
+                parity(&g, system, m, &cfg, &net)
+                    .unwrap_or_else(|e| panic!("{cfg:?} {:?}: {e}", net.model));
+            }
         }
     }
 }
@@ -121,6 +145,7 @@ fn property_windowed_core_is_bitwise_identical_to_oracle() {
     let systems = SystemKind::all();
     let cfgs = configs();
     let kerns = kernels();
+    let wire_models = nets();
     propcheck::check(
         "windowed DES bitwise-equals the oracle list scheduler",
         40,
@@ -134,13 +159,16 @@ fn property_windowed_core_is_bitwise_identical_to_oracle() {
                 systems[rng.gen_range(systems.len())],
                 cfgs[rng.gen_range(cfgs.len())],
                 kerns[rng.gen_range(kerns.len())],
+                wire_models[rng.gen_range(wire_models.len())],
                 rng.next_u64(),                        // graph seed
             )
         },
-        |&(dep, width, steps, nodes, cores, system, cfg, kernel, seed)| {
+        |&(dep, width, steps, nodes, cores, system, cfg, kernel, net, seed)| {
             let g = graph(dep, width, steps, kernel, seed);
-            parity(&g, system, Machine::new(nodes, cores), &cfg)
-                .map_err(|e| format!("{dep:?} {width}x{steps}: {e}"))
+            parity(&g, system, Machine::new(nodes, cores), &cfg, &net)
+                .map_err(|e| {
+                    format!("{dep:?} {width}x{steps} {:?}: {e}", net.model)
+                })
         },
     );
 }
@@ -157,14 +185,16 @@ fn parity_holds_at_large_node_counts() {
         KernelConfig::compute_bound(32),
         9,
     );
-    for system in [
-        SystemKind::MpiLike,
-        SystemKind::CharmLike,
-        SystemKind::HpxDistributed,
-        SystemKind::Hybrid,
-    ] {
-        parity(&g, system, m, &SystemConfig::default())
-            .unwrap_or_else(|e| panic!("{e}"));
+    for net in nets() {
+        for system in [
+            SystemKind::MpiLike,
+            SystemKind::CharmLike,
+            SystemKind::HpxDistributed,
+            SystemKind::Hybrid,
+        ] {
+            parity(&g, system, m, &SystemConfig::default(), &net)
+                .unwrap_or_else(|e| panic!("{:?}: {e}", net.model));
+        }
     }
 }
 
@@ -213,6 +243,7 @@ fn frontier_stays_bounded_while_steps_grow() {
                 m,
                 &p,
                 &SystemConfig::default(),
+                &NetConfig::default(),
             );
             let (_, s_long) = simulate_with_stats(
                 &long,
@@ -220,6 +251,7 @@ fn frontier_stays_bounded_while_steps_grow() {
                 m,
                 &p,
                 &SystemConfig::default(),
+                &NetConfig::default(),
             );
             if source_driven(dep) {
                 assert!(
