@@ -104,7 +104,7 @@ pub struct RunSummary {
 /// `threads == 0` means one worker per available core.
 pub fn run_jobs(
     jobs: &[Job],
-    store: Option<&ResultStore>,
+    store: Option<&dyn ResultStore>,
     shard: Shard,
     threads: usize,
     params: &SimParams,
@@ -271,6 +271,10 @@ pub fn classify_cell(
         tol.granularity_us,
     );
     check("peak_flops", baseline.peak_flops, live.peak_flops, tol.peak_flops);
+    // `samples` (schema v4) is deliberately not compared: the per-rep
+    // vector is raw timing noise, and its mean is already gated above as
+    // `wall_secs` under the campaign's tolerance. Comparing the raw
+    // draws would make every native diff a guaranteed failure.
     if drifts.is_empty() {
         CellDiff::Match
     } else {
@@ -394,7 +398,7 @@ impl DiffReport {
 /// The baseline is never written to.
 pub fn diff_jobs(
     jobs: &[Job],
-    store: Option<&ResultStore>,
+    store: Option<&dyn ResultStore>,
     baseline: &ReplayBackend,
     shard: Shard,
     threads: usize,
@@ -430,6 +434,7 @@ mod tests {
     use super::*;
     use crate::core::DependencePattern;
     use crate::engine::job::{ExecMode, JobSpec};
+    use crate::engine::store::DirStore;
     use crate::runtimes::{SystemConfig, SystemKind};
     use crate::sim::NetConfig;
 
@@ -501,6 +506,7 @@ mod tests {
             granularity_us: 10.0,
             peak_flops: 2e9,
             checksum: Some(7.5),
+            samples: None,
         }
     }
 
@@ -596,7 +602,7 @@ mod tests {
         let p = SimParams::default();
         let jobs = sim_jobs(3);
         // Pin the first two cells, plus one cell outside the list.
-        let bstore = ResultStore::new(&dir);
+        let bstore = DirStore::new(&dir);
         run_jobs(&jobs[..2], Some(&bstore), Shard::full(), 1, &p).unwrap();
         let stray = sim_jobs(4).pop().unwrap();
         run_jobs(&[stray.clone()], Some(&bstore), Shard::full(), 1, &p)

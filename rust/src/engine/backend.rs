@@ -34,7 +34,7 @@ use crate::runtimes::{run_with, Measurement, RunOptions};
 use crate::sim::{simulate, Machine, SimParams};
 
 use super::job::{ExecMode, Job, JobResult, JobSpec};
-use super::store::ResultStore;
+use super::store::{DirStore, ResultStore};
 
 /// One way of measuring a benchmark cell.
 pub trait Backend: Sync {
@@ -236,28 +236,30 @@ impl Backend for NativeBackend {
 /// store instead of executing anything.
 ///
 /// The third [`Backend`] impl. Where [`SimBackend`] asks the model and
-/// [`NativeBackend`] asks the machine, this one asks a directory of
-/// golden records — which makes a regression diff just "run the live
-/// backend and the replay backend over the same job list and compare".
-/// Replay never writes; open the baseline with
-/// [`ResultStore::read_only`] to make that a hard guarantee.
-#[derive(Debug, Clone)]
+/// [`NativeBackend`] asks the machine, this one asks a pinned
+/// [`ResultStore`] (golden baselines are [`DirStore`] directories; the
+/// equivalence tests replay packs too) — which makes a regression diff
+/// just "run the live backend and the replay backend over the same job
+/// list and compare". Replay never writes; open the baseline through a
+/// read-only store to make that a hard guarantee.
+#[derive(Debug)]
 pub struct ReplayBackend {
-    baseline: ResultStore,
+    baseline: Box<dyn ResultStore>,
 }
 
 impl ReplayBackend {
-    pub fn new(baseline: ResultStore) -> ReplayBackend {
+    pub fn new(baseline: Box<dyn ResultStore>) -> ReplayBackend {
         ReplayBackend { baseline }
     }
 
-    /// Open `dir` as a read-only pinned baseline.
+    /// Open `dir` as a read-only pinned baseline (directory store — the
+    /// golden layout).
     pub fn open(dir: impl Into<std::path::PathBuf>) -> ReplayBackend {
-        ReplayBackend::new(ResultStore::read_only(dir))
+        ReplayBackend::new(Box::new(DirStore::read_only(dir)))
     }
 
-    pub fn store(&self) -> &ResultStore {
-        &self.baseline
+    pub fn store(&self) -> &dyn ResultStore {
+        self.baseline.as_ref()
     }
 
     /// The pinned result for `job`, bitwise as persisted. Diffing
@@ -285,7 +287,12 @@ impl Backend for ReplayBackend {
         Ok(Measurement {
             system: job.spec.system,
             wall_secs: r.wall_secs,
-            wall_samples: vec![r.wall_secs],
+            // Multi-rep records replay their full sample vector, so
+            // re-normalizing through `from_measurement` round-trips.
+            wall_samples: r
+                .samples
+                .clone()
+                .unwrap_or_else(|| vec![r.wall_secs]),
             tasks: r.tasks,
             // The record stores the derived rate; invert the derivation
             // so `flops_per_sec()` reproduces it (up to f64 rounding).
@@ -391,7 +398,7 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("taskbench_replay_unit_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let writer = ResultStore::new(&dir);
+        let writer = DirStore::new(&dir);
         let job = Job::new(spec(ExecMode::Sim));
         let pinned = JobResult {
             tasks: 30,
@@ -400,6 +407,7 @@ mod tests {
             granularity_us: 25.0,
             peak_flops: 1.6e10,
             checksum: Some(42.5),
+            samples: Some(vec![0.2, 0.25, 0.3]),
         };
         writer.save(&job, &pinned, 7).unwrap();
 
@@ -416,6 +424,11 @@ mod tests {
         assert_eq!(m.wall_secs, pinned.wall_secs);
         assert_eq!(m.checksum, pinned.checksum);
         assert_eq!(m.peak_flops, pinned.peak_flops);
+        assert_eq!(
+            m.wall_samples,
+            vec![0.2, 0.25, 0.3],
+            "replay must serve the full sample vector"
+        );
 
         // A cell the baseline has never seen is an error, not a run.
         let missing = Job::new(spec(ExecMode::Native));

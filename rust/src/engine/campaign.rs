@@ -24,12 +24,13 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::core::DependencePattern;
-use crate::harness::report::Table;
+use crate::harness::report::{pm, Table};
 use crate::metg::{metg_from_curve, GrainRun};
 use crate::runtimes::{SystemConfig, SystemKind};
 use crate::sim::NetConfig;
 
 use super::job::{ExecMode, Job, JobResult, JobSpec};
+use super::stats::SampleStats;
 
 /// Which paper artifact a campaign regenerates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -192,6 +193,13 @@ pub struct Campaign {
     /// campaign-wide; ids change with it, so sim and native results for
     /// the same cell coexist in one store).
     pub mode: ExecMode,
+    /// Timed repetitions per cell (`--reps`). Native cells persist every
+    /// rep's wall clock (record schema v4) and render median ± CI; sim
+    /// cells are deterministic, so more reps buy nothing. Part of the
+    /// job id — always has been — so the default of 1 keeps ids stable.
+    pub reps: usize,
+    /// Untimed warmup runs before the reps (`--warmup`). Also hashed.
+    pub warmup: usize,
 }
 
 impl Campaign {
@@ -289,6 +297,8 @@ impl Campaign {
                 _ => vec![("wire".to_string(), NetConfig::default())],
             },
             mode: ExecMode::Sim,
+            reps: 1,
+            warmup: 0,
         }
     }
 
@@ -387,8 +397,8 @@ impl Campaign {
             payload,
             net,
             mode: self.mode,
-            reps: 1,
-            warmup: 0,
+            reps: self.reps,
+            warmup: self.warmup,
         })
     }
 
@@ -608,7 +618,7 @@ impl Campaign {
                         .id();
                     match results.get(&id) {
                         Some(r) => {
-                            row.push(format!("{:.4}", r.flops_per_sec / 1e12));
+                            row.push(flops_cell(r));
                             row.push(format!(
                                 "{:.1}",
                                 100.0 * r.flops_per_sec / r.peak_flops
@@ -1184,6 +1194,25 @@ impl Campaign {
     }
 }
 
+/// One Fig 1 TFLOP/s cell. Multi-sample cells (native `--reps > 1`,
+/// record schema v4) render the settled number — median ± 99% CI over
+/// the per-rep throughputs; single draws render the plain value as
+/// before. The cell's total work is fixed, so each rep's FLOP/s is the
+/// stored mean throughput rescaled by mean-wall / rep-wall.
+fn flops_cell(r: &JobResult) -> String {
+    match &r.samples {
+        Some(walls) if walls.len() > 1 => {
+            let per_rep: Vec<f64> = walls
+                .iter()
+                .map(|&w| r.flops_per_sec * r.wall_secs / w)
+                .collect();
+            let s = SampleStats::of(&per_rep);
+            pm(s.median / 1e12, s.ci99 / 1e12)
+        }
+        _ => format!("{:.4}", r.flops_per_sec / 1e12),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1657,6 +1686,58 @@ mod tests {
         let dat = c.dat(&map);
         assert!(dat.contains("# build Stealing on nodes 1"), "{dat}");
         assert!(!dat.contains("nodes 2"), "{dat}");
+    }
+
+    #[test]
+    fn reps_and_warmup_flow_into_the_job_ids() {
+        let mut c = small(CampaignKind::Fig1);
+        let base: Vec<String> = c.jobs().iter().map(Job::id).collect();
+        c.reps = 5;
+        c.warmup = 2;
+        let repd: Vec<String> = c.jobs().iter().map(Job::id).collect();
+        for (a, b) in base.iter().zip(&repd) {
+            assert_ne!(a, b, "reps/warmup must reach the fingerprint");
+        }
+        assert!(c
+            .jobs()
+            .iter()
+            .all(|j| j.spec.reps == 5 && j.spec.warmup == 2));
+    }
+
+    #[test]
+    fn fig1_table_renders_median_pm_ci_for_multi_sample_cells() {
+        let c = small(CampaignKind::Fig1);
+        // Pin one cell by hand with three per-rep wall samples whose
+        // median equals the stored mean — the median throughput is then
+        // exactly the stored mean throughput, 2.0 TFLOP/s.
+        let job = c.job_for(
+            SystemKind::MpiLike,
+            DependencePattern::Stencil1D,
+            1,
+            1,
+            c.grains[0],
+        );
+        let mut map = HashMap::new();
+        map.insert(
+            job.id(),
+            JobResult {
+                tasks: 32,
+                wall_secs: 0.5,
+                flops_per_sec: 2.0e12,
+                granularity_us: 10.0,
+                peak_flops: 4.0e12,
+                checksum: None,
+                samples: Some(vec![0.4, 0.5, 0.6]),
+            },
+        );
+        let md = c.table(&map).to_markdown();
+        assert!(md.contains("2.0 ±"), "{md}");
+        // Single-sample cells keep the plain format.
+        let plain = JobResult { samples: None, ..map.values().next().unwrap().clone() };
+        map.insert(job.id(), plain);
+        let md = c.table(&map).to_markdown();
+        assert!(!md.contains('±'), "{md}");
+        assert!(md.contains("2.0000"), "{md}");
     }
 
     #[test]

@@ -8,22 +8,24 @@
 //! record, and any config change produces a new record instead of
 //! silently overwriting an old one.
 //!
-//! ## Record schema v3 and the back-compat rule
+//! ## Record schema v4 and the back-compat rule
 //!
 //! Since the [`SystemConfig`] dimension landed (v2), records carry a
 //! version stamp and (for non-default configs) a `"config"` object
 //! inside `"job"`; the network-model dimension (v3) added `"net"` and
-//! `"payload"` the same way. All are governed by one rule: **a default
-//! dimension contributes nothing** — no canonical-form fields, no JSON
-//! members. A v1 record (no `v`, no `config`) therefore parses as a
-//! default-config v3 cell *and keeps its id*, and a v2 record parses as
-//! a congestion-free default-payload cell and keeps *its* id: every
-//! record an earlier PR wrote remains a valid cache hit for the cell it
-//! described. Only non-default dimensions (Fig 3 builds, the HPX
-//! stealing ablation, hybrid rank overrides, the NIC-contention wire
-//! model, fig5_stress payload overrides) extend the canonical form, so
-//! their ids are new — exactly the cells older schemas could not
-//! express.
+//! `"payload"` the same way, and the statistics layer (v4) added the
+//! optional per-rep `"samples"` array inside `"result"`. All are
+//! governed by one rule: **a default dimension contributes nothing** —
+//! no canonical-form fields, no JSON members. A v1 record (no `v`, no
+//! `config`) therefore parses as a default-config v4 cell *and keeps
+//! its id*, a v2 record parses as a congestion-free default-payload
+//! cell and keeps *its* id, and a v3 record parses as a single-sample
+//! result and keeps its id too: every record an earlier PR wrote
+//! remains a valid cache hit for the cell it described. Only
+//! non-default dimensions (Fig 3 builds, the HPX stealing ablation,
+//! hybrid rank overrides, the NIC-contention wire model, fig5_stress
+//! payload overrides) extend the canonical form, so their ids are new —
+//! exactly the cells older schemas could not express.
 //!
 //! The same rule governs the result side: a [`JobResult`] whose
 //! `checksum` is `None` writes no `"checksum"` member, so every record
@@ -31,7 +33,14 @@
 //! checksum-less result) and re-serializes byte-identically. Records
 //! that do carry one (native runs always checksum; sim runs only under
 //! oracle replay) let `jobs diff` treat a checksum mismatch as a hard
-//! failure rather than mere metric drift.
+//! failure rather than mere metric drift. `samples` (v4) works the same
+//! way: only multi-rep native cells write it (`--reps N`), so every
+//! earlier record — and every sim record — stays byte-identical, and a
+//! v4 single-sample record is byte-for-byte a v3 record apart from the
+//! version stamp. Note `reps`/`warmup` were always hashed job
+//! dimensions; v4 only starts *persisting* what the repetitions
+//! measured, which is why no id changes and no `BASELINE_VERSION` bump
+//! accompanies it.
 
 use anyhow::Context;
 
@@ -46,7 +55,7 @@ use crate::runtimes::{
 use crate::sim::{NetConfig, NetModelKind, SimParams};
 
 /// Current on-disk record schema version (see the module docs).
-pub const RECORD_SCHEMA_VERSION: u64 = 3;
+pub const RECORD_SCHEMA_VERSION: u64 = 4;
 
 /// How a job is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -423,6 +432,12 @@ pub struct JobResult {
     /// oracle replay). `None` contributes no JSON member, so records
     /// predating this field parse and re-serialize unchanged.
     pub checksum: Option<f64>,
+    /// Per-repetition wall-clock samples (seconds) when the backend
+    /// measured more than one (`--reps N` native cells; `wall_secs` is
+    /// their mean). `None` contributes no JSON member — the v1–v3
+    /// back-compat rule — so single-sample and sim records stay
+    /// byte-identical to what earlier schemas wrote.
+    pub samples: Option<Vec<f64>>,
 }
 
 impl JobResult {
@@ -440,6 +455,10 @@ impl JobResult {
             granularity_us: m.task_granularity_us(cores),
             peak_flops: m.peak_flops,
             checksum: m.checksum,
+            // A single sample is fully described by `wall_secs`; only
+            // genuinely repeated measurements persist the vector.
+            samples: (m.wall_samples.len() > 1)
+                .then(|| m.wall_samples.clone()),
         }
     }
 
@@ -448,12 +467,17 @@ impl JobResult {
         self.tasks as f64 / self.wall_secs
     }
 
-    /// Rehydrate the METG-sweep view of this result.
+    /// Rehydrate the METG-sweep view of this result. Multi-sample
+    /// records recover the full wall-clock spread; single-sample ones
+    /// degenerate to a zero-width summary around `wall_secs`.
     pub fn to_grain_run(&self, grain: u64) -> GrainRun {
         GrainRun {
             grain_iters: grain,
             tasks: self.tasks,
-            wall: Summary::of(&[self.wall_secs]),
+            wall: match &self.samples {
+                Some(samples) if !samples.is_empty() => Summary::of(samples),
+                _ => Summary::of(&[self.wall_secs]),
+            },
             flops_per_sec: self.flops_per_sec,
             granularity_us: self.granularity_us,
         }
@@ -471,6 +495,13 @@ impl JobResult {
         // byte-identical; see the module-level back-compat rule).
         if let Some(c) = self.checksum {
             members.push(("checksum".into(), Json::Num(c)));
+        }
+        // Same rule for the v4 per-rep samples array.
+        if let Some(samples) = &self.samples {
+            members.push((
+                "samples".into(),
+                Json::Arr(samples.iter().map(|&s| Json::Num(s)).collect()),
+            ));
         }
         Json::Obj(members)
     }
@@ -497,6 +528,25 @@ impl JobResult {
                 Some(c) => Some(
                     c.as_f64()
                         .context("result record `checksum` is not a number")?,
+                ),
+                None => None,
+            },
+            // Optional like `checksum`, and corruption rules match: a
+            // present member that is not an array of numbers is rejected,
+            // not silently downgraded to "single sample".
+            samples: match v.get("samples") {
+                Some(Json::Arr(items)) => Some(
+                    items
+                        .iter()
+                        .map(|s| {
+                            s.as_f64().context(
+                                "result record `samples` holds a non-number",
+                            )
+                        })
+                        .collect::<anyhow::Result<Vec<f64>>>()?,
+                ),
+                Some(_) => anyhow::bail!(
+                    "result record `samples` is not an array"
                 ),
                 None => None,
             },
@@ -677,6 +727,7 @@ mod tests {
             granularity_us: 1.0,
             peak_flops: 1.0,
             checksum: None,
+            samples: None,
         };
         let text = record_to_json(&job, &result, 5);
         assert!(text.contains("\"net\""), "{text}");
@@ -746,10 +797,11 @@ mod tests {
             granularity_us: 10.0,
             peak_flops: 2e9,
             checksum: None,
+            samples: None,
         };
-        let v3 = record_to_json(&job, &result, 7);
+        let v4 = record_to_json(&job, &result, 7);
         // Strip the version member to reconstruct the v1 byte stream.
-        let v1 = v3.replace("\"v\":3,", "");
+        let v1 = v4.replace("\"v\":4,", "");
         assert!(!v1.contains("\"v\""), "{v1}");
         let (job2, result2, fp) = record_from_json(&v1).expect("v1 record");
         assert_eq!(job2, job);
@@ -771,14 +823,95 @@ mod tests {
             granularity_us: 10.0,
             peak_flops: 2e9,
             checksum: None,
+            samples: None,
         };
-        let v2 = record_to_json(&job, &result, 9).replace("\"v\":3", "\"v\":2");
+        let v2 = record_to_json(&job, &result, 9).replace("\"v\":4", "\"v\":2");
         let (job2, result2, fp) = record_from_json(&v2).expect("v2 record");
         assert_eq!(job2, job);
         assert_eq!(job2.spec.net, NetConfig::default());
         assert_eq!(job2.spec.payload, 0);
         assert_eq!(result2, result);
         assert_eq!(fp, 9);
+    }
+
+    #[test]
+    fn v3_record_parses_as_single_sample_and_keeps_its_id() {
+        // A literal PR 5 record: `"v":3`, no `samples`. It must parse as
+        // a single-sample v4 result, keep its id, and differ from a v4
+        // record only by the version stamp.
+        let job = Job::new(spec());
+        let result = JobResult {
+            tasks: 4800,
+            wall_secs: 0.5,
+            flops_per_sec: 1e9,
+            granularity_us: 10.0,
+            peak_flops: 2e9,
+            checksum: None,
+            samples: None,
+        };
+        let v4 = record_to_json(&job, &result, 11);
+        assert!(!v4.contains("samples"), "a sample-less v4 writes none");
+        let v3 = v4.replace("\"v\":4", "\"v\":3");
+        let (job2, result2, fp) = record_from_json(&v3).expect("v3 record");
+        assert_eq!(job2, job);
+        assert_eq!(result2.samples, None);
+        assert_eq!(result2, result);
+        assert_eq!(fp, 11);
+    }
+
+    #[test]
+    fn samples_member_is_optional_and_round_trips() {
+        let job = Job::new(spec());
+        let with = JobResult {
+            tasks: 40,
+            wall_secs: 0.5,
+            flops_per_sec: 1e9,
+            granularity_us: 10.0,
+            peak_flops: 2e9,
+            checksum: None,
+            samples: Some(vec![0.25, 0.5, 0.75]),
+        };
+        let text = record_to_json(&job, &with, 7);
+        assert!(text.contains("\"samples\":[0.25,0.5,0.75]"), "{text}");
+        let (_, back, _) = record_from_json(&text).unwrap();
+        assert_eq!(back, with);
+        assert_eq!(record_to_json(&job, &back, 7), text);
+
+        // A damaged samples member is corruption, not a silent default.
+        let bad = text.replace("[0.25,0.5,0.75]", "[0.25,\"x\",0.75]");
+        assert!(record_from_json(&bad).is_err(), "{bad}");
+        let bad = text.replace("[0.25,0.5,0.75]", "\"oops\"");
+        assert!(record_from_json(&bad).is_err(), "{bad}");
+
+        // Absent samples contribute nothing — the v3 byte stream.
+        let without = JobResult { samples: None, ..with.clone() };
+        let text = record_to_json(&job, &without, 7);
+        assert!(!text.contains("samples"), "{text}");
+        let (_, back, _) = record_from_json(&text).unwrap();
+        assert_eq!(back.samples, None);
+        assert_eq!(record_to_json(&job, &back, 7), text);
+    }
+
+    #[test]
+    fn multi_sample_results_rehydrate_their_wall_spread() {
+        let multi = JobResult {
+            tasks: 40,
+            wall_secs: 0.5,
+            flops_per_sec: 1e9,
+            granularity_us: 10.0,
+            peak_flops: 2e9,
+            checksum: None,
+            samples: Some(vec![0.4, 0.5, 0.6]),
+        };
+        let run = multi.to_grain_run(64);
+        assert_eq!(run.wall.n, 3);
+        assert!((run.wall.mean - 0.5).abs() < 1e-12);
+        assert!(run.wall.stddev > 0.0, "spread must survive rehydration");
+
+        let single = JobResult { samples: None, ..multi };
+        let run = single.to_grain_run(64);
+        assert_eq!(run.wall.n, 1);
+        assert!((run.wall.mean - 0.5).abs() < 1e-12);
     }
 
     #[test]
@@ -791,8 +924,9 @@ mod tests {
             granularity_us: 1.0,
             peak_flops: 1.0,
             checksum: None,
+            samples: None,
         };
-        let text = record_to_json(&job, &result, 7).replace("\"v\":3", "\"v\":4");
+        let text = record_to_json(&job, &result, 7).replace("\"v\":4", "\"v\":5");
         assert!(record_from_json(&text).is_err());
     }
 
@@ -806,6 +940,7 @@ mod tests {
             granularity_us: 123.456,
             peak_flops: 4.8e12,
             checksum: None,
+            samples: None,
         };
         let fp = params_fingerprint(&SimParams::default());
         let text = record_to_json(&job, &result, fp);
@@ -834,6 +969,7 @@ mod tests {
             granularity_us: 1.0,
             peak_flops: 1.0,
             checksum: None,
+            samples: None,
         };
         let text = record_to_json(&job, &result, 3);
         assert!(text.contains("\"config\""), "{text}");
@@ -854,6 +990,7 @@ mod tests {
             granularity_us: 10.0,
             peak_flops: 2e9,
             checksum: Some(123.25),
+            samples: None,
         };
         let text = record_to_json(&job, &with, 7);
         assert!(text.contains("\"checksum\":123.25"), "{text}");
@@ -886,6 +1023,7 @@ mod tests {
             granularity_us: 1.0,
             peak_flops: 1.0,
             checksum: None,
+            samples: None,
         };
         let text = record_to_json(&job, &result, 7)
             .replace("\"steps\":100", "\"steps\":99");

@@ -12,28 +12,35 @@
 //! [`crate::coordinator`] executes job lists sharded and concurrently
 //! through the backends — and diffs them against a pinned baseline
 //! ([`diff_jobs`]); and every [`JobResult`] persists as a JSON record
-//! ([`json`]) under `results/` keyed by content hash ([`store`]), so
-//! finished cells are never recomputed and interrupted sweeps resume for
-//! free.
+//! ([`json`]) keyed by content hash through a pluggable [`ResultStore`]
+//! ([`store`]) — one file per cell ([`DirStore`]) or an indexed
+//! single-file log ([`pack`]) — so finished cells are never recomputed
+//! and interrupted sweeps resume for free. Multi-sample native cells
+//! summarize through [`stats`].
 //!
 //! CLI entry points:
-//! `repro jobs list | run | table | dat | calibrate | snapshot | diff`.
+//! `repro jobs list | run | table | dat | calibrate | snapshot | diff |
+//! pack`.
 
 pub mod backend;
 pub mod campaign;
 pub mod exec;
 pub mod job;
 pub mod json;
+pub mod pack;
 pub mod params;
 pub mod simbench;
+pub mod stats;
 pub mod store;
 
 pub use backend::{Backend, Backends, NativeBackend, ReplayBackend, SimBackend};
 pub use campaign::{Campaign, CampaignKind, DiffTolerances};
 pub use exec::execute_job;
 pub use job::{ExecMode, Job, JobResult, JobSpec};
+pub use pack::{pack_results_dir, PackStore, PackSummary};
 pub use simbench::{run_sim_bench, write_sim_bench, SimBenchReport};
-pub use store::ResultStore;
+pub use stats::SampleStats;
+pub use store::{DirStore, ResultStore};
 
 // The coordinator is the execution half of the engine; re-export its
 // surface so `engine::*` is one-stop.

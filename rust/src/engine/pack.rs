@@ -1,0 +1,622 @@
+//! [`PackStore`]: an indexed single-file result store.
+//!
+//! A directory of tiny one-cell JSON files is inspectable but stops
+//! being a database somewhere around the `fig2_huge` campaign scale.
+//! The pack backend keeps every record in one append-only log,
+//! `<dir>/results.pack`, with an in-memory id → offset index rebuilt on
+//! open — `ids()` and cache probes never touch more than the index, and
+//! a million-cell campaign is one file, not a million inodes.
+//!
+//! ## File format (hand-rolled framing; serde is unavailable offline)
+//!
+//! ```text
+//! %TASKBENCH-PACK v1\n
+//! %REC <id> <payload-len>\n
+//! <payload-len bytes: one record as written by `record_to_json`>
+//! %REC <id> <payload-len>\n
+//! ...
+//! ```
+//!
+//! Payloads are the exact bytes a [`super::store::DirStore`] record file
+//! holds, so `jobs pack` is byte-lossless and the two backends parse
+//! records through the identical code path. Appends of the same id
+//! supersede earlier frames (the index keeps the latest); `jobs pack`
+//! rewrites the log compacted — one frame per live id, sorted.
+//!
+//! ## Crash safety
+//!
+//! A frame is appended with a single `write_all`. If a writer dies
+//! mid-append, the torn frame fails to parse and index rebuilding stops
+//! at the last intact frame — every earlier record is served normally,
+//! exactly like a `DirStore` surviving a truncated temp file. The next
+//! successful `save` truncates the torn tail before appending, so the
+//! log heals itself. Writers in *one process* serialize on an internal
+//! lock; unlike `DirStore`, two processes must not append to the same
+//! pack concurrently (shard into separate packs, or into a directory
+//! store and `jobs pack` afterwards).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::Context;
+
+use super::job::{record_from_json, record_to_json, Job, JobResult};
+use super::store::{is_record_stem, write_atomic_bytes, ResultStore};
+
+/// Pack file name inside a results directory.
+pub const PACK_FILE: &str = "results.pack";
+/// First line of every pack file.
+pub const PACK_MAGIC: &str = "%TASKBENCH-PACK v1";
+
+/// One frame's payload location: byte offset and length in the pack.
+type Span = (u64, u64);
+
+#[derive(Debug)]
+struct PackIndex {
+    /// id → latest frame's payload span (appends supersede).
+    by_id: BTreeMap<String, Span>,
+    /// One past the last intact frame — the append point. A torn tail
+    /// from a crashed writer sits beyond it and is truncated away by
+    /// the next save. Zero until the magic line exists.
+    end: u64,
+}
+
+/// The indexed single-file store. See the module docs for the format.
+#[derive(Debug)]
+pub struct PackStore {
+    dir: PathBuf,
+    read_only: bool,
+    index: Mutex<PackIndex>,
+}
+
+impl PackStore {
+    /// Open (or start) the pack under `dir` for reading and writing.
+    /// The id index is rebuilt by scanning the log once.
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<PackStore> {
+        PackStore::open_inner(dir.into(), false)
+    }
+
+    /// A read-only view: [`ResultStore::save`] fails instead of writing.
+    pub fn open_read_only(
+        dir: impl Into<PathBuf>,
+    ) -> anyhow::Result<PackStore> {
+        PackStore::open_inner(dir.into(), true)
+    }
+
+    fn open_inner(dir: PathBuf, read_only: bool) -> anyhow::Result<PackStore> {
+        let path = dir.join(PACK_FILE);
+        let index = match std::fs::read(&path) {
+            Ok(bytes) => scan(&bytes)
+                .with_context(|| format!("indexing {}", path.display()))?,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                PackIndex { by_id: BTreeMap::new(), end: 0 }
+            }
+            Err(e) => {
+                return Err(e)
+                    .context(format!("reading {}", path.display()))
+            }
+        };
+        if !read_only {
+            // Calibration sidecars publish via temp + rename into this
+            // dir too; reap orphans exactly like a DirStore open does.
+            super::store::gc_temp_files_in(&dir, super::store::TEMP_GC_MARGIN);
+        }
+        Ok(PackStore { dir, read_only, index: Mutex::new(index) })
+    }
+
+    /// The pack file's path.
+    pub fn path(&self) -> PathBuf {
+        self.dir.join(PACK_FILE)
+    }
+
+    /// Number of live (indexed) records.
+    pub fn len(&self) -> usize {
+        self.index.lock().unwrap().by_id.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Raw payload bytes of a record by id — exactly what a `DirStore`
+    /// record file would hold. The byte-lossless check in `jobs pack`
+    /// compares through this; corrupt payloads are returned verbatim.
+    pub fn raw(&self, id: &str) -> Option<Vec<u8>> {
+        let span = *self.index.lock().unwrap().by_id.get(id)?;
+        read_span(&self.path(), span).ok()
+    }
+
+    fn load_record(&self, job: &Job) -> Option<(Job, JobResult, u64)> {
+        let payload = self.raw(&job.id())?;
+        let text = std::str::from_utf8(&payload).ok()?;
+        record_from_json(text).ok()
+    }
+}
+
+impl ResultStore for PackStore {
+    fn backend_id(&self) -> &'static str {
+        "pack"
+    }
+
+    fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn is_read_only(&self) -> bool {
+        self.read_only
+    }
+
+    fn load(&self, job: &Job) -> Option<JobResult> {
+        match self.load_record(job) {
+            Some((stored, result, _)) if stored == *job => Some(result),
+            _ => None,
+        }
+    }
+
+    fn load_if(&self, job: &Job, params_fp: u64) -> Option<JobResult> {
+        match self.load_record(job) {
+            Some((stored, result, fp))
+                if stored == *job && fp == params_fp =>
+            {
+                Some(result)
+            }
+            _ => None,
+        }
+    }
+
+    fn save(
+        &self,
+        job: &Job,
+        result: &JobResult,
+        params_fp: u64,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.read_only,
+            "store {} is read-only (a pinned golden baseline)",
+            self.path().display()
+        );
+        let payload = record_to_json(job, result, params_fp);
+        let header = format!("%REC {} {}\n", job.id(), payload.len());
+
+        // Hold the index lock across the whole append: in-process
+        // writers (the coordinator's thread pool) serialize here, so
+        // frames never interleave and `end` never lies.
+        let mut index = self.index.lock().unwrap();
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        let path = self.path();
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .read(true)
+            .open(&path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if file_len > index.end {
+            // A torn frame from a crashed writer: drop it, then append.
+            file.set_len(index.end)
+                .with_context(|| format!("truncating {}", path.display()))?;
+        }
+        // One frame, one write_all: a crash leaves at most one torn
+        // frame at the tail, which the next open (or save) drops.
+        let mut frame = Vec::with_capacity(header.len() + payload.len() + 32);
+        if index.end == 0 {
+            frame.extend_from_slice(PACK_MAGIC.as_bytes());
+            frame.push(b'\n');
+        }
+        let header_at = frame.len() as u64;
+        frame.extend_from_slice(header.as_bytes());
+        frame.extend_from_slice(payload.as_bytes());
+        file.seek(SeekFrom::Start(index.end))
+            .with_context(|| format!("seeking {}", path.display()))?;
+        file.write_all(&frame)
+            .with_context(|| format!("appending to {}", path.display()))?;
+        let payload_off = index.end + header_at + header.len() as u64;
+        index.end += frame.len() as u64;
+        index.by_id.insert(job.id(), (payload_off, payload.len() as u64));
+        Ok(())
+    }
+
+    fn ids(&self) -> Vec<String> {
+        // BTreeMap iterates in key order — already sorted.
+        self.index.lock().unwrap().by_id.keys().cloned().collect()
+    }
+
+    fn load_all(&self) -> Vec<(Job, JobResult)> {
+        let index = self.index.lock().unwrap();
+        let Ok(bytes) = std::fs::read(self.path()) else {
+            return Vec::new();
+        };
+        // BTreeMap order is id order, and parsed ids equal frame ids
+        // (record_from_json verifies the id against the spec hash), so
+        // the output is sorted by construction.
+        index
+            .by_id
+            .values()
+            .filter_map(|&(off, len)| {
+                let (start, end) = (off as usize, (off + len) as usize);
+                let payload = bytes.get(start..end)?;
+                let text = std::str::from_utf8(payload).ok()?;
+                record_from_json(text).ok()
+            })
+            .map(|(job, result, _)| (job, result))
+            .collect()
+    }
+}
+
+/// Scan a pack's bytes into an index. Tolerates a torn tail (scanning
+/// stops at the first malformed or short frame); rejects files that do
+/// not start with the magic line outright — that is not a pack, and
+/// writing into it would destroy someone's data.
+fn scan(bytes: &[u8]) -> anyhow::Result<PackIndex> {
+    if bytes.is_empty() {
+        return Ok(PackIndex { by_id: BTreeMap::new(), end: 0 });
+    }
+    let magic_end = bytes
+        .iter()
+        .position(|&b| b == b'\n')
+        .filter(|&nl| &bytes[..nl] == PACK_MAGIC.as_bytes())
+        .context("not a pack file (bad magic line)")?;
+    let mut index =
+        PackIndex { by_id: BTreeMap::new(), end: magic_end as u64 + 1 };
+    let mut pos = magic_end + 1;
+    while pos < bytes.len() {
+        let Some(frame) = parse_frame_header(&bytes[pos..]) else {
+            break; // torn tail — everything before it is intact
+        };
+        let (id, payload_len, header_len) = frame;
+        let payload_start = pos + header_len;
+        let payload_end = payload_start + payload_len;
+        if payload_end > bytes.len() {
+            break; // torn payload
+        }
+        index
+            .by_id
+            .insert(id, (payload_start as u64, payload_len as u64));
+        index.end = payload_end as u64;
+        pos = payload_end;
+    }
+    Ok(index)
+}
+
+/// Parse one `%REC <id> <len>\n` header at the start of `bytes`.
+/// Returns `(id, payload_len, header_len)`, or `None` if malformed.
+fn parse_frame_header(bytes: &[u8]) -> Option<(String, usize, usize)> {
+    let nl = bytes.iter().position(|&b| b == b'\n')?;
+    let line = std::str::from_utf8(&bytes[..nl]).ok()?;
+    let rest = line.strip_prefix("%REC ")?;
+    let (id, len_str) = rest.split_once(' ')?;
+    if !is_record_stem(id) {
+        return None;
+    }
+    let payload_len: usize = len_str.parse().ok()?;
+    Some((id.to_string(), payload_len, nl + 1))
+}
+
+fn read_span(path: &Path, (off, len): Span) -> std::io::Result<Vec<u8>> {
+    let mut file = std::fs::File::open(path)?;
+    file.seek(SeekFrom::Start(off))?;
+    let mut buf = vec![0u8; len as usize];
+    file.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// What `pack_results_dir` did, for the CLI to report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackSummary {
+    /// Live records in the written pack.
+    pub records: usize,
+    /// How many came from `*.json` record files (these win conflicts).
+    pub from_files: usize,
+    /// How many were carried over from a pre-existing pack.
+    pub carried: usize,
+}
+
+/// Fold a results directory into a compacted pack: every `DirStore`
+/// record file plus every live frame of a pre-existing pack, one frame
+/// per id, sorted, written atomically (temp + rename). On id conflicts
+/// the directory's file wins (it is the canonical source being folded
+/// in). Record *bytes* are copied verbatim — even records that do not
+/// parse keep their id and their exact bytes, matching `DirStore`'s
+/// corrupt-record semantics. The JSON files are left in place; delete
+/// them (or point `--store pack` elsewhere) once satisfied.
+///
+/// After writing, the pack is reopened and every payload is compared
+/// byte-for-byte against its source — the round-trip is verified, not
+/// assumed.
+pub fn pack_results_dir(dir: &Path) -> anyhow::Result<PackSummary> {
+    // Carry live frames of an existing pack (compaction), then overlay
+    // the directory's record files.
+    let mut records: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+    let old = PackStore::open_read_only(dir)?;
+    for id in old.ids() {
+        let payload = old
+            .raw(&id)
+            .with_context(|| format!("indexed frame {id} unreadable"))?;
+        records.insert(id, payload);
+    }
+    let mut file_ids = std::collections::BTreeSet::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.filter_map(|e| e.ok()) {
+            let path = entry.path();
+            if path.extension().map(|x| x == "json") != Some(true) {
+                continue;
+            }
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            if !is_record_stem(stem) {
+                continue;
+            }
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            records.insert(stem.to_string(), bytes);
+            file_ids.insert(stem.to_string());
+        }
+    }
+    let from_files = file_ids.len();
+    // Ids present only via the pre-existing pack.
+    let carried = records.len() - from_files;
+
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(PACK_MAGIC.as_bytes());
+    out.push(b'\n');
+    for (id, payload) in &records {
+        out.extend_from_slice(
+            format!("%REC {id} {}\n", payload.len()).as_bytes(),
+        );
+        out.extend_from_slice(payload);
+    }
+    write_atomic_bytes(dir, PACK_FILE, &out)?;
+
+    // Verify the round-trip through a fresh open.
+    let packed = PackStore::open_read_only(dir)?;
+    let want: Vec<String> = records.keys().cloned().collect();
+    anyhow::ensure!(
+        packed.ids() == want,
+        "pack verification failed: {} ids in, {} ids out",
+        want.len(),
+        packed.ids().len()
+    );
+    for (id, payload) in &records {
+        let got = packed
+            .raw(id)
+            .with_context(|| format!("packed record {id} unreadable"))?;
+        anyhow::ensure!(
+            &got == payload,
+            "pack verification failed: record {id} bytes differ"
+        );
+    }
+    Ok(PackSummary { records: records.len(), from_files, carried })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DependencePattern;
+    use crate::engine::job::{ExecMode, JobSpec};
+    use crate::engine::store::DirStore;
+    use crate::runtimes::{SystemConfig, SystemKind};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("taskbench_pack_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn job(grain: u64) -> Job {
+        Job::new(JobSpec {
+            system: SystemKind::MpiLike,
+            config: SystemConfig::default(),
+            pattern: DependencePattern::Stencil1D,
+            nodes: 1,
+            cores_per_node: 4,
+            tasks_per_core: 1,
+            steps: 10,
+            grain,
+            payload: 0,
+            net: crate::sim::NetConfig::default(),
+            mode: ExecMode::Sim,
+            reps: 1,
+            warmup: 0,
+        })
+    }
+
+    fn result(v: f64) -> JobResult {
+        JobResult {
+            tasks: 40,
+            wall_secs: v,
+            flops_per_sec: v * 2.0,
+            granularity_us: v * 3.0,
+            peak_flops: v * 4.0,
+            checksum: None,
+            samples: None,
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip_and_reopen() {
+        let dir = tmp("round_trip");
+        let store = PackStore::open(&dir).unwrap();
+        let j = job(64);
+        assert!(store.load(&j).is_none());
+        store.save(&j, &result(0.5), 7).unwrap();
+        assert_eq!(store.load(&j), Some(result(0.5)));
+        assert!(store.load(&job(128)).is_none());
+        store.save(&job(128), &result(2.0), 7).unwrap();
+
+        // The index rebuilds identically from a cold open.
+        let reopened = PackStore::open(&dir).unwrap();
+        assert_eq!(reopened.load(&j), Some(result(0.5)));
+        assert_eq!(reopened.load(&job(128)), Some(result(2.0)));
+        assert_eq!(reopened.ids(), store.ids());
+        assert_eq!(reopened.load_all().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_if_rejects_foreign_params() {
+        let dir = tmp("params_fp");
+        let store = PackStore::open(&dir).unwrap();
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        assert_eq!(store.load_if(&j, 7), Some(result(1.0)));
+        assert!(store.load_if(&j, 8).is_none());
+        assert!(store.load(&j).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn later_appends_supersede_and_pack_compacts() {
+        let dir = tmp("supersede");
+        let store = PackStore::open(&dir).unwrap();
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        store.save(&j, &result(2.0), 7).unwrap();
+        assert_eq!(store.load(&j), Some(result(2.0)), "latest frame wins");
+        assert_eq!(store.len(), 1);
+        // Two frames on disk until compaction...
+        let loose = std::fs::metadata(store.path()).unwrap().len();
+        let summary = pack_results_dir(&dir).unwrap();
+        assert_eq!(
+            summary,
+            PackSummary { records: 1, from_files: 0, carried: 1 }
+        );
+        let compact = std::fs::metadata(store.path()).unwrap().len();
+        assert!(compact < loose, "{compact} >= {loose}");
+        let reopened = PackStore::open(&dir).unwrap();
+        assert_eq!(reopened.load(&j), Some(result(2.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_tolerated_and_healed_by_the_next_save() {
+        let dir = tmp("torn");
+        let store = PackStore::open(&dir).unwrap();
+        let j1 = job(64);
+        let j2 = job(128);
+        store.save(&j1, &result(1.0), 7).unwrap();
+        store.save(&j2, &result(2.0), 7).unwrap();
+
+        // A crashed writer: half a frame at the tail.
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(store.path())
+            .unwrap();
+        f.write_all(b"%REC 00000000000000ff 999\n{trunc").unwrap();
+        drop(f);
+
+        let survivor = PackStore::open(&dir).unwrap();
+        assert_eq!(survivor.len(), 2, "intact frames survive the torn tail");
+        assert_eq!(survivor.load(&j1), Some(result(1.0)));
+        assert_eq!(survivor.load(&j2), Some(result(2.0)));
+
+        // The next save truncates the torn tail before appending.
+        let j3 = job(256);
+        survivor.save(&j3, &result(3.0), 7).unwrap();
+        let healed = PackStore::open(&dir).unwrap();
+        assert_eq!(healed.len(), 3);
+        assert_eq!(healed.load(&j3), Some(result(3.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_only_pack_loads_but_refuses_writes() {
+        let dir = tmp("read_only");
+        let writer = PackStore::open(&dir).unwrap();
+        let j = job(64);
+        writer.save(&j, &result(1.0), 7).unwrap();
+
+        let pinned = PackStore::open_read_only(&dir).unwrap();
+        assert!(pinned.is_read_only());
+        assert_eq!(pinned.load(&j), Some(result(1.0)));
+        let err = pinned.save(&j, &result(2.0), 7).unwrap_err();
+        assert!(format!("{err:#}").contains("read-only"), "{err:#}");
+        assert_eq!(writer.load(&j), Some(result(1.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn a_non_pack_file_is_refused_not_clobbered() {
+        let dir = tmp("bad_magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(PACK_FILE), "someone's data\n").unwrap();
+        let err = PackStore::open(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+        assert_eq!(
+            std::fs::read_to_string(dir.join(PACK_FILE)).unwrap(),
+            "someone's data\n",
+            "open must not modify a non-pack file"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pack_results_dir_folds_files_over_carried_frames_byte_exactly() {
+        let dir = tmp("fold");
+        let files = DirStore::new(&dir);
+        let j1 = job(64);
+        let j2 = job(128);
+        files.save(&j1, &result(1.0), 7).unwrap();
+        files.save(&j2, &result(2.0), 7).unwrap();
+        // A corrupt record file keeps its id and its exact bytes.
+        std::fs::write(files.path_for(&j2), "{corrupt").unwrap();
+        // Non-record files never enter the pack.
+        std::fs::write(dir.join("_calibration.json"), "{}").unwrap();
+        std::fs::write(dir.join("notes.txt"), "hi").unwrap();
+        // A pre-existing pack holds a record the dir does not...
+        let pack = PackStore::open(&dir).unwrap();
+        let j3 = job(256);
+        pack.save(&j3, &result(3.0), 7).unwrap();
+        // ...and a stale frame for j1 that the dir file must supersede.
+        pack.save(&j1, &result(9.0), 7).unwrap();
+        drop(pack);
+
+        let summary = pack_results_dir(&dir).unwrap();
+        assert_eq!(
+            summary,
+            PackSummary { records: 3, from_files: 2, carried: 1 }
+        );
+        let packed = PackStore::open(&dir).unwrap();
+        let mut want = vec![j1.id(), j2.id(), j3.id()];
+        want.sort();
+        assert_eq!(packed.ids(), want);
+        // Byte-exact payloads: the dir file won for j1...
+        assert_eq!(
+            packed.raw(&j1.id()).unwrap(),
+            std::fs::read(files.path_for(&j1)).unwrap()
+        );
+        assert_eq!(packed.load(&j1), Some(result(1.0)));
+        // ...the corrupt record's id is visible but unloadable (the
+        // DirStore corrupt-record semantics, preserved)...
+        assert_eq!(packed.raw(&j2.id()).unwrap(), b"{corrupt");
+        assert!(packed.load(&j2).is_none());
+        // ...and the carried frame still loads.
+        assert_eq!(packed.load(&j3), Some(result(3.0)));
+        // Non-destructive: the json records are still there.
+        assert!(files.path_for(&j1).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn packing_an_empty_dir_yields_an_empty_pack() {
+        let dir = tmp("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let summary = pack_results_dir(&dir).unwrap();
+        assert_eq!(
+            summary,
+            PackSummary { records: 0, from_files: 0, carried: 0 }
+        );
+        let packed = PackStore::open(&dir).unwrap();
+        assert!(packed.is_empty());
+        assert!(packed.ids().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -18,6 +18,9 @@ use crate::sim::SimParams;
 use super::json::Json;
 use super::store::ResultStore;
 
+#[cfg(test)]
+use super::store::DirStore;
+
 /// Calibration record filename inside a results directory. The leading
 /// underscore keeps it visually apart from job records; it is skipped by
 /// [`ResultStore::load_all`] because it is not a parseable job record.
@@ -151,7 +154,7 @@ pub fn params_from_json(v: &Json) -> anyhow::Result<SimParams> {
 
 /// The calibration persisted in a results directory, if a valid one
 /// exists (read-only; never calibrates).
-pub fn load_persisted(store: &ResultStore) -> Option<SimParams> {
+pub fn load_persisted(store: &dyn ResultStore) -> Option<SimParams> {
     let path = store.dir().join(CALIBRATION_FILE);
     let text = std::fs::read_to_string(path).ok()?;
     Json::parse(&text).and_then(|v| params_from_json(&v)).ok()
@@ -169,7 +172,7 @@ pub fn load_persisted(store: &ResultStore) -> Option<SimParams> {
 /// internally-consistent calibrated campaign, calibrate once and copy
 /// the resulting `_calibration.json` into every shard's results
 /// directory before `jobs run` — each shard then reuses it verbatim.
-pub fn load_or_calibrate(store: &ResultStore) -> anyhow::Result<SimParams> {
+pub fn load_or_calibrate(store: &dyn ResultStore) -> anyhow::Result<SimParams> {
     let path = store.dir().join(CALIBRATION_FILE);
     if let Some(p) = load_persisted(store) {
         eprintln!("using calibration persisted in {}", path.display());
@@ -188,7 +191,7 @@ pub fn load_or_calibrate(store: &ResultStore) -> anyhow::Result<SimParams> {
 }
 
 /// Write `params` as the store's persisted calibration.
-fn install(store: &ResultStore, params: &SimParams) -> anyhow::Result<()> {
+fn install(store: &dyn ResultStore, params: &SimParams) -> anyhow::Result<()> {
     let mut text = params_to_json(params).render();
     text.push('\n');
     super::store::write_atomic(store.dir(), CALIBRATION_FILE, &text)
@@ -199,7 +202,7 @@ fn install(store: &ResultStore, params: &SimParams) -> anyhow::Result<()> {
 /// host's results directory can import — the multi-host campaign flow
 /// without hand-copying `_calibration.json`.
 pub fn export_calibration(
-    store: &ResultStore,
+    store: &dyn ResultStore,
     path: &str,
 ) -> anyhow::Result<SimParams> {
     let p = load_or_calibrate(store)?;
@@ -215,7 +218,7 @@ pub fn export_calibration(
 /// params fingerprint as the exporting host — their records merge as one
 /// internally-consistent campaign.
 pub fn import_calibration(
-    store: &ResultStore,
+    store: &dyn ResultStore,
     path: &str,
 ) -> anyhow::Result<SimParams> {
     let text = std::fs::read_to_string(path)
@@ -285,12 +288,12 @@ mod tests {
         assert_eq!(params_fingerprint(&back), params_fingerprint(&p));
     }
 
-    fn tmp_store(tag: &str) -> ResultStore {
+    fn tmp_store(tag: &str) -> DirStore {
         let p = std::env::temp_dir()
             .join(format!("taskbench_cal_{tag}_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&p);
         std::fs::create_dir_all(&p).unwrap();
-        ResultStore::new(p)
+        DirStore::new(p)
     }
 
     #[test]

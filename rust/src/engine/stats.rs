@@ -1,0 +1,173 @@
+//! Statistics over repeated measurements: order statistics (median,
+//! percentiles) and a least-squares line fit, on top of the harness's
+//! mean/CI [`Summary`].
+//!
+//! Native cells persist every wall-clock sample (record schema v4), so
+//! renderers can report settled numbers — median ± 99% CI — instead of
+//! a single noisy draw, and the METG renderer can *regress* the
+//! 50%-efficiency crossover instead of snapping to the nearest swept
+//! point.
+
+use crate::harness::Summary;
+
+/// Summary statistics of one cell's repeated samples: the harness's
+/// mean/stddev/CI plus order statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleStats {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    /// Half-width of the 99% confidence interval of the mean.
+    pub ci99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl SampleStats {
+    /// Compute over `samples` (must be non-empty).
+    pub fn of(samples: &[f64]) -> SampleStats {
+        let s = Summary::of(samples);
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        SampleStats {
+            n: s.n,
+            mean: s.mean,
+            median: percentile_sorted(&sorted, 0.5),
+            stddev: s.stddev,
+            ci99: s.ci99,
+            min: s.min,
+            max: s.max,
+        }
+    }
+}
+
+/// Median of `samples` (must be non-empty; need not be sorted).
+pub fn median(samples: &[f64]) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, 0.5)
+}
+
+/// The `p`-quantile (`p` in `[0, 1]`) of an ascending-sorted non-empty
+/// slice, linearly interpolated between closest ranks (the common
+/// "exclusive of extrapolation" definition: rank `p · (n-1)`).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample set");
+    assert!((0.0..=1.0).contains(&p), "quantile {p} outside [0, 1]");
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + frac * (sorted[hi] - sorted[lo])
+}
+
+/// Least-squares line `y = slope·x + intercept` through the points.
+/// `None` when fewer than two points or the xs carry no variance (a
+/// vertical line has no function form).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Option<(f64, f64)> {
+    assert_eq!(xs.len(), ys.len(), "x/y length mismatch");
+    let n = xs.len();
+    if n < 2 {
+        return None;
+    }
+    let x_mean = xs.iter().sum::<f64>() / n as f64;
+    let y_mean = ys.iter().sum::<f64>() / n as f64;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        num += (x - x_mean) * (y - y_mean);
+        den += (x - x_mean) * (x - x_mean);
+    }
+    if den == 0.0 {
+        return None;
+    }
+    let slope = num / den;
+    Some((slope, y_mean - slope * x_mean))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-12, "{a} != {b}");
+    }
+
+    #[test]
+    fn median_odd_and_even() {
+        close(median(&[3.0, 1.0, 2.0]), 2.0);
+        close(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        close(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate_between_ranks() {
+        let sorted = [10.0, 20.0, 30.0, 40.0];
+        close(percentile_sorted(&sorted, 0.0), 10.0);
+        close(percentile_sorted(&sorted, 1.0), 40.0);
+        close(percentile_sorted(&sorted, 0.5), 25.0);
+        // rank 0.25·3 = 0.75 → between 10 and 20 at 75%.
+        close(percentile_sorted(&sorted, 0.25), 17.5);
+    }
+
+    #[test]
+    fn sample_stats_agree_with_the_harness_summary() {
+        let samples = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let stats = SampleStats::of(&samples);
+        let summary = crate::harness::Summary::of(&samples);
+        assert_eq!(stats.n, 8);
+        close(stats.mean, summary.mean);
+        close(stats.stddev, summary.stddev);
+        close(stats.ci99, summary.ci99);
+        close(stats.median, 4.5);
+        close(stats.min, 2.0);
+        close(stats.max, 9.0);
+    }
+
+    #[test]
+    fn linear_fit_recovers_an_exact_line() {
+        // y = 3x - 2, hand-computed.
+        let xs = [0.0, 1.0, 2.0, 5.0];
+        let ys = [-2.0, 1.0, 4.0, 13.0];
+        let (slope, intercept) = linear_fit(&xs, &ys).unwrap();
+        close(slope, 3.0);
+        close(intercept, -2.0);
+    }
+
+    #[test]
+    fn linear_fit_two_points_is_the_interpolation_line() {
+        let (slope, intercept) =
+            linear_fit(&[1.0, 3.0], &[10.0, 20.0]).unwrap();
+        close(slope, 5.0);
+        close(intercept, 5.0);
+    }
+
+    #[test]
+    fn linear_fit_least_squares_hand_case() {
+        // Four points NOT on one line; the normal-equations solution is
+        // slope = Sxy/Sxx with centered sums. Hand computation:
+        // xs mean 2.5, ys mean 4.75.
+        // Sxy = (−1.5)(−3.75)+(−0.5)(−0.75)+(0.5)(0.25)+(1.5)(4.25)
+        //     = 5.625+0.375+0.125+6.375 = 12.5
+        // Sxx = 2.25+0.25+0.25+2.25 = 5 → slope 2.5,
+        // intercept = 4.75 − 2.5·2.5 = −1.5. All dyadic — exact in f64.
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [1.0, 4.0, 5.0, 9.0];
+        let (slope, intercept) = linear_fit(&xs, &ys).unwrap();
+        close(slope, 2.5);
+        close(intercept, -1.5);
+    }
+
+    #[test]
+    fn degenerate_fits_return_none() {
+        assert!(linear_fit(&[1.0], &[2.0]).is_none(), "one point");
+        assert!(
+            linear_fit(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]).is_none(),
+            "no x variance"
+        );
+    }
+}

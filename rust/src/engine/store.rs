@@ -1,13 +1,25 @@
-//! Durable result store: one JSON record per completed job, keyed by the
+//! Durable result stores: one record per completed job, keyed by the
 //! job's content hash, so campaigns are resumable and shardable.
 //!
-//! Layout: `<dir>/<job-id>.json`. Writes go through a temp file + rename,
-//! so an interrupted sweep never leaves a truncated record — on resume the
-//! cell simply re-runs. Two shards writing disjoint job sets into the same
-//! directory compose into exactly the record set a serial run produces.
+//! The [`ResultStore`] trait is the storage contract the engine runs
+//! against; everything above it (coordinator, diff gate, renderers,
+//! calibration) is backend-agnostic. Two backends implement it:
+//!
+//! * [`DirStore`] — the original layout, `<dir>/<job-id>.json`, one file
+//!   per cell. Writes go through a temp file + rename, so an interrupted
+//!   sweep never leaves a truncated record — on resume the cell simply
+//!   re-runs. Two shards writing disjoint job sets into the same
+//!   directory compose into exactly the record set a serial run
+//!   produces. Golden baselines stay on this backend: one inspectable
+//!   JSON file per pinned cell.
+//! * [`super::pack::PackStore`] — an indexed single-file backend
+//!   (`<dir>/results.pack`) for campaign sets where a directory of tiny
+//!   files stops being a database. `jobs pack` folds a directory store
+//!   into one.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 use anyhow::Context;
 
@@ -17,13 +29,18 @@ use super::job::{record_from_json, record_to_json, Job, JobResult};
 /// so two processes sharing one results dir cannot collide either).
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
-/// Atomically publish `text` as `dir/name`: write to a writer-unique
+/// Temp files older than this are presumed orphans of a killed writer
+/// and reaped on store open; younger ones may belong to a live
+/// concurrent writer and are left alone.
+pub(crate) const TEMP_GC_MARGIN: Duration = Duration::from_secs(3600);
+
+/// Atomically publish `bytes` as `dir/name`: write to a writer-unique
 /// temp file, then rename. Concurrent writers of the same name race
 /// benignly (last rename wins); a reader never sees a truncated file.
-pub(crate) fn write_atomic(
+pub(crate) fn write_atomic_bytes(
     dir: &Path,
     name: &str,
-    text: &str,
+    bytes: &[u8],
 ) -> anyhow::Result<()> {
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating {}", dir.display()))?;
@@ -33,40 +50,146 @@ pub(crate) fn write_atomic(
         std::process::id(),
         TMP_SEQ.fetch_add(1, Ordering::Relaxed),
     ));
-    std::fs::write(&tmp, text)
+    std::fs::write(&tmp, bytes)
         .with_context(|| format!("writing {}", tmp.display()))?;
     std::fs::rename(&tmp, &path)
         .with_context(|| format!("renaming into {}", path.display()))?;
     Ok(())
 }
 
-/// A results directory.
-#[derive(Debug, Clone)]
-pub struct ResultStore {
-    dir: PathBuf,
+/// [`write_atomic_bytes`] for text content.
+pub(crate) fn write_atomic(
+    dir: &Path,
+    name: &str,
+    text: &str,
+) -> anyhow::Result<()> {
+    write_atomic_bytes(dir, name, text.as_bytes())
+}
+
+/// Does `stem` look like a job content hash (16 hex chars)? The shared
+/// record-file filter: `ids` and `load_all` apply the *same* predicate,
+/// so a stray parseable non-record file can never be treated as a cell
+/// by one listing and skipped by the other.
+pub(crate) fn is_record_stem(stem: &str) -> bool {
+    stem.len() == 16 && stem.bytes().all(|b| b.is_ascii_hexdigit())
+}
+
+/// Delete temp files in `dir` matching [`write_atomic`]'s naming
+/// pattern that are older than `margin`. Shared by every writable
+/// backend's open path — a killed process leaks its in-flight temp file
+/// forever otherwise; live concurrent writers publish within the margin
+/// and are untouched. Returns the number reaped.
+pub(crate) fn gc_temp_files_in(dir: &Path, margin: Duration) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut reaped = 0;
+    for entry in entries.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if !is_temp_file_name(name) {
+            continue;
+        }
+        let old_enough = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .map(|mtime| {
+                // A clock hiccup (future mtime) reads as "fresh": never
+                // reap what we cannot age.
+                mtime.elapsed().map(|age| age >= margin).unwrap_or(false)
+            })
+            .unwrap_or(false);
+        if old_enough && std::fs::remove_file(&path).is_ok() {
+            reaped += 1;
+        }
+    }
+    reaped
+}
+
+/// Does `name` match [`write_atomic`]'s temp-file pattern
+/// (`<published-name>.tmp.<pid>.<seq>`)? Deliberately strict — GC must
+/// never reap a user's file that merely contains ".tmp".
+fn is_temp_file_name(name: &str) -> bool {
+    let Some(pos) = name.rfind(".tmp.") else {
+        return false;
+    };
+    let digits = |s: &str| !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit());
+    let mut parts = name[pos + ".tmp.".len()..].splitn(2, '.');
+    let pid_ok = parts.next().map(digits).unwrap_or(false);
+    let seq_ok = parts.next().map(digits).unwrap_or(false);
+    pid_ok && seq_ok
+}
+
+/// The storage contract: everything the engine needs from a result
+/// store, whatever its on-disk shape. Object-safe — the coordinator,
+/// the diff gate and the CLI all run against `&dyn ResultStore`.
+pub trait ResultStore: std::fmt::Debug + Send + Sync {
+    /// Short backend name for listings (`"dir"`, `"pack"`).
+    fn backend_id(&self) -> &'static str;
+
+    /// The store's home directory. Sidecar files that are not records
+    /// (the calibration file) live here on every backend.
+    fn dir(&self) -> &Path;
+
     /// Writes are refused. Golden baselines open through this so no code
     /// path — not even a buggy one — can clobber a pinned record.
+    fn is_read_only(&self) -> bool;
+
+    /// Load a job's record regardless of the sim params it was computed
+    /// under (the render path: tables show what the store holds).
+    /// Malformed or mismatched records read as a miss.
+    fn load(&self, job: &Job) -> Option<JobResult>;
+
+    /// Load a job's cached result only if it was computed under the same
+    /// sim params (the execution path: anything else must re-run rather
+    /// than silently serve stale numbers).
+    fn load_if(&self, job: &Job, params_fp: u64) -> Option<JobResult>;
+
+    /// Persist a completed job. Atomic per record on every backend:
+    /// concurrent in-process writers can never leave a truncated record
+    /// or trip over each other.
+    fn save(
+        &self,
+        job: &Job,
+        result: &JobResult,
+        params_fp: u64,
+    ) -> anyhow::Result<()>;
+
+    /// Ids of every record in the store, sorted. No record is parsed, so
+    /// a corrupt record still shows up here (unlike
+    /// [`ResultStore::load_all`], which can only return what parses) and
+    /// large stores can be set-compared cheaply.
+    fn ids(&self) -> Vec<String>;
+
+    /// All parseable records in the store, sorted by id (physical order
+    /// is backend-dependent; the sort keeps listings deterministic).
+    fn load_all(&self) -> Vec<(Job, JobResult)>;
+}
+
+/// A results directory: one JSON record file per completed job.
+#[derive(Debug, Clone)]
+pub struct DirStore {
+    dir: PathBuf,
     read_only: bool,
 }
 
-impl ResultStore {
-    pub fn new(dir: impl Into<PathBuf>) -> ResultStore {
-        ResultStore { dir: dir.into(), read_only: false }
+impl DirStore {
+    /// Open `dir` for reading and writing. Orphaned temp files from a
+    /// killed writer (older than a safety margin) are reaped on open.
+    pub fn new(dir: impl Into<PathBuf>) -> DirStore {
+        let store = DirStore { dir: dir.into(), read_only: false };
+        store.gc_temp_files(TEMP_GC_MARGIN);
+        store
     }
 
     /// A read-only view of `dir`: [`ResultStore::save`] fails instead of
     /// writing. The baseline side of `jobs diff` opens golden
-    /// directories through this.
-    pub fn read_only(dir: impl Into<PathBuf>) -> ResultStore {
-        ResultStore { dir: dir.into(), read_only: true }
-    }
-
-    pub fn dir(&self) -> &Path {
-        &self.dir
-    }
-
-    pub fn is_read_only(&self) -> bool {
-        self.read_only
+    /// directories through this. Nothing is modified — not even orphaned
+    /// temp files are reaped.
+    pub fn read_only(dir: impl Into<PathBuf>) -> DirStore {
+        DirStore { dir: dir.into(), read_only: true }
     }
 
     /// Record path for a job.
@@ -74,24 +197,44 @@ impl ResultStore {
         self.dir.join(format!("{}.json", job.id()))
     }
 
-    /// Load a job's record regardless of the sim params it was computed
-    /// under (the render path: tables show what the store holds).
-    /// Malformed or mismatched records read as a miss.
-    pub fn load(&self, job: &Job) -> Option<JobResult> {
+    /// Delete temp files matching [`write_atomic`]'s naming pattern that
+    /// are older than `margin` (see [`gc_temp_files_in`]). Returns the
+    /// number reaped.
+    pub fn gc_temp_files(&self, margin: Duration) -> usize {
+        gc_temp_files_in(&self.dir, margin)
+    }
+
+    fn read_record(&self, job: &Job) -> Option<(Job, JobResult, u64)> {
         let text = std::fs::read_to_string(self.path_for(job)).ok()?;
-        match record_from_json(&text) {
-            Ok((stored, result, _)) if stored == *job => Some(result),
+        record_from_json(&text).ok()
+    }
+}
+
+impl ResultStore for DirStore {
+    fn backend_id(&self) -> &'static str {
+        "dir"
+    }
+
+    fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn is_read_only(&self) -> bool {
+        self.read_only
+    }
+
+    fn load(&self, job: &Job) -> Option<JobResult> {
+        match self.read_record(job) {
+            Some((stored, result, _)) if stored == *job => Some(result),
             _ => None,
         }
     }
 
-    /// Load a job's cached result only if it was computed under the same
-    /// sim params (the execution path: anything else must re-run rather
-    /// than silently serve stale numbers).
-    pub fn load_if(&self, job: &Job, params_fp: u64) -> Option<JobResult> {
-        let text = std::fs::read_to_string(self.path_for(job)).ok()?;
-        match record_from_json(&text) {
-            Ok((stored, result, fp)) if stored == *job && fp == params_fp => {
+    fn load_if(&self, job: &Job, params_fp: u64) -> Option<JobResult> {
+        match self.read_record(job) {
+            Some((stored, result, fp))
+                if stored == *job && fp == params_fp =>
+            {
                 Some(result)
             }
             _ => None,
@@ -101,7 +244,7 @@ impl ResultStore {
     /// Persist a completed job (atomic: writer-unique temp file + rename,
     /// so concurrent writers — threads or whole processes — can never
     /// leave a truncated record or trip over each other's temp files).
-    pub fn save(
+    fn save(
         &self,
         job: &Job,
         result: &JobResult,
@@ -119,12 +262,7 @@ impl ResultStore {
         )
     }
 
-    /// Ids of every record file in the store — `*.json` file stems that
-    /// look like job hashes (16 hex chars), sorted. No record is parsed,
-    /// so a corrupt record still shows up here (unlike
-    /// [`Self::load_all`], which can only return what parses) and large
-    /// stores can be set-compared cheaply.
-    pub fn ids(&self) -> Vec<String> {
+    fn ids(&self) -> Vec<String> {
         let Ok(entries) = std::fs::read_dir(&self.dir) else {
             return Vec::new();
         };
@@ -136,25 +274,28 @@ impl ResultStore {
                     return None;
                 }
                 let stem = p.file_stem()?.to_str()?;
-                (stem.len() == 16
-                    && stem.bytes().all(|b| b.is_ascii_hexdigit()))
-                .then(|| stem.to_string())
+                is_record_stem(stem).then(|| stem.to_string())
             })
             .collect();
         out.sort();
         out
     }
 
-    /// All parseable records in the store, sorted by id (directory order
-    /// is filesystem-dependent; the sort keeps listings deterministic).
-    pub fn load_all(&self) -> Vec<(Job, JobResult)> {
+    fn load_all(&self) -> Vec<(Job, JobResult)> {
         let Ok(entries) = std::fs::read_dir(&self.dir) else {
             return Vec::new();
         };
         let mut out: Vec<(Job, JobResult)> = entries
             .filter_map(|e| e.ok())
             .filter(|e| {
-                e.path().extension().map(|x| x == "json").unwrap_or(false)
+                // The same stem filter as `ids`: a parseable file under a
+                // non-record name (a stray copy, a sidecar) is not a cell.
+                let p = e.path();
+                p.extension().map(|x| x == "json").unwrap_or(false)
+                    && p.file_stem()
+                        .and_then(|s| s.to_str())
+                        .map(is_record_stem)
+                        .unwrap_or(false)
             })
             .filter_map(|e| std::fs::read_to_string(e.path()).ok())
             .filter_map(|text| record_from_json(&text).ok())
@@ -205,13 +346,14 @@ mod tests {
             granularity_us: v * 3.0,
             peak_flops: v * 4.0,
             checksum: None,
+            samples: None,
         }
     }
 
     #[test]
     fn save_load_round_trip() {
         let dir = tmp("round_trip");
-        let store = ResultStore::new(&dir);
+        let store = DirStore::new(&dir);
         let j = job(64);
         assert!(store.load(&j).is_none());
         store.save(&j, &result(0.5), 7).unwrap();
@@ -224,7 +366,7 @@ mod tests {
     #[test]
     fn load_if_rejects_foreign_params() {
         let dir = tmp("params_fp");
-        let store = ResultStore::new(&dir);
+        let store = DirStore::new(&dir);
         let j = job(64);
         store.save(&j, &result(1.0), 7).unwrap();
         assert_eq!(store.load_if(&j, 7), Some(result(1.0)));
@@ -240,7 +382,7 @@ mod tests {
     #[test]
     fn corrupt_record_reads_as_miss() {
         let dir = tmp("corrupt");
-        let store = ResultStore::new(&dir);
+        let store = DirStore::new(&dir);
         let j = job(64);
         store.save(&j, &result(1.0), 7).unwrap();
         std::fs::write(store.path_for(&j), "{not json").unwrap();
@@ -251,11 +393,11 @@ mod tests {
     #[test]
     fn read_only_store_loads_but_refuses_writes() {
         let dir = tmp("read_only");
-        let writer = ResultStore::new(&dir);
+        let writer = DirStore::new(&dir);
         let j = job(64);
         writer.save(&j, &result(1.0), 7).unwrap();
 
-        let pinned = ResultStore::read_only(&dir);
+        let pinned = DirStore::read_only(&dir);
         assert!(pinned.is_read_only());
         assert_eq!(pinned.load(&j), Some(result(1.0)));
         let err = pinned.save(&j, &result(2.0), 7).unwrap_err();
@@ -268,7 +410,7 @@ mod tests {
     #[test]
     fn load_all_sorted_and_complete() {
         let dir = tmp("load_all");
-        let store = ResultStore::new(&dir);
+        let store = DirStore::new(&dir);
         for g in [1u64, 2, 4, 8] {
             store.save(&job(g), &result(g as f64), 7).unwrap();
         }
@@ -284,7 +426,7 @@ mod tests {
     #[test]
     fn ids_lists_records_without_parsing_and_skips_non_records() {
         let dir = tmp("ids");
-        let store = ResultStore::new(&dir);
+        let store = DirStore::new(&dir);
         let j = job(64);
         store.save(&j, &result(1.0), 7).unwrap();
         // A corrupt record keeps its id visible (load_all would drop it).
@@ -298,6 +440,58 @@ mod tests {
         want.sort();
         assert_eq!(store.ids(), want);
         assert_eq!(store.load_all().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_all_applies_the_same_stem_filter_as_ids() {
+        // Regression: a *parseable* record under a non-record file name
+        // (a stray copy) used to be listed by load_all but not by ids.
+        // Both must ignore it.
+        let dir = tmp("stem_filter");
+        let store = DirStore::new(&dir);
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        let record_bytes = std::fs::read(store.path_for(&j)).unwrap();
+        std::fs::write(dir.join("copy-of-a-record.json"), &record_bytes)
+            .unwrap();
+        assert_eq!(store.ids(), vec![j.id()]);
+        assert_eq!(store.load_all().len(), 1, "stray copy counted as a cell");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn temp_file_gc_reaps_old_orphans_and_spares_fresh_ones() {
+        let dir = tmp("temp_gc");
+        let store = DirStore::new(&dir);
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        let orphan = dir.join("0123456789abcdef.json.tmp.999.0");
+        std::fs::write(&orphan, "{truncat").unwrap();
+        std::fs::write(dir.join("keep.tmp.txt"), "not a temp file").unwrap();
+
+        // Fresh orphans are spared (a live writer may own them)...
+        assert_eq!(store.gc_temp_files(Duration::from_secs(3600)), 0);
+        assert!(orphan.exists());
+        // ...but with the margin elapsed (zero here) they are reaped.
+        assert_eq!(store.gc_temp_files(Duration::ZERO), 1);
+        assert!(!orphan.exists());
+        // The published record and the non-matching file survive.
+        assert!(store.load(&j).is_some());
+        assert!(dir.join("keep.tmp.txt").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dir_store_is_usable_as_a_trait_object() {
+        let dir = tmp("dyn");
+        let store = DirStore::new(&dir);
+        let j = job(64);
+        let dynamic: &dyn ResultStore = &store;
+        assert_eq!(dynamic.backend_id(), "dir");
+        dynamic.save(&j, &result(1.0), 7).unwrap();
+        assert_eq!(dynamic.load(&j), Some(result(1.0)));
+        assert_eq!(dynamic.ids(), vec![j.id()]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -251,6 +251,7 @@ pub fn fig1_table(rows: &[Fig1Row], grains: &[u64]) -> Table {
                     granularity_us: run.granularity_us,
                     peak_flops: r.peak_flops,
                     checksum: None,
+                    samples: None,
                 },
             );
         }

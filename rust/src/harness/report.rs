@@ -67,6 +67,51 @@ impl Table {
         out
     }
 
+    /// A LaTeX `tabular` block: left-aligned label column, right-aligned
+    /// data columns, one `\hline` under the header. Specials are escaped
+    /// and `a ± b` cells (the [`pm`] format) are set in math mode as
+    /// `$a \pm b$`, so `jobs table --latex` output pastes straight into
+    /// a paper.
+    pub fn to_latex(&self) -> String {
+        let esc = |c: &str| -> String {
+            if let Some((a, b)) = c.split_once(" ± ") {
+                if a.parse::<f64>().is_ok() && b.parse::<f64>().is_ok() {
+                    return format!("${a} \\pm {b}$");
+                }
+            }
+            let mut out = String::new();
+            for ch in c.chars() {
+                match ch {
+                    '&' | '%' | '#' | '_' | '$' | '{' | '}' => {
+                        out.push('\\');
+                        out.push(ch);
+                    }
+                    '~' => out.push_str("\\textasciitilde{}"),
+                    '^' => out.push_str("\\textasciicircum{}"),
+                    '\\' => out.push_str("\\textbackslash{}"),
+                    _ => out.push(ch),
+                }
+            }
+            out
+        };
+        let mut spec = String::from("l");
+        for _ in 1..self.headers.len() {
+            spec.push('r');
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\\begin{{tabular}}{{{spec}}}");
+        let join = |cells: &[String]| {
+            cells.iter().map(|c| esc(c)).collect::<Vec<_>>().join(" & ")
+        };
+        let _ = writeln!(out, "{} \\\\", join(&self.headers));
+        out.push_str("\\hline\n");
+        for r in &self.rows {
+            let _ = writeln!(out, "{} \\\\", join(r));
+        }
+        out.push_str("\\end{tabular}\n");
+        out
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         let esc = |c: &str| {
@@ -128,6 +173,23 @@ mod tests {
         t.row(&["4096".into(), "9.8".into()]);
         t.row(&["16".into(), "3.9".into()]);
         assert_eq!(t.to_dat(), "# grain metg_us\n4096 9.8\n16 3.9\n");
+    }
+
+    #[test]
+    fn latex_layout_escapes_and_sets_pm_in_math_mode() {
+        let mut t = Table::new(&["System", "METG(50%) µs", "wall s"]);
+        t.row(&["charm_8b".into(), "9.8 ± 0.2".into(), "0.500".into()]);
+        let tex = t.to_latex();
+        assert!(tex.starts_with("\\begin{tabular}{lrr}\n"), "{tex}");
+        assert!(tex.ends_with("\\end{tabular}\n"), "{tex}");
+        assert!(tex.contains("METG(50\\%) µs"), "{tex}");
+        assert!(tex.contains("charm\\_8b"), "{tex}");
+        assert!(tex.contains("$9.8 \\pm 0.2$"), "{tex}");
+        assert!(tex.contains("\\hline"), "{tex}");
+        // Every body line a table row: `... \\` terminated.
+        for line in tex.lines().filter(|l| l.contains(" & ")) {
+            assert!(line.ends_with(" \\\\"), "{line}");
+        }
     }
 
     #[test]

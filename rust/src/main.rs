@@ -14,14 +14,26 @@
 //!
 //! repro jobs list  [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns|fig5_stress|fig2_huge] [--shard k/N]
 //! repro jobs run   [--campaign ...] [--native] [--results DIR] [--shard k/N] [--threads N]
-//!                  [--payloads 64,65536] [--net wire|nic]
-//! repro jobs table [--campaign ...] [--native] [--results DIR]
+//!                  [--payloads 64,65536] [--net wire|nic] [--reps N] [--warmup N]
+//! repro jobs table [--campaign ...] [--native] [--results DIR] [--latex]
 //! repro jobs dat   [--campaign ...] [--native] [--results DIR]
 //! repro jobs calibrate [--results DIR] [--export FILE | --import FILE]
 //! repro jobs snapshot [--campaign ...] [--baseline DIR]      # pin goldens
 //! repro jobs diff  [--campaign ...] [--baseline DIR] [--tol X] [--strict]
+//! repro jobs pack  [--results DIR]                           # compact to results.pack
 //! repro jobs bench-sim [--out BENCH_sim.json] [--steps N]    # DES throughput
 //! ```
+//!
+//! Every `jobs` action reads/writes records through a [`ResultStore`]
+//! backend selected by `--store dir|pack` (default `dir`, one JSON file
+//! per cell). `--store pack` serves the same records from an indexed
+//! single-file log, `results.pack`, built by `jobs pack` from an
+//! existing directory store (also compacting superseded records of a
+//! previous pack). `jobs diff` applies `--store` to its live side only;
+//! golden baselines are always plain directories. `--reps N` runs each
+//! native cell N timed times (plus `--warmup` untimed ones), persists
+//! every sample (record schema v4) and renders median ± 99% CI;
+//! `jobs table --latex` emits the table as a LaTeX `tabular` block.
 //!
 //! The `jobs` family is the engine path: enumerate an artifact's cells as
 //! content-hashed jobs, execute them sharded with cached results under
@@ -63,8 +75,8 @@ use taskbench_amt::core::{
     DependencePattern, GraphConfig, KernelConfig, TaskGraph,
 };
 use taskbench_amt::engine::{
-    Campaign, CampaignKind, DiffTolerances, JobResult, ReplayBackend,
-    ResultStore,
+    pack_results_dir, Campaign, CampaignKind, DiffTolerances, DirStore,
+    JobResult, PackStore, ReplayBackend, ResultStore,
 };
 use taskbench_amt::experiments;
 use taskbench_amt::metg::measure_peak_flops;
@@ -75,10 +87,11 @@ use taskbench_amt::sim::{calibrate, SimParams};
 fn usage() -> ! {
     eprintln!(
         "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
-         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns|fig5_stress|fig2_huge] [--native] [--payloads A,B] [--net wire|nic] [--key value ...]\n\
+         \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns|fig5_stress|fig2_huge] [--native] [--payloads A,B] [--net wire|nic] [--store dir|pack] [--reps N] [--warmup N] [--latex] [--key value ...]\n\
          \x20      repro jobs calibrate [--results DIR] [--export FILE | --import FILE]\n\
          \x20      repro jobs snapshot [--campaign ...] [--baseline DIR]\n\
          \x20      repro jobs diff [--campaign ...] [--baseline DIR] [--tol X] [--strict]\n\
+         \x20      repro jobs pack [--results DIR]\n\
          \x20      repro jobs bench-sim [--out BENCH_sim.json] [--steps N] [--overdecompose N]\n\
          see the crate docs for details"
     );
@@ -289,6 +302,11 @@ fn jobs_campaign(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Campaig
     campaign.tasks_per_core =
         get_list(m, "overdecompose", campaign.tasks_per_core.clone());
     campaign.cores_per_node = get(m, "cores", campaign.cores_per_node);
+    // Timed reps / untimed warmups per cell. Both are hashed job
+    // dimensions (they always were), so --reps 5 cells cache separately
+    // from the single-shot defaults. 0 reps would measure nothing.
+    campaign.reps = get(m, "reps", campaign.reps).max(1);
+    campaign.warmup = get(m, "warmup", campaign.warmup);
     if let Some(v) = m.get("grains") {
         // Explicit grain ladder (e.g. a time-budgeted CI smoke slice).
         // A malformed token is a hard error — silently falling back to
@@ -413,9 +431,29 @@ fn jobs_shard(m: &HashMap<String, String>, cfg: &ExperimentConfig) -> Shard {
     })
 }
 
+/// Open the `--store`-selected backend over a results directory:
+/// `dir` (default) = one JSON record file per cell; `pack` = the indexed
+/// single-file log `jobs pack` builds.
+fn open_store(m: &HashMap<String, String>, dir: String) -> Box<dyn ResultStore> {
+    match m.get("store").map(String::as_str).unwrap_or("dir") {
+        "dir" => Box::new(DirStore::new(dir)),
+        "pack" => match PackStore::open(&dir) {
+            Ok(s) => Box::new(s),
+            Err(e) => {
+                eprintln!("opening pack store in {dir}: {e:#}");
+                std::process::exit(1);
+            }
+        },
+        other => {
+            eprintln!("bad --store `{other}` (want dir|pack)");
+            std::process::exit(2);
+        }
+    }
+}
+
 fn jobs_results(
     campaign: &Campaign,
-    store: &ResultStore,
+    store: &dyn ResultStore,
 ) -> (HashMap<String, JobResult>, usize) {
     let mut map = HashMap::new();
     let mut missing = 0usize;
@@ -431,7 +469,7 @@ fn jobs_results(
 }
 
 /// `jobs calibrate`: manage the store's persisted calibration.
-fn cmd_jobs_calibrate(store: &ResultStore, m: &HashMap<String, String>) {
+fn cmd_jobs_calibrate(store: &dyn ResultStore, m: &HashMap<String, String>) {
     use taskbench_amt::engine::params;
     fn fail(e: anyhow::Error) -> ! {
         eprintln!("jobs calibrate failed: {e:#}");
@@ -474,11 +512,36 @@ fn cmd_jobs_calibrate(store: &ResultStore, m: &HashMap<String, String>) {
 
 fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
     let cfg = base_config(m);
-    let store = ResultStore::new(
-        m.get("results").cloned().unwrap_or_else(|| cfg.results_dir.clone()),
-    );
+    let results_dir =
+        m.get("results").cloned().unwrap_or_else(|| cfg.results_dir.clone());
+    if action == "pack" {
+        // Fold the directory's record files (and any earlier pack's
+        // still-live frames) into one indexed results.pack. The record
+        // files are kept — the pack is a parallel, verified view.
+        match pack_results_dir(std::path::Path::new(&results_dir)) {
+            Ok(s) => {
+                println!(
+                    "packed {} records into {}/{} ({} from record files, \
+                     {} carried from the previous pack); read them with \
+                     `--store pack`",
+                    s.records,
+                    results_dir,
+                    taskbench_amt::engine::pack::PACK_FILE,
+                    s.from_files,
+                    s.carried,
+                );
+            }
+            Err(e) => {
+                eprintln!("jobs pack failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    let store = open_store(m, results_dir);
+    let store = store.as_ref();
     if action == "calibrate" {
-        cmd_jobs_calibrate(&store, m);
+        cmd_jobs_calibrate(store, m);
         return;
     }
     if action == "bench-sim" {
@@ -520,12 +583,12 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
     // matches what `run` would actually do.
     let params = if get(m, "calibrate", cfg.calibrate) {
         match action {
-            "run" => taskbench_amt::engine::params::load_or_calibrate(&store)
+            "run" => taskbench_amt::engine::params::load_or_calibrate(store)
                 .unwrap_or_else(|e| {
                     eprintln!("calibration failed: {e:#}");
                     std::process::exit(1);
                 }),
-            _ => taskbench_amt::engine::params::load_persisted(&store)
+            _ => taskbench_amt::engine::params::load_persisted(store)
                 .unwrap_or_default(),
         }
     } else {
@@ -540,34 +603,44 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                 let fp = taskbench_amt::engine::job::job_fingerprint_with(
                     job, sim_fp,
                 );
-                let hit = if store.load_if(job, fp).is_some() {
-                    "cached"
-                } else {
-                    "-"
+                // A cached cell also reports how many wall samples its
+                // record holds (schema v4; pre-v4 records count as 1).
+                let (hit, samples) = match store.load_if(job, fp) {
+                    Some(r) => (
+                        "cached",
+                        r.samples
+                            .as_ref()
+                            .map_or(1, Vec::len)
+                            .to_string(),
+                    ),
+                    None => ("-", "-".to_string()),
                 };
                 // Backend + build-config summary first: cached Fig 3 /
                 // ablation cells are distinguishable at a glance.
                 println!(
-                    "{}  {:<8}  {:<6}  {:<28}  {}",
+                    "{}  {:<8}  {:<6}  {:>2}  {:<28}  {}",
                     job.id(),
                     job.spec.mode.id(),
                     hit,
+                    samples,
                     job.spec.config_summary(),
                     job.spec.canonical(),
                 );
             }
             eprintln!(
-                "{} jobs in campaign {} (shard {shard}: {})",
+                "{} jobs in campaign {} (shard {shard}: {}; {} store in {})",
                 jobs.len(),
                 campaign.kind.id(),
                 mine.len(),
+                store.backend_id(),
+                store.dir().display(),
             );
         }
         "run" => {
             let threads = get(m, "threads", cfg.threads);
             let jobs = campaign.jobs();
             let summary =
-                run_jobs(&jobs, Some(&store), shard, threads, &params)
+                run_jobs(&jobs, Some(store), shard, threads, &params)
                     .unwrap_or_else(|e| {
                         eprintln!("jobs run failed: {e:#}");
                         std::process::exit(1);
@@ -581,7 +654,7 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
             );
         }
         "table" => {
-            let (map, missing) = jobs_results(&campaign, &store);
+            let (map, missing) = jobs_results(&campaign, store);
             if missing > 0 {
                 eprintln!(
                     "warning: {missing} cells not in {} yet (shown as `?`) — \
@@ -589,11 +662,16 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                     store.dir().display()
                 );
             }
-            println!("# campaign {}", campaign.kind.id());
-            println!("{}", campaign.table(&map).to_markdown());
+            if get(m, "latex", false) {
+                println!("% campaign {}", campaign.kind.id());
+                print!("{}", campaign.table(&map).to_latex());
+            } else {
+                println!("# campaign {}", campaign.kind.id());
+                println!("{}", campaign.table(&map).to_markdown());
+            }
         }
         "dat" => {
-            let (map, missing) = jobs_results(&campaign, &store);
+            let (map, missing) = jobs_results(&campaign, store);
             if missing > 0 {
                 eprintln!(
                     "warning: {missing} cells not in {} yet (omitted)",
@@ -608,8 +686,11 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
             // baseline must not be served back as cache hits, or a
             // re-pin after an intentional metric change would silently
             // keep the old numbers.
+            // Golden baselines are always plain directory stores —
+            // human-diffable, one reviewable file per cell — whatever
+            // `--store` says about the results cache.
             let bdir = campaign.baseline_dir(&baseline_root(m));
-            let bstore = ResultStore::new(&bdir);
+            let bstore = DirStore::new(&bdir);
             let threads = get(m, "threads", cfg.threads);
             let jobs = campaign.jobs();
             // Drop records for cells the campaign no longer enumerates
@@ -670,11 +751,11 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
             // cache is opt-in, only used when --results is passed
             // explicitly (e.g. to share one fresh store across the
             // shards or campaigns of a single gating run).
-            let live_store =
-                m.get("results").map(|d| ResultStore::new(d.clone()));
+            let live_store: Option<Box<dyn ResultStore>> =
+                m.get("results").map(|d| open_store(m, d.clone()));
             let report = diff_jobs(
                 &jobs,
-                live_store.as_ref(),
+                live_store.as_deref(),
                 &baseline,
                 shard,
                 threads,

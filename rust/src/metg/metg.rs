@@ -1,5 +1,7 @@
 //! METG extraction from an efficiency curve.
 
+use crate::engine::stats::linear_fit;
+
 use super::sweep::GrainRun;
 
 /// One point on the efficiency curve.
@@ -13,11 +15,19 @@ pub struct EfficiencyPoint {
 /// Compute METG(threshold): the smallest task granularity at which the
 /// system still reaches `threshold` efficiency (0.5 in the paper).
 ///
-/// The curve walks from large grains (high efficiency) to small; METG is
-/// the log-granularity interpolated crossing of the threshold, exactly as
-/// Task Bench computes it. Returns `None` if the system never reaches the
-/// threshold (reported as "no METG" in the tables), and the smallest
-/// measured granularity if even the smallest grain stays above it.
+/// The curve walks from large grains (high efficiency) to small, exactly
+/// as Task Bench does: a swept point sitting exactly on the threshold IS
+/// the METG, and a recovery after the first crossing never rescues it.
+/// Between the bracketing pair the crossing is *regressed*, not snapped:
+/// the bracket is widened by at most one monotone neighbor on each side
+/// and a least-squares line of efficiency against log-granularity is
+/// solved for the threshold (clamped to the bracket). Degenerate windows
+/// — a bare two-point bracket or a fit with no slope — fall back to the
+/// classic two-point log-space interpolation, bit-identically.
+///
+/// Returns `None` if the system never reaches the threshold (reported as
+/// "no METG" in the tables), and the smallest measured granularity if
+/// even the smallest grain stays above it.
 pub fn metg_from_curve(
     runs: &[GrainRun],
     peak_flops: f64,
@@ -35,26 +45,70 @@ pub fn metg_from_curve(
     pts.sort_by(|a, b| b.granularity_us.total_cmp(&a.granularity_us));
 
     let mut best: Option<f64> = None;
-    let mut prev: Option<EfficiencyPoint> = None;
-    for p in pts {
+    for i in 0..pts.len() {
+        let p = pts[i];
         if p.efficiency >= threshold {
             best = Some(p.granularity_us);
-            prev = Some(p);
         } else {
-            if let Some(q) = prev {
-                // Interpolate the crossing in log-granularity space.
-                let (e0, e1) = (q.efficiency, p.efficiency);
-                if e0 > e1 {
-                    let f = (e0 - threshold) / (e0 - e1);
-                    let lg = q.granularity_us.ln()
-                        + f * (p.granularity_us.ln() - q.granularity_us.ln());
-                    best = Some(lg.exp());
-                }
+            // First point below the threshold: if a point above
+            // preceded it, locate the crossing inside the bracket.
+            // An exact hit (previous efficiency == threshold) already
+            // set `best` to that swept granularity — keep it exact.
+            if i > 0 && pts[i - 1].efficiency > threshold {
+                best = Some(locate_crossing(&pts, i, threshold));
             }
             break;
         }
     }
     best
+}
+
+/// The threshold crossing between `pts[i-1]` (above) and `pts[i]`
+/// (below), in granularity microseconds.
+///
+/// The regression window is the bracketing pair widened by at most one
+/// neighbor per side, and only where the curve stays monotone — a
+/// non-monotone neighbor (a dip or a recovery) describes a different
+/// regime and would drag the fitted line away from the crossing.
+fn locate_crossing(
+    pts: &[EfficiencyPoint],
+    i: usize,
+    threshold: f64,
+) -> f64 {
+    let q = pts[i - 1]; // above the threshold, larger grain
+    let p = pts[i]; // below the threshold, smaller grain
+    let lo = if i >= 2 && pts[i - 2].efficiency >= q.efficiency {
+        i - 2
+    } else {
+        i - 1
+    };
+    let hi = if i + 1 < pts.len() && pts[i + 1].efficiency <= p.efficiency {
+        i + 1
+    } else {
+        i
+    };
+    if hi - lo >= 2 {
+        let window = &pts[lo..=hi];
+        let xs: Vec<f64> =
+            window.iter().map(|t| t.granularity_us.ln()).collect();
+        let ys: Vec<f64> = window.iter().map(|t| t.efficiency).collect();
+        if let Some((slope, intercept)) = linear_fit(&xs, &ys) {
+            if slope > 0.0 {
+                // Solve the fitted line for the threshold; the answer
+                // stays inside the bracket whatever the fit says.
+                let lg = ((threshold - intercept) / slope)
+                    .clamp(p.granularity_us.ln(), q.granularity_us.ln());
+                return lg.exp();
+            }
+        }
+    }
+    // Two-point bracket (or a degenerate fit): Task Bench's classic
+    // log-space interpolation, unchanged.
+    let (e0, e1) = (q.efficiency, p.efficiency);
+    let f = (e0 - threshold) / (e0 - e1);
+    let lg = q.granularity_us.ln()
+        + f * (p.granularity_us.ln() - q.granularity_us.ln());
+    lg.exp()
 }
 
 #[cfg(test)]
@@ -144,6 +198,44 @@ mod tests {
     #[test]
     fn empty_curve_has_no_metg() {
         assert!(metg_from_curve(&[], 1.0, 0.5).is_none());
+    }
+
+    #[test]
+    fn monotone_neighbors_join_the_regression_window() {
+        // Four monotone points at ln-granularities 4, 3, 2, 1 bracketing
+        // the threshold between the middle pair. Both neighbors qualify,
+        // so the crossing comes from the least-squares line over all
+        // four — hand-computed:
+        //   xs mean 2.5, ys mean 0.4875
+        //   Sxy = 1.5·0.4125 + 0.5·0.0625 + 0.5·0.0875 + 1.5·0.3875
+        //       = 1.275;  Sxx = 5  →  slope 0.255
+        //   intercept = 0.4875 − 0.255·2.5 = −0.15
+        //   ln METG = (0.5 + 0.15)/0.255 = 130/51 ≈ 2.5490196
+        // distinct from the two-point interpolation's 3 − 1/3 ≈ 2.6667.
+        let runs = vec![
+            run((4.0f64).exp(), 0.9),
+            run((3.0f64).exp(), 0.55),
+            run((2.0f64).exp(), 0.4),
+            run((1.0f64).exp(), 0.1),
+        ];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        let want = (130.0f64 / 51.0).exp();
+        assert!((m - want).abs() / want < 1e-9, "{m} vs {want}");
+        let two_point = (3.0 - 1.0 / 3.0f64).exp();
+        assert!(
+            (m - two_point).abs() / two_point > 1e-3,
+            "regression must differ from two-point interpolation here"
+        );
+    }
+
+    #[test]
+    fn exact_hit_stays_exact_even_with_a_regression_window() {
+        // The middle point sits exactly on the threshold, and its
+        // neighbors are monotone — a window exists, but the swept point
+        // IS the METG and must come back untouched by any fit.
+        let runs = vec![run(100.0, 0.9), run(10.0, 0.5), run(1.0, 0.1)];
+        let m = metg_from_curve(&runs, 1.0, 0.5).unwrap();
+        assert_eq!(m, 10.0, "exact threshold hit must be returned verbatim");
     }
 
     #[test]

@@ -16,7 +16,7 @@ use taskbench_amt::coordinator::{run_jobs, Shard};
 use taskbench_amt::core::DependencePattern;
 use taskbench_amt::engine::backend::{job_graph, Backend, Backends, SimBackend};
 use taskbench_amt::engine::{
-    Campaign, CampaignKind, ExecMode, Job, JobSpec, ResultStore,
+    Campaign, CampaignKind, DirStore, ExecMode, Job, JobSpec, ResultStore,
 };
 use taskbench_amt::runtimes::{SystemConfig, SystemKind};
 use taskbench_amt::sim::SimParams;
@@ -124,7 +124,7 @@ fn fig3_job_hashes_are_pairwise_distinct() {
 #[test]
 fn fig3_campaign_caches_and_reruns_hit_free() {
     let dir = tmpdir("fig3_cache");
-    let store = ResultStore::new(&dir);
+    let store = DirStore::new(&dir);
     let mut c =
         Campaign::new(CampaignKind::Fig3, Vec::new(), 10, &[1 << 4, 1 << 8]);
     c.cores_per_node = 4;
@@ -160,7 +160,7 @@ fn fig3_campaign_caches_and_reruns_hit_free() {
 #[test]
 fn native_and_sim_results_cache_under_distinct_fingerprints() {
     let dir = tmpdir("native_vs_sim");
-    let store = ResultStore::new(&dir);
+    let store = DirStore::new(&dir);
     let params = SimParams::default();
 
     let sim_job = Job::new(small_spec(ExecMode::Sim));

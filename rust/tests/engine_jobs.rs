@@ -10,7 +10,7 @@ use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 
 use taskbench_amt::coordinator::{run_jobs, Shard};
-use taskbench_amt::engine::{Campaign, CampaignKind, Job, ResultStore};
+use taskbench_amt::engine::{Campaign, CampaignKind, DirStore, Job, ResultStore};
 use taskbench_amt::runtimes::SystemKind;
 use taskbench_amt::sim::SimParams;
 
@@ -62,7 +62,7 @@ fn enumeration_is_deterministic_and_collision_free() {
 #[test]
 fn rerun_of_completed_campaign_is_pure_cache_hit() {
     let dir = tmpdir("cache_hit");
-    let store = ResultStore::new(&dir);
+    let store = DirStore::new(&dir);
     let campaign = small_campaign();
     let jobs = campaign.jobs();
     let params = SimParams::default();
@@ -82,7 +82,7 @@ fn rerun_of_completed_campaign_is_pure_cache_hit() {
 #[test]
 fn interrupted_campaign_resumes_only_the_missing_cells() {
     let dir = tmpdir("resume");
-    let store = ResultStore::new(&dir);
+    let store = DirStore::new(&dir);
     let campaign = small_campaign();
     let jobs = campaign.jobs();
     let params = SimParams::default();
@@ -119,8 +119,8 @@ fn two_shards_partition_and_merge_byte_identically() {
     // Serial run vs merged sharded run, byte for byte.
     let serial_dir = tmpdir("serial");
     let sharded_dir = tmpdir("sharded");
-    let serial = ResultStore::new(&serial_dir);
-    let sharded = ResultStore::new(&sharded_dir);
+    let serial = DirStore::new(&serial_dir);
+    let sharded = DirStore::new(&sharded_dir);
     run_jobs(&jobs, Some(&serial), Shard::full(), 1, &params).unwrap();
     run_jobs(&jobs, Some(&sharded), s1, 2, &params).unwrap();
     run_jobs(&jobs, Some(&sharded), s2, 2, &params).unwrap();
@@ -151,7 +151,7 @@ fn two_shards_partition_and_merge_byte_identically() {
 #[test]
 fn table_renders_from_store_without_executing() {
     let dir = tmpdir("table");
-    let store = ResultStore::new(&dir);
+    let store = DirStore::new(&dir);
     let campaign = small_campaign();
     let jobs = campaign.jobs();
     let params = SimParams::default();
@@ -172,7 +172,7 @@ fn table_renders_from_store_without_executing() {
 #[test]
 fn store_survives_unrelated_garbage_files() {
     let dir = tmpdir("garbage");
-    let store = ResultStore::new(&dir);
+    let store = DirStore::new(&dir);
     let campaign = small_campaign();
     let jobs = campaign.jobs();
     let params = SimParams::default();

@@ -18,7 +18,7 @@ use taskbench_amt::coordinator::{diff_jobs, run_jobs, Shard};
 use taskbench_amt::core::DependencePattern;
 use taskbench_amt::engine::{
     Campaign, CampaignKind, DiffTolerances, ExecMode, Job, JobSpec,
-    ReplayBackend, ResultStore,
+    DirStore, ReplayBackend, ResultStore,
 };
 use taskbench_amt::runtimes::{SystemConfig, SystemKind};
 use taskbench_amt::sim::{NetConfig, SimParams};
@@ -44,7 +44,7 @@ fn small_campaign() -> Campaign {
 
 /// Pin `campaign` under `root/<campaign-id>/` — `jobs snapshot`.
 fn snapshot(campaign: &Campaign, root: &Path, params: &SimParams) {
-    let bstore = ResultStore::new(campaign.baseline_dir(root));
+    let bstore = DirStore::new(campaign.baseline_dir(root));
     run_jobs(&campaign.jobs(), Some(&bstore), Shard::full(), 2, params)
         .unwrap();
 }
@@ -85,7 +85,7 @@ fn perturbed_baseline_record_fails_the_diff() {
     // Nudge one pinned wall clock. The record stays parseable and keeps
     // its id (ids hash the spec, not the result), so this must surface
     // as metric drift — not as a missing cell.
-    let bstore = ResultStore::new(c.baseline_dir(&root));
+    let bstore = DirStore::new(c.baseline_dir(&root));
     let jobs = c.jobs();
     let victim = &jobs[0];
     let mut r = bstore.load(victim).unwrap();
@@ -147,7 +147,7 @@ fn checksum_mismatch_is_a_hard_failure_end_to_end() {
         reps: 1,
         warmup: 0,
     });
-    let bstore = ResultStore::new(&root);
+    let bstore = DirStore::new(&root);
     run_jobs(&[job.clone()], Some(&bstore), Shard::full(), 1, &p).unwrap();
     let mut pinned = bstore.load(&job).unwrap();
     let sum = pinned.checksum.expect("validate cells persist checksums");
@@ -179,7 +179,7 @@ fn missing_and_extra_cells_report_without_failing() {
     let p = SimParams::default();
     snapshot(&c, &root, &p);
 
-    let bstore = ResultStore::new(c.baseline_dir(&root));
+    let bstore = DirStore::new(c.baseline_dir(&root));
     let jobs = c.jobs();
     // Forget one pinned cell; pin one cell the campaign no longer has.
     std::fs::remove_file(bstore.path_for(&jobs[1])).unwrap();
@@ -216,7 +216,7 @@ fn diff_live_side_caches_like_any_run() {
     snapshot(&c, &root, &p);
 
     let baseline = ReplayBackend::open(c.baseline_dir(&root));
-    let live = ResultStore::new(&live_dir);
+    let live = DirStore::new(&live_dir);
     let first = diff_jobs(
         &c.jobs(),
         Some(&live),

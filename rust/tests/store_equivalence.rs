@@ -1,0 +1,152 @@
+//! Store-backend equivalence (ISSUE 6, satellite 3): a results
+//! directory folded into a pack via `jobs pack` must be observationally
+//! identical through the `ResultStore` trait —
+//!
+//! * `ids()` agree, including ids of corrupt records neither can parse;
+//! * `load`/`load_if`/`load_all` agree per job and in aggregate;
+//! * `jobs diff` classifies every cell identically whichever backend
+//!   serves the pinned baseline (clean, drifted, and missing cases);
+//! * read-only golden semantics carry over: a pinned pack refuses
+//!   writes exactly like a pinned directory.
+
+use std::path::PathBuf;
+
+use taskbench_amt::coordinator::{diff_jobs, run_jobs, Shard};
+use taskbench_amt::engine::job::job_fingerprint;
+use taskbench_amt::engine::pack::PACK_FILE;
+use taskbench_amt::engine::{
+    pack_results_dir, Campaign, CampaignKind, DirStore, PackStore,
+    ReplayBackend, ResultStore,
+};
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("taskbench_equiv_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn small_campaign() -> Campaign {
+    let mut c = Campaign::new(
+        CampaignKind::Fig1,
+        vec![SystemKind::MpiLike, SystemKind::CharmLike],
+        6,
+        &[1 << 4, 1 << 8],
+    );
+    c.cores_per_node = 4;
+    c
+}
+
+/// Run a campaign into a directory store, sprinkle in the hostile
+/// inputs (a corrupt record, non-record files), fold it into a pack,
+/// and hand back both views of the same directory.
+fn populated_pair(tag: &str) -> (PathBuf, Campaign, DirStore, PackStore) {
+    let dir = tmpdir(tag);
+    let c = small_campaign();
+    let files = DirStore::new(&dir);
+    let p = SimParams::default();
+    run_jobs(&c.jobs(), Some(&files), Shard::full(), 2, &p).unwrap();
+    // A corrupt record under a valid record name: its id stays visible
+    // in both backends, its payload parses in neither.
+    std::fs::write(dir.join("00000000000000ab.json"), "{corrupt").unwrap();
+    // Non-record files must stay invisible to both.
+    std::fs::write(dir.join("_calibration.json"), "{}").unwrap();
+    std::fs::write(dir.join("notes.txt"), "hi").unwrap();
+    let summary = pack_results_dir(&dir).unwrap();
+    assert_eq!(summary.records, c.jobs().len() + 1, "jobs + corrupt record");
+    let pack = PackStore::open(&dir).unwrap();
+    (dir, c, files, pack)
+}
+
+#[test]
+fn packed_store_is_observationally_identical_to_the_directory() {
+    let (dir, c, files, pack) = populated_pair("observe");
+
+    assert_eq!(files.ids(), pack.ids(), "id listings diverge");
+    assert!(
+        files.ids().contains(&"00000000000000ab".to_string()),
+        "corrupt record id must stay visible"
+    );
+
+    // Aggregate loads agree (both are sorted by id, corrupt dropped).
+    let a = files.load_all();
+    let b = pack.load_all();
+    assert_eq!(a.len(), c.jobs().len());
+    assert_eq!(a, b, "load_all diverges between backends");
+
+    // Per-job probes agree, with and without the params fingerprint
+    // gate: the run's own fingerprint must hit on both sides, a foreign
+    // one must miss on both.
+    let p = SimParams::default();
+    for job in &c.jobs() {
+        let dr = files.load(job);
+        assert!(dr.is_some(), "campaign cell missing from the dir store");
+        assert_eq!(dr, pack.load(job), "load diverges for {}", job.id());
+        let fp = job_fingerprint(job, &p);
+        let hit = files.load_if(job, fp);
+        assert_eq!(hit, dr, "own-fingerprint probe must hit: {}", job.id());
+        assert_eq!(hit, pack.load_if(job, fp), "hit diverges: {}", job.id());
+        assert!(files.load_if(job, fp ^ 1).is_none());
+        assert!(pack.load_if(job, fp ^ 1).is_none());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn diff_classifies_identically_through_either_backend() {
+    let (dir, c, files, _pack) = populated_pair("diff");
+    let p = SimParams::default();
+
+    // Manufacture one drifted cell and one missing cell so the diff has
+    // every classification to disagree about. (The drift edit goes to
+    // the json file, so re-pack to fold it into the pack view too.)
+    let jobs = c.jobs();
+    let mut r = files.load(&jobs[0]).unwrap();
+    r.wall_secs *= 1.5;
+    files.save(&jobs[0], &r, 0).unwrap();
+    std::fs::remove_file(files.path_for(&jobs[1])).unwrap();
+    let _ = std::fs::remove_file(dir.join(PACK_FILE));
+    pack_results_dir(&dir).unwrap();
+
+    let via_dir = ReplayBackend::open(&dir);
+    let via_pack =
+        ReplayBackend::new(Box::new(PackStore::open_read_only(&dir).unwrap()));
+    let mut reports = Vec::new();
+    for baseline in [&via_dir, &via_pack] {
+        let report = diff_jobs(
+            &jobs,
+            None,
+            baseline,
+            Shard::full(),
+            2,
+            &p,
+            c.diff_tolerances(),
+        )
+        .unwrap();
+        assert_eq!(report.cells.len(), jobs.len());
+        assert_eq!(report.regressions(), 1, "{}", report.render());
+        assert_eq!(report.missing(), 1, "{}", report.render());
+        assert_eq!(report.matches(), jobs.len() - 2, "{}", report.render());
+        reports.push(report);
+    }
+    assert_eq!(
+        reports[0].render(),
+        reports[1].render(),
+        "the two backends must render the same cell-by-cell verdicts"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_pinned_pack_baseline_refuses_writes_like_a_golden_dir() {
+    let (dir, c, _files, _pack) = populated_pair("read_only");
+    let baseline =
+        ReplayBackend::new(Box::new(PackStore::open_read_only(&dir).unwrap()));
+    let job = &c.jobs()[0];
+    let pinned = baseline.lookup(job).expect("packed cell must replay");
+    let err = baseline.store().save(job, &pinned, 0).unwrap_err();
+    assert!(format!("{err:#}").contains("read-only"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
