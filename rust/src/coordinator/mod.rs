@@ -96,20 +96,50 @@ pub struct RunSummary {
     pub results: Vec<(Job, JobResult)>,
 }
 
+/// The sim-thread budget policy: how many DES workers each sim cell may
+/// use, given that `cell_threads` cells run concurrently on a host with
+/// `host` cores.
+///
+/// * Cells running one at a time (`cell_threads <= 1`) get the full
+///   request — the machine is theirs.
+/// * Concurrent cells share the host: the request is capped at
+///   `host / cell_threads` (at least 1), so total DES workers never
+///   exceed host parallelism.
+///
+/// The cap only changes *speed*, never *results*: the sharded DES is
+/// bitwise identical to the sequential engine at every thread count.
+pub fn effective_sim_threads(
+    requested: usize,
+    cell_threads: usize,
+    host: usize,
+) -> usize {
+    let requested = requested.max(1);
+    if cell_threads <= 1 {
+        requested
+    } else {
+        requested.min((host / cell_threads).max(1))
+    }
+}
+
 /// Run this shard's slice of `jobs`: consult the store, execute the
 /// misses on each job's backend (overlappable jobs on `threads` workers,
 /// exclusive native jobs serially with the machine reserved), persist,
 /// and return everything in order.
 ///
-/// `threads == 0` means one worker per available core.
+/// `threads == 0` means one worker per available core. `sim_threads`
+/// shards each sim cell's DES over that many workers
+/// ([`crate::sim::simulate_parallel`] — bitwise identical to the
+/// sequential engine), capped by [`effective_sim_threads`] so cell-level
+/// and DES-level parallelism never oversubscribe the host together.
 pub fn run_jobs(
     jobs: &[Job],
     store: Option<&dyn ResultStore>,
     shard: Shard,
     threads: usize,
+    sim_threads: usize,
     params: &SimParams,
 ) -> crate::Result<RunSummary> {
-    let backends = Backends::new(params);
+    let mut backends = Backends::new(params);
     let sim_fp = params_fingerprint(params);
     let job_fp = |job: &Job| job_fingerprint_with(job, sim_fp);
     let mine = shard.select(jobs);
@@ -129,6 +159,14 @@ pub fn run_jobs(
     let executed = todo_concurrent.len() + todo_exclusive.len();
     let cached = mine.len() - executed;
 
+    // Resolve both levels of parallelism before any cell runs: the
+    // cell-worker count first, then the per-cell DES worker count capped
+    // against it, so `threads × sim_threads` never exceeds the host.
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = (if threads == 0 { auto } else { threads })
+        .min(todo_concurrent.len().max(1));
+    backends.sim.sim_threads = effective_sim_threads(sim_threads, threads, auto);
+
     // Execute one cell on its backend and persist it immediately, so an
     // interrupted or partially-failed campaign keeps every completed
     // record on disk.
@@ -142,9 +180,6 @@ pub fn run_jobs(
 
     // Overlappable jobs (sim cells are deterministic pure functions;
     // validation cells measure correctness, not time): run them wide.
-    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let threads = (if threads == 0 { auto } else { threads })
-        .min(todo_concurrent.len().max(1));
     if threads <= 1 {
         for &i in &todo_concurrent {
             slots[i] = Some(run_one(i)?);
@@ -396,16 +431,18 @@ impl DiffReport {
 /// store-cached and backend-scheduled exactly like [`run_jobs`] — then
 /// replay every cell from `baseline` and classify the pair under `tol`.
 /// The baseline is never written to.
+#[allow(clippy::too_many_arguments)]
 pub fn diff_jobs(
     jobs: &[Job],
     store: Option<&dyn ResultStore>,
     baseline: &ReplayBackend,
     shard: Shard,
     threads: usize,
+    sim_threads: usize,
     params: &SimParams,
     tol: DiffTolerances,
 ) -> crate::Result<DiffReport> {
-    let live = run_jobs(jobs, store, shard, threads, params)?;
+    let live = run_jobs(jobs, store, shard, threads, sim_threads, params)?;
     let mut cells = Vec::with_capacity(live.results.len());
     for (job, result) in &live.results {
         let diff = match baseline.lookup(job) {
@@ -483,11 +520,39 @@ mod tests {
     }
 
     #[test]
+    fn sim_thread_budget_caps_only_under_cell_concurrency() {
+        // Serial cells get the full request; concurrent cells split the
+        // host so `cells × DES workers` never oversubscribes it.
+        assert_eq!(effective_sim_threads(8, 1, 4), 8);
+        assert_eq!(effective_sim_threads(0, 1, 4), 1);
+        assert_eq!(effective_sim_threads(8, 4, 16), 4);
+        assert_eq!(effective_sim_threads(8, 4, 8), 2);
+        assert_eq!(effective_sim_threads(8, 4, 2), 1);
+        assert_eq!(effective_sim_threads(2, 8, 16), 2);
+    }
+
+    #[test]
+    fn sharded_sim_cells_match_sequential_bitwise() {
+        // The whole point of the knob: records written with
+        // `--sim-threads N` are the sequential records, bit for bit.
+        let jobs = sim_jobs(3);
+        let p = SimParams::default();
+        let seq = run_jobs(&jobs, None, Shard::full(), 1, 1, &p).unwrap();
+        let par = run_jobs(&jobs, None, Shard::full(), 1, 4, &p).unwrap();
+        for ((ja, ra), (jb, rb)) in seq.results.iter().zip(par.results.iter())
+        {
+            assert_eq!(ja, jb);
+            assert_eq!(ra.wall_secs.to_bits(), rb.wall_secs.to_bits());
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
     fn concurrent_and_serial_runs_agree() {
         let jobs = sim_jobs(5);
         let p = SimParams::default();
-        let serial = run_jobs(&jobs, None, Shard::full(), 1, &p).unwrap();
-        let wide = run_jobs(&jobs, None, Shard::full(), 4, &p).unwrap();
+        let serial = run_jobs(&jobs, None, Shard::full(), 1, 1, &p).unwrap();
+        let wide = run_jobs(&jobs, None, Shard::full(), 4, 1, &p).unwrap();
         assert_eq!(serial.executed, 5);
         assert_eq!(wide.executed, 5);
         for ((ja, ra), (jb, rb)) in
@@ -603,9 +668,9 @@ mod tests {
         let jobs = sim_jobs(3);
         // Pin the first two cells, plus one cell outside the list.
         let bstore = DirStore::new(&dir);
-        run_jobs(&jobs[..2], Some(&bstore), Shard::full(), 1, &p).unwrap();
+        run_jobs(&jobs[..2], Some(&bstore), Shard::full(), 1, 1, &p).unwrap();
         let stray = sim_jobs(4).pop().unwrap();
-        run_jobs(&[stray.clone()], Some(&bstore), Shard::full(), 1, &p)
+        run_jobs(&[stray.clone()], Some(&bstore), Shard::full(), 1, 1, &p)
             .unwrap();
 
         let baseline = ReplayBackend::open(&dir);
@@ -614,6 +679,7 @@ mod tests {
             None,
             &baseline,
             Shard::full(),
+            1,
             1,
             &p,
             DiffTolerances::exact(),
@@ -641,7 +707,7 @@ mod tests {
         native.spec.cores_per_node = 2;
         jobs.push(Job::new(native.spec));
         let p = SimParams::default();
-        let summary = run_jobs(&jobs, None, Shard::full(), 2, &p).unwrap();
+        let summary = run_jobs(&jobs, None, Shard::full(), 2, 1, &p).unwrap();
         assert_eq!(summary.executed, 2);
         let (sim_r, native_r) = (&summary.results[0].1, &summary.results[1].1);
         assert_eq!(sim_r.tasks, 4 * 6);

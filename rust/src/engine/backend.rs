@@ -31,7 +31,7 @@ use crate::core::{
 };
 use crate::metg::measure_peak_flops;
 use crate::runtimes::{run_with, Measurement, RunOptions};
-use crate::sim::{simulate, Machine, SimParams};
+use crate::sim::{simulate, simulate_parallel, Machine, SimParams};
 
 use super::job::{ExecMode, Job, JobResult, JobSpec};
 use super::store::{DirStore, ResultStore};
@@ -87,15 +87,27 @@ pub struct SimBackend {
     /// checksum. This executes every kernel for real — test-sized graphs
     /// only; campaign cells leave it off.
     pub oracle_checksum: bool,
+    /// Worker threads for the sharded DES ([`simulate_parallel`]).
+    /// `0`/`1` run the sequential engine; higher counts shard the
+    /// machine by core range. Results are bitwise identical either way
+    /// (the sharded engine falls back to sequential wherever it cannot
+    /// preserve the bits), so this knob never invalidates caches or
+    /// golden baselines.
+    pub sim_threads: usize,
 }
 
 impl SimBackend {
     pub fn new(params: SimParams) -> SimBackend {
-        SimBackend { params, oracle_checksum: false }
+        SimBackend { params, oracle_checksum: false, sim_threads: 1 }
     }
 
     pub fn with_oracle_checksum(mut self, on: bool) -> SimBackend {
         self.oracle_checksum = on;
+        self
+    }
+
+    pub fn with_sim_threads(mut self, threads: usize) -> SimBackend {
+        self.sim_threads = threads.max(1);
         self
     }
 }
@@ -122,8 +134,19 @@ impl Backend for SimBackend {
         } else {
             self.params
         };
-        let mut m =
-            simulate(graph, s.system, machine, &params, &s.config, &s.net);
+        let mut m = if self.sim_threads > 1 {
+            simulate_parallel(
+                graph,
+                s.system,
+                machine,
+                &params,
+                &s.config,
+                &s.net,
+                self.sim_threads,
+            )
+        } else {
+            simulate(graph, s.system, machine, &params, &s.config, &s.net)
+        };
         m.peak_flops = sim_peak_flops(machine, &self.params);
         if self.oracle_checksum {
             m.checksum = Some(oracle_outputs(graph).final_checksum(graph));
@@ -320,6 +343,16 @@ impl Backends {
         }
     }
 
+    /// Like [`Backends::new`], with the sim backend sharded over
+    /// `sim_threads` DES workers. Bitwise-neutral: measurements are
+    /// identical to the sequential engine's at any thread count.
+    pub fn with_sim_threads(params: &SimParams, sim_threads: usize) -> Backends {
+        Backends {
+            sim: SimBackend::new(*params).with_sim_threads(sim_threads),
+            native: NativeBackend::default(),
+        }
+    }
+
     /// The backend that measures `job`.
     pub fn for_job(&self, job: &Job) -> &dyn Backend {
         match job.spec.mode {
@@ -472,6 +505,32 @@ mod tests {
             rb.peak_flops.to_bits(),
             "peak normalization must ignore the wire payload"
         );
+    }
+
+    #[test]
+    fn sharded_sim_backend_is_bitwise_equal_to_sequential() {
+        // `--sim-threads` must never move a measurement: the sharded DES
+        // merges in canonical order, so the persisted result is the
+        // sequential result, bit for bit, at any thread count.
+        let seq = Backends::new(&SimParams::default());
+        let job = {
+            let mut s = spec(ExecMode::Sim);
+            s.nodes = 2;
+            s.cores_per_node = 4;
+            Job::new(s)
+        };
+        let base = seq.run(&job).unwrap();
+        for threads in [1usize, 2, 4, 8] {
+            let par = Backends::with_sim_threads(&SimParams::default(), threads);
+            assert_eq!(par.sim.sim_threads, threads.max(1));
+            let r = par.run(&job).unwrap();
+            assert_eq!(
+                r.wall_secs.to_bits(),
+                base.wall_secs.to_bits(),
+                "wall diverged at {threads} sim threads"
+            );
+            assert_eq!(r, base, "result diverged at {threads} sim threads");
+        }
     }
 
     #[test]

@@ -1329,7 +1329,7 @@ mod tests {
         let params = SimParams::default();
         let jobs = c.jobs();
         let summary =
-            run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&jobs, None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> = summary
             .results
             .into_iter()
@@ -1345,7 +1345,7 @@ mod tests {
         let c = small(CampaignKind::Fig3);
         let params = SimParams::default();
         let jobs = c.jobs();
-        let summary = run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+        let summary = run_jobs(&jobs, None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1364,7 +1364,7 @@ mod tests {
         let c = small(CampaignKind::HpxAblation);
         let params = SimParams::default();
         let jobs = c.jobs();
-        let summary = run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+        let summary = run_jobs(&jobs, None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1437,7 +1437,7 @@ mod tests {
         let c = small(CampaignKind::Fig2Scale);
         let params = SimParams::default();
         let summary =
-            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&c.jobs(), None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1454,7 +1454,7 @@ mod tests {
         let c = small(CampaignKind::Fig3Nodes);
         let params = SimParams::default();
         let summary =
-            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&c.jobs(), None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1504,7 +1504,7 @@ mod tests {
         let c = small(CampaignKind::Fig5Stress);
         let params = SimParams::default();
         let summary =
-            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&c.jobs(), None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let wire = c.render_net();
@@ -1541,7 +1541,7 @@ mod tests {
         let c = small(CampaignKind::Fig5Stress);
         let params = SimParams::default();
         let summary =
-            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&c.jobs(), None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1566,7 +1566,7 @@ mod tests {
         c.nodes = vec![1, 2];
         let params = SimParams::default();
         let summary =
-            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&c.jobs(), None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1598,7 +1598,7 @@ mod tests {
         let c = small(CampaignKind::Fig2Huge);
         let params = SimParams::default();
         let summary =
-            run_jobs(&c.jobs(), None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&c.jobs(), None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1654,7 +1654,7 @@ mod tests {
 
         let params = SimParams::default();
         let summary =
-            run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&jobs, None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();
@@ -1676,7 +1676,7 @@ mod tests {
 
         let params = SimParams::default();
         let summary =
-            run_jobs(&jobs, None, Shard::full(), 1, &params).unwrap();
+            run_jobs(&jobs, None, Shard::full(), 1, 1, &params).unwrap();
         let map: HashMap<String, JobResult> =
             summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect();
         let md = c.table(&map).to_markdown();

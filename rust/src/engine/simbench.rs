@@ -8,8 +8,13 @@
 //! it, and [`write_sim_bench`] persists the result as `BENCH_sim.json` —
 //! simulated tasks/sec per engine, the speedup, and the peak resident
 //! frontier (slabs × width) next to what the oracle materializes
-//! (width × steps). CI publishes the file as a build artifact, so the
-//! perf trajectory has data points instead of anecdotes.
+//! (width × steps). Each cell also runs through the sharded parallel
+//! engine ([`simulate_parallel`] on [`PAR_THREADS`] workers), recording
+//! `parallel_speedup` over the sequential windowed run and a
+//! `parallel_bitwise` parity bit — the speedup is hardware-dependent and
+//! recorded honestly; the parity bit is a hard gate like the others. CI
+//! publishes the file as a build artifact, so the perf trajectory has
+//! data points instead of anecdotes.
 //!
 //! Entry points: `repro jobs bench-sim [--out FILE]` and
 //! `cargo bench --bench sim_core`.
@@ -22,7 +27,8 @@ use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
 use crate::harness::report::Table;
 use crate::runtimes::{SystemConfig, SystemKind};
 use crate::sim::{
-    simulate_oracle, simulate_with_stats, Machine, NetConfig, SimParams,
+    simulate_oracle, simulate_parallel, simulate_with_stats, Machine,
+    NetConfig, SimParams,
 };
 
 use super::json::Json;
@@ -56,7 +62,19 @@ pub struct SimBenchCell {
     pub contention_ratio: f64,
     /// Did windowed and oracle also agree bitwise under contention?
     pub contention_bitwise: bool,
+    /// Host-side throughput of the sharded parallel engine
+    /// ([`simulate_parallel`] on [`PAR_THREADS`] workers), tasks/sec.
+    pub parallel_tasks_per_sec: f64,
+    /// `parallel / sequential-windowed` throughput ratio. Hardware-
+    /// dependent (a single-core host records ~1x or below); recorded
+    /// honestly, not asserted.
+    pub parallel_speedup: f64,
+    /// Did the sharded engine agree bitwise with the sequential one?
+    pub parallel_bitwise: bool,
 }
+
+/// DES worker threads the recorder's parallel axis runs on.
+pub const PAR_THREADS: usize = 8;
 
 /// A full recorder run.
 #[derive(Debug, Clone)]
@@ -77,11 +95,12 @@ impl SimBenchReport {
         (ln_sum / self.cells.len() as f64).exp()
     }
 
-    /// Every cell reproduced the oracle bitwise — under both wire models.
+    /// Every cell reproduced the oracle bitwise — under both wire models
+    /// — and the sharded parallel engine reproduced the sequential one.
     pub fn all_bitwise(&self) -> bool {
-        self.cells
-            .iter()
-            .all(|c| c.bitwise_match && c.contention_bitwise)
+        self.cells.iter().all(|c| {
+            c.bitwise_match && c.contention_bitwise && c.parallel_bitwise
+        })
     }
 
     /// The `BENCH_sim.json` byte stream.
@@ -125,14 +144,24 @@ impl SimBenchReport {
                         "contention_bitwise".into(),
                         Json::Bool(c.contention_bitwise),
                     ),
+                    (
+                        "parallel_tasks_per_sec".into(),
+                        Json::Num(c.parallel_tasks_per_sec),
+                    ),
+                    ("parallel_speedup".into(), Json::Num(c.parallel_speedup)),
+                    (
+                        "parallel_bitwise".into(),
+                        Json::Bool(c.parallel_bitwise),
+                    ),
                 ])
             })
             .collect();
         let mut text = Json::Obj(vec![
-            ("v".into(), Json::Num(1.0)),
+            ("v".into(), Json::Num(2.0)),
             ("steps".into(), Json::Num(self.steps as f64)),
             ("tasks_per_core".into(), Json::Num(self.tasks_per_core as f64)),
             ("grain".into(), Json::Num(self.grain as f64)),
+            ("parallel_threads".into(), Json::Num(PAR_THREADS as f64)),
             ("geomean_speedup".into(), Json::Num(self.geomean_speedup())),
             ("all_bitwise".into(), Json::Bool(self.all_bitwise())),
             ("cells".into(), Json::Arr(cells)),
@@ -151,6 +180,8 @@ impl SimBenchReport {
             "windowed tasks/s",
             "oracle tasks/s",
             "speedup",
+            "par tasks/s",
+            "par speedup",
             "nic tasks/s",
             "nic ratio",
             "frontier (tasks)",
@@ -164,6 +195,8 @@ impl SimBenchReport {
                 format!("{:.3e}", c.windowed_tasks_per_sec),
                 format!("{:.3e}", c.oracle_tasks_per_sec),
                 format!("{:.2}x", c.speedup),
+                format!("{:.3e}", c.parallel_tasks_per_sec),
+                format!("{:.2}x", c.parallel_speedup),
                 format!("{:.3e}", c.contention_tasks_per_sec),
                 format!("{:.2}x", c.contention_ratio),
                 c.peak_frontier_tasks.to_string(),
@@ -231,6 +264,17 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
                 (m.wall_secs.to_bits(), m.messages)
             });
 
+            // The same cell through the sharded parallel engine. Its
+            // contract is bitwise equality with the *windowed* run; the
+            // speedup is whatever this host's cores deliver.
+            let (p_bits, p_msgs, p_secs) = timed(|| {
+                let m = simulate_parallel(
+                    &graph, system, machine, &params, &cfg, &wire,
+                    PAR_THREADS,
+                );
+                (m.wall_secs.to_bits(), m.messages)
+            });
+
             // The same cell under NIC contention, windowed and oracle.
             let (c_bits, c_msgs, c_secs) = timed(|| {
                 let (m, _) = simulate_with_stats(
@@ -257,6 +301,9 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
                 contention_ratio: w_secs / c_secs,
                 contention_bitwise: c_bits == co.wall_secs.to_bits()
                     && c_msgs == co.messages,
+                parallel_tasks_per_sec: n as f64 / p_secs,
+                parallel_speedup: w_secs / p_secs,
+                parallel_bitwise: p_bits == w_bits && p_msgs == w_msgs,
             });
         }
     }
@@ -294,6 +341,11 @@ mod tests {
             assert!(c.contention_tasks_per_sec > 0.0);
             assert!(c.contention_ratio > 0.0);
             assert!(c.contention_bitwise, "{c:#?}");
+            // The sharded engine's speedup is hardware-dependent; its
+            // bitwise parity with the sequential engine is not.
+            assert!(c.parallel_tasks_per_sec > 0.0);
+            assert!(c.parallel_speedup > 0.0);
+            assert!(c.parallel_bitwise, "{c:#?}");
         }
         assert!(r.geomean_speedup() > 0.0);
     }
@@ -303,7 +355,11 @@ mod tests {
         let r = run_sim_bench(3, 1);
         let text = r.to_json();
         let v = Json::parse(&text).expect("recorder JSON must parse");
-        assert_eq!(v.get("v").and_then(Json::as_u64), Some(1));
+        assert_eq!(v.get("v").and_then(Json::as_u64), Some(2));
+        assert_eq!(
+            v.get("parallel_threads").and_then(Json::as_u64),
+            Some(PAR_THREADS as u64)
+        );
         assert_eq!(
             v.get("cells").map(|c| match c {
                 Json::Arr(items) => items.len(),
@@ -314,8 +370,11 @@ mod tests {
         assert!(matches!(v.get("all_bitwise"), Some(Json::Bool(true))));
         assert!(text.contains("contention_ratio"), "{text}");
         assert!(text.contains("contention_tasks_per_sec"), "{text}");
+        assert!(text.contains("parallel_speedup"), "{text}");
+        assert!(text.contains("parallel_bitwise"), "{text}");
         let rendered = r.render();
         assert!(rendered.contains("geomean speedup"), "{rendered}");
         assert!(rendered.contains("nic ratio"), "{rendered}");
+        assert!(rendered.contains("par speedup"), "{rendered}");
     }
 }

@@ -55,7 +55,7 @@ fn run_campaign(
     params: &SimParams,
 ) -> HashMap<String, JobResult> {
     let jobs = campaign.jobs();
-    let summary = run_jobs(&jobs, None, Shard::full(), 0, params)
+    let summary = run_jobs(&jobs, None, Shard::full(), 0, 1, params)
         .expect("in-memory sim campaign cannot fail");
     summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect()
 }

@@ -14,12 +14,12 @@
 //!
 //! repro jobs list  [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns|fig5_stress|fig2_huge] [--shard k/N]
 //! repro jobs run   [--campaign ...] [--native] [--results DIR] [--shard k/N] [--threads N]
-//!                  [--payloads 64,65536] [--net wire|nic] [--reps N] [--warmup N]
+//!                  [--sim-threads N] [--payloads 64,65536] [--net wire|nic] [--reps N] [--warmup N]
 //! repro jobs table [--campaign ...] [--native] [--results DIR] [--latex]
 //! repro jobs dat   [--campaign ...] [--native] [--results DIR]
 //! repro jobs calibrate [--results DIR] [--export FILE | --import FILE]
-//! repro jobs snapshot [--campaign ...] [--baseline DIR]      # pin goldens
-//! repro jobs diff  [--campaign ...] [--baseline DIR] [--tol X] [--strict]
+//! repro jobs snapshot [--campaign ...] [--baseline DIR] [--sim-threads N]  # pin goldens
+//! repro jobs diff  [--campaign ...] [--baseline DIR] [--tol X] [--strict] [--sim-threads N]
 //! repro jobs pack  [--results DIR]                           # compact to results.pack
 //! repro jobs bench-sim [--out BENCH_sim.json] [--steps N]    # DES throughput
 //! ```
@@ -45,6 +45,13 @@
 //! latency-hiding sweep) and `--net wire|nic` pins every cell of a
 //! campaign onto one wire model — both are hashed job dimensions, so
 //! overridden cells cache separately from the defaults.
+//! `--sim-threads N` shards each sim cell's DES over N worker threads
+//! (`sim::simulate_parallel`) — bitwise identical to the sequential
+//! engine, so it is purely a throughput knob and never perturbs caches
+//! or golden baselines. When `--threads M` runs M cells concurrently,
+//! the effective per-cell DES worker count is capped at
+//! `host_cores / M` so the two levels of parallelism never
+//! oversubscribe the host together (`coordinator::effective_sim_threads`).
 //! `jobs calibrate` manages the store's persisted `_calibration.json`:
 //! `--export` publishes it for other hosts, `--import` installs a file a
 //! peer exported, so multi-host campaigns share one calibration without
@@ -88,6 +95,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: repro <run|sweep|metg|nodes|ablation|patterns|calibrate|peak|dispatch> [--key value ...]\n\
          \x20      repro jobs <list|run|table|dat> [--campaign fig1|table2|fig2|fig2_scale|fig3|fig3_nodes|hpx_ablation|patterns|fig5_stress|fig2_huge] [--native] [--payloads A,B] [--net wire|nic] [--store dir|pack] [--reps N] [--warmup N] [--latex] [--key value ...]\n\
+         \x20      \x20     [--sim-threads N]  shard each sim cell's DES over N workers (bitwise-identical results;\n\
+         \x20      \x20                        capped at host_cores / --threads when cells run concurrently)\n\
          \x20      repro jobs calibrate [--results DIR] [--export FILE | --import FILE]\n\
          \x20      repro jobs snapshot [--campaign ...] [--baseline DIR]\n\
          \x20      repro jobs diff [--campaign ...] [--baseline DIR] [--tol X] [--strict]\n\
@@ -594,6 +603,10 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
     } else {
         SimParams::default()
     };
+    // DES workers per sim cell (the sharded parallel simulator;
+    // bitwise-identical results at any count). run_jobs caps it against
+    // the cell-level --threads so the host is never oversubscribed.
+    let sim_threads = get(m, "sim-threads", 1usize).max(1);
     match action {
         "list" => {
             let jobs = campaign.jobs();
@@ -628,7 +641,8 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                 );
             }
             eprintln!(
-                "{} jobs in campaign {} (shard {shard}: {}; {} store in {})",
+                "{} jobs in campaign {} (shard {shard}: {}; {} store in {}; \
+                 sim-threads {sim_threads})",
                 jobs.len(),
                 campaign.kind.id(),
                 mine.len(),
@@ -640,16 +654,18 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
             let threads = get(m, "threads", cfg.threads);
             let jobs = campaign.jobs();
             let summary =
-                run_jobs(&jobs, Some(store), shard, threads, &params)
+                run_jobs(&jobs, Some(store), shard, threads, sim_threads, &params)
                     .unwrap_or_else(|e| {
                         eprintln!("jobs run failed: {e:#}");
                         std::process::exit(1);
                     });
             println!(
-                "campaign {}: {} executed, {} cached (shard {shard}, results in {})",
+                "campaign {}: {} executed, {} cached (shard {shard}, \
+                 {} store in {}, sim-threads {sim_threads})",
                 campaign.kind.id(),
                 summary.executed,
                 summary.cached,
+                store.backend_id(),
                 store.dir().display(),
             );
         }
@@ -705,11 +721,12 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                     );
                 }
             }
-            let summary = run_jobs(&jobs, None, shard, threads, &params)
-                .unwrap_or_else(|e| {
-                    eprintln!("jobs snapshot failed: {e:#}");
-                    std::process::exit(1);
-                });
+            let summary =
+                run_jobs(&jobs, None, shard, threads, sim_threads, &params)
+                    .unwrap_or_else(|e| {
+                        eprintln!("jobs snapshot failed: {e:#}");
+                        std::process::exit(1);
+                    });
             let sim_fp =
                 taskbench_amt::engine::job::params_fingerprint(&params);
             for (job, result) in &summary.results {
@@ -759,6 +776,7 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                 &baseline,
                 shard,
                 threads,
+                sim_threads,
                 &params,
                 tol,
             )

@@ -250,6 +250,16 @@ pub(super) fn edge_cost(
     }
 }
 
+/// Ready-queue ordering key: nanoseconds quantized to eighth-ns ticks.
+/// Shared by the sequential core and the sharded parallel engine
+/// ([`super::pdes`]) — the global execution order both realize is the
+/// ascending `(ready_key(ready), task index)` sort, which is what makes
+/// window-parallel execution bitwise-reproducible.
+#[inline]
+pub(super) fn ready_key(ns: f64) -> u64 {
+    (ns.max(0.0) * 8.0) as u64
+}
+
 pub(super) fn base_task_ns(system: SystemKind, params: &SimParams) -> f64 {
     match system {
         SystemKind::MpiLike => params.mpi_task_ns,
@@ -430,7 +440,7 @@ fn simulate_event_driven(
         heap.push(Reverse((0, PointCoord::new(x, 0).index(width))));
     }
 
-    let key = |ns: f64| -> u64 { (ns.max(0.0) * 8.0) as u64 };
+    let key = ready_key;
 
     while let Some(Reverse((_, task))) = heap.pop() {
         let (x, t) = (task % width, task / width);

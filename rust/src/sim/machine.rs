@@ -40,6 +40,28 @@ impl Machine {
     pub fn same_node(&self, a: usize, b: usize) -> bool {
         self.node_of(a) == self.node_of(b)
     }
+
+    /// Split the core id space into `workers` contiguous balanced ranges
+    /// — the ownership map of the sharded parallel DES
+    /// ([`super::simulate_parallel`]): every core in exactly one range,
+    /// range sizes differing by at most one, in ascending core order.
+    /// `workers` is clamped to `1..=total_cores`, so every returned
+    /// range is non-empty.
+    pub fn core_shards(&self, workers: usize) -> Vec<std::ops::Range<usize>> {
+        let total = self.total_cores();
+        let n = workers.clamp(1, total);
+        let base = total / n;
+        let rem = total % n;
+        let mut shards = Vec::with_capacity(n);
+        let mut lo = 0;
+        for i in 0..n {
+            let len = base + usize::from(i < rem);
+            shards.push(lo..lo + len);
+            lo += len;
+        }
+        debug_assert_eq!(lo, total);
+        shards
+    }
 }
 
 #[cfg(test)]
@@ -77,5 +99,44 @@ mod tests {
     #[should_panic(expected = "u32")]
     fn absurd_core_counts_rejected() {
         Machine::new(1 << 20, 1 << 13);
+    }
+
+    #[test]
+    fn a_1024_node_machine_fits_the_core_id_space() {
+        // The parallel-DES target regime is past fig2_huge's 256 nodes;
+        // 1024 Rostam nodes (49_152 cores) must construct cleanly and
+        // stay well inside the u32 core-id guard.
+        let m = Machine::rostam(1024);
+        assert_eq!(m.total_cores(), 1024 * 48);
+        assert!(m.total_cores() < u32::MAX as usize);
+        assert_eq!(m.node_of(m.total_cores() - 1), 1023);
+        assert!(!m.same_node(0, m.total_cores() - 1));
+    }
+
+    #[test]
+    fn core_shards_cover_every_core_exactly_once() {
+        // The ownership contract the sharded engine rests on: for any
+        // worker count, the shards are contiguous, ascending, balanced
+        // to ±1, and partition the core id space — no core owned twice,
+        // none orphaned.
+        for m in [Machine::new(1, 1), Machine::new(3, 5), Machine::rostam(1024)]
+        {
+            let total = m.total_cores();
+            for workers in [1usize, 2, 3, 7, 8, 48, 1000, total, total + 9] {
+                let shards = m.core_shards(workers);
+                assert_eq!(shards.len(), workers.clamp(1, total));
+                let mut next = 0;
+                let (mut lo, mut hi) = (usize::MAX, 0usize);
+                for r in &shards {
+                    assert_eq!(r.start, next, "gap or overlap at {r:?}");
+                    assert!(!r.is_empty(), "empty shard {r:?}");
+                    lo = lo.min(r.len());
+                    hi = hi.max(r.len());
+                    next = r.end;
+                }
+                assert_eq!(next, total, "cores orphaned past {next}");
+                assert!(hi - lo <= 1, "unbalanced shards: {lo}..{hi}");
+            }
+        }
     }
 }

@@ -28,7 +28,11 @@
 //! 64–256-node scaling campaigns tractable; [`simulate_oracle`] is the
 //! frozen pre-refactor list scheduler it is bitwise-diffed against, and
 //! [`simulate_with_stats`] exposes the frontier counters `jobs
-//! bench-sim` records.
+//! bench-sim` records. [`simulate_parallel`] shards that windowed core
+//! across worker threads by core-range ownership with window-edge
+//! synchronization ([`pdes`]) — **bitwise identical** to the sequential
+//! path (which remains the parity oracle), falling back to it wherever
+//! sharding cannot preserve the bits.
 //!
 //! The point-to-point wire is a pluggable [`NetModel`] ([`net`]): the
 //! congestion-free default reproduces the historical latency+bandwidth
@@ -43,9 +47,13 @@ mod machine;
 mod net;
 mod oracle;
 mod params;
+mod pdes;
 
 pub use des::{simulate, simulate_with_stats, SimStats};
 pub use machine::Machine;
 pub use net::{CongestionFree, NetConfig, NetModel, NetModelKind, NicContention};
 pub use oracle::simulate_oracle;
 pub use params::{calibrate, SimParams};
+pub use pdes::{
+    parallel_eligible, simulate_parallel, simulate_parallel_with_stats,
+};

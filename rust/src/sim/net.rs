@@ -232,7 +232,12 @@ impl NetModel for NicContention {
 
 /// The per-run wire-model state both simulation engines drive — built
 /// from the job's [`NetConfig`], shared verbatim between the windowed
-/// core and the oracle so the two can never diverge.
+/// core and the oracle so the two can never diverge. The sharded
+/// parallel engine ([`super::pdes`]) drives one instance too: because
+/// the contended arm is order-dependent (rolling NIC busy-times +
+/// per-send dedup cache), workers defer their sends and a single merge
+/// thread replays them here in the global `(key, task)` execution order
+/// — the exact sequence the sequential loop would have presented.
 ///
 /// An enum rather than a `Box<dyn NetModel>` on the hot path: the
 /// congestion-free arm must stay a bare `send_done + wire` (the bitwise

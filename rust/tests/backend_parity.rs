@@ -132,11 +132,11 @@ fn fig3_campaign_caches_and_reruns_hit_free() {
     let jobs = c.jobs();
     let params = SimParams::default();
 
-    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &params).unwrap();
     assert_eq!(first.executed, jobs.len());
     assert_eq!(first.cached, 0);
 
-    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &params).unwrap();
     assert_eq!(second.executed, 0, "rerun must be a 100% cache hit");
     assert_eq!(second.cached, jobs.len());
 
@@ -168,13 +168,13 @@ fn native_and_sim_results_cache_under_distinct_fingerprints() {
     assert_ne!(sim_job.id(), native_job.id(), "mode must be hashed");
 
     let jobs = vec![sim_job.clone(), native_job.clone()];
-    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &params).unwrap();
     assert_eq!(first.executed, 2);
 
     // Both records exist side by side and both replay as cache hits.
     assert!(store.load(&sim_job).is_some());
     assert!(store.load(&native_job).is_some());
-    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &params).unwrap();
     assert_eq!(second.executed, 0);
     assert_eq!(second.cached, 2);
 
@@ -182,7 +182,8 @@ fn native_and_sim_results_cache_under_distinct_fingerprints() {
     // params change (they measured the real machine, not the model).
     let mut other = params;
     other.mpi_task_ns += 1.0;
-    let third = run_jobs(&jobs, Some(&store), Shard::full(), 2, &other).unwrap();
+    let third =
+        run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &other).unwrap();
     assert_eq!(third.executed, 1, "only the sim cell re-runs");
     assert_eq!(third.cached, 1);
     let _ = std::fs::remove_dir_all(&dir);

@@ -67,12 +67,12 @@ fn rerun_of_completed_campaign_is_pure_cache_hit() {
     let jobs = campaign.jobs();
     let params = SimParams::default();
 
-    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    let first = run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &params).unwrap();
     assert_eq!(first.executed, jobs.len());
     assert_eq!(first.cached, 0);
 
     // Re-run: zero task-graph executions, everything from the store.
-    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    let second = run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &params).unwrap();
     assert_eq!(second.executed, 0, "re-run must not execute any graphs");
     assert_eq!(second.cached, jobs.len());
     assert_eq!(first.results, second.results);
@@ -87,12 +87,12 @@ fn interrupted_campaign_resumes_only_the_missing_cells() {
     let jobs = campaign.jobs();
     let params = SimParams::default();
 
-    run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    run_jobs(&jobs, Some(&store), Shard::full(), 1, 1, &params).unwrap();
     // Simulate an interruption that lost two records.
     for job in [&jobs[0], &jobs[3]] {
         std::fs::remove_file(store.path_for(job)).unwrap();
     }
-    let resumed = run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    let resumed = run_jobs(&jobs, Some(&store), Shard::full(), 1, 1, &params).unwrap();
     assert_eq!(resumed.executed, 2);
     assert_eq!(resumed.cached, jobs.len() - 2);
     let _ = std::fs::remove_dir_all(&dir);
@@ -121,9 +121,11 @@ fn two_shards_partition_and_merge_byte_identically() {
     let sharded_dir = tmpdir("sharded");
     let serial = DirStore::new(&serial_dir);
     let sharded = DirStore::new(&sharded_dir);
-    run_jobs(&jobs, Some(&serial), Shard::full(), 1, &params).unwrap();
-    run_jobs(&jobs, Some(&sharded), s1, 2, &params).unwrap();
-    run_jobs(&jobs, Some(&sharded), s2, 2, &params).unwrap();
+    run_jobs(&jobs, Some(&serial), Shard::full(), 1, 1, &params).unwrap();
+    // The sharded halves also exercise the parallel DES: `sim_threads`
+    // must not perturb a single byte of the persisted records.
+    run_jobs(&jobs, Some(&sharded), s1, 2, 2, &params).unwrap();
+    run_jobs(&jobs, Some(&sharded), s2, 2, 2, &params).unwrap();
 
     let files = |dir: &PathBuf| -> Vec<(String, Vec<u8>)> {
         let mut out: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
@@ -155,7 +157,7 @@ fn table_renders_from_store_without_executing() {
     let campaign = small_campaign();
     let jobs = campaign.jobs();
     let params = SimParams::default();
-    run_jobs(&jobs, Some(&store), Shard::full(), 2, &params).unwrap();
+    run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &params).unwrap();
 
     let map: HashMap<String, _> = jobs
         .iter()
@@ -176,11 +178,11 @@ fn store_survives_unrelated_garbage_files() {
     let campaign = small_campaign();
     let jobs = campaign.jobs();
     let params = SimParams::default();
-    run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    run_jobs(&jobs, Some(&store), Shard::full(), 1, 1, &params).unwrap();
     std::fs::write(dir.join("README.txt"), "not a record").unwrap();
     std::fs::write(dir.join("broken.json"), "{oops").unwrap();
     assert_eq!(store.load_all().len(), jobs.len());
-    let summary = run_jobs(&jobs, Some(&store), Shard::full(), 1, &params).unwrap();
+    let summary = run_jobs(&jobs, Some(&store), Shard::full(), 1, 1, &params).unwrap();
     assert_eq!(summary.executed, 0);
     let _ = std::fs::remove_dir_all(&dir);
 }

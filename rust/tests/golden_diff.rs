@@ -45,7 +45,7 @@ fn small_campaign() -> Campaign {
 /// Pin `campaign` under `root/<campaign-id>/` — `jobs snapshot`.
 fn snapshot(campaign: &Campaign, root: &Path, params: &SimParams) {
     let bstore = DirStore::new(campaign.baseline_dir(root));
-    run_jobs(&campaign.jobs(), Some(&bstore), Shard::full(), 2, params)
+    run_jobs(&campaign.jobs(), Some(&bstore), Shard::full(), 2, 1, params)
         .unwrap();
 }
 
@@ -57,12 +57,15 @@ fn snapshot_then_diff_is_strictly_clean() {
     snapshot(&c, &root, &p);
 
     let baseline = ReplayBackend::open(c.baseline_dir(&root));
+    // The live side re-measures through the sharded parallel DES: a
+    // sequentially pinned baseline must still diff bitwise clean.
     let report = diff_jobs(
         &c.jobs(),
         None,
         &baseline,
         Shard::full(),
         2,
+        4,
         &p,
         c.diff_tolerances(),
     )
@@ -99,6 +102,7 @@ fn perturbed_baseline_record_fails_the_diff() {
         &baseline,
         Shard::full(),
         2,
+        1,
         &p,
         c.diff_tolerances(),
     )
@@ -118,6 +122,7 @@ fn perturbed_baseline_record_fails_the_diff() {
         &baseline,
         Shard::full(),
         2,
+        1,
         &p,
         DiffTolerances::uniform(0.9),
     )
@@ -148,7 +153,7 @@ fn checksum_mismatch_is_a_hard_failure_end_to_end() {
         warmup: 0,
     });
     let bstore = DirStore::new(&root);
-    run_jobs(&[job.clone()], Some(&bstore), Shard::full(), 1, &p).unwrap();
+    run_jobs(&[job.clone()], Some(&bstore), Shard::full(), 1, 1, &p).unwrap();
     let mut pinned = bstore.load(&job).unwrap();
     let sum = pinned.checksum.expect("validate cells persist checksums");
     pinned.checksum = Some(sum + 1.0);
@@ -160,6 +165,7 @@ fn checksum_mismatch_is_a_hard_failure_end_to_end() {
         None,
         &baseline,
         Shard::full(),
+        1,
         1,
         &p,
         // An absurd tolerance: checksums must fail anyway.
@@ -185,7 +191,7 @@ fn missing_and_extra_cells_report_without_failing() {
     std::fs::remove_file(bstore.path_for(&jobs[1])).unwrap();
     let mut widened = small_campaign();
     widened.grains = vec![1 << 12];
-    run_jobs(&widened.jobs()[..1], Some(&bstore), Shard::full(), 1, &p)
+    run_jobs(&widened.jobs()[..1], Some(&bstore), Shard::full(), 1, 1, &p)
         .unwrap();
 
     let baseline = ReplayBackend::open(c.baseline_dir(&root));
@@ -195,6 +201,7 @@ fn missing_and_extra_cells_report_without_failing() {
         &baseline,
         Shard::full(),
         2,
+        1,
         &p,
         c.diff_tolerances(),
     )
@@ -223,6 +230,7 @@ fn diff_live_side_caches_like_any_run() {
         &baseline,
         Shard::full(),
         2,
+        1,
         &p,
         c.diff_tolerances(),
     )
@@ -237,6 +245,7 @@ fn diff_live_side_caches_like_any_run() {
         &baseline,
         Shard::full(),
         2,
+        1,
         &p,
         c.diff_tolerances(),
     )
@@ -263,6 +272,7 @@ fn sharded_diffs_compose_and_stay_clean() {
         &baseline,
         Shard::parse("1/2").unwrap(),
         1,
+        2,
         &p,
         c.diff_tolerances(),
     )
@@ -273,6 +283,7 @@ fn sharded_diffs_compose_and_stay_clean() {
         &baseline,
         Shard::parse("2/2").unwrap(),
         1,
+        2,
         &p,
         c.diff_tolerances(),
     )

@@ -8,14 +8,21 @@
 //! with no `BASELINE_VERSION` bump: same inputs, same bits out. Any
 //! intentional change to the simulated *numbers* must go to both engines
 //! or retire the oracle — and bump the baseline version.
+//!
+//! The sharded parallel engine (`sim::simulate_parallel`) carries the
+//! same contract one level up: at every thread count it must be bitwise
+//! identical to the sequential windowed engine (which remains the parity
+//! oracle), across random graphs × systems × both wire models — that is
+//! what makes `--sim-threads` a pure throughput knob that can never
+//! invalidate a cache or a golden baseline.
 
 use taskbench_amt::core::{
     DependencePattern, GraphConfig, KernelConfig, TaskGraph,
 };
 use taskbench_amt::runtimes::{SystemConfig, SystemKind};
 use taskbench_amt::sim::{
-    simulate, simulate_oracle, simulate_with_stats, Machine, NetConfig,
-    NetModelKind, SimParams,
+    parallel_eligible, simulate, simulate_oracle, simulate_parallel,
+    simulate_with_stats, Machine, NetConfig, NetModelKind, SimParams,
 };
 use taskbench_amt::util::propcheck;
 
@@ -103,6 +110,40 @@ fn parity(
     Ok(())
 }
 
+/// Bitwise comparison of the sequential windowed engine and the sharded
+/// parallel engine on one cell at one thread count.
+fn parallel_parity(
+    g: &TaskGraph,
+    system: SystemKind,
+    m: Machine,
+    cfg: &SystemConfig,
+    net: &NetConfig,
+    threads: usize,
+) -> Result<(), String> {
+    let p = SimParams::default();
+    let seq = simulate(g, system, m, &p, cfg, net);
+    let par = simulate_parallel(g, system, m, &p, cfg, net, threads);
+    if seq.wall_secs.to_bits() != par.wall_secs.to_bits() {
+        return Err(format!(
+            "{system:?} x{threads}: makespan {} (sequential) != {} (parallel)",
+            seq.wall_secs, par.wall_secs
+        ));
+    }
+    if seq.messages != par.messages {
+        return Err(format!(
+            "{system:?} x{threads}: messages {} (sequential) != {} (parallel)",
+            seq.messages, par.messages
+        ));
+    }
+    if seq.tasks != par.tasks {
+        return Err(format!(
+            "{system:?} x{threads}: tasks {} != {}",
+            seq.tasks, par.tasks
+        ));
+    }
+    Ok(())
+}
+
 #[test]
 fn parity_matrix_every_system_every_pattern() {
     let m = Machine::new(2, 3);
@@ -169,6 +210,84 @@ fn property_windowed_core_is_bitwise_identical_to_oracle() {
                 .map_err(|e| {
                     format!("{dep:?} {width}x{steps} {:?}: {e}", net.model)
                 })
+        },
+    );
+}
+
+#[test]
+fn parallel_parity_matrix_every_system_both_wires() {
+    // Deterministic sweep: every system × both wire-model kinds ×
+    // {1, 2, 4, 8} DES workers must be bitwise-sequential. Systems the
+    // sharded engine cannot preserve (fork-join, stealing HPX) fall back
+    // to the sequential path inside simulate_parallel — parity holds
+    // trivially there, and the eligibility probe documents which cells
+    // actually exercised the sharded rounds.
+    let m = Machine::new(4, 6);
+    let g = graph(
+        DependencePattern::Stencil1D,
+        48,
+        10,
+        KernelConfig::compute_bound(16),
+        11,
+    );
+    let cfg = SystemConfig::default();
+    let p = SimParams::default();
+    let mut sharded_cells = 0usize;
+    for net in [NetConfig::default(), NetConfig::contention()] {
+        for system in SystemKind::all() {
+            for threads in [1usize, 2, 4, 8] {
+                parallel_parity(&g, system, m, &cfg, &net, threads)
+                    .unwrap_or_else(|e| panic!("{:?}: {e}", net.model));
+                if parallel_eligible(&g, system, m, &p, &cfg, threads) {
+                    sharded_cells += 1;
+                }
+            }
+        }
+    }
+    assert!(
+        sharded_cells > 0,
+        "no cell took the sharded path — the matrix tests nothing"
+    );
+}
+
+#[test]
+fn property_sharded_engine_is_bitwise_identical_to_sequential() {
+    // The tentpole contract, propchecked: random graphs × all systems ×
+    // all wire models × {1, 2, 4, 8} threads, sequential-vs-parallel,
+    // bitwise.
+    let deps = DependencePattern::all();
+    let systems = SystemKind::all();
+    let cfgs = configs();
+    let kerns = kernels();
+    let wire_models = nets();
+    let thread_counts = [1usize, 2, 4, 8];
+    propcheck::check(
+        "sharded parallel DES bitwise-equals the sequential engine",
+        40,
+        |rng| {
+            (
+                deps[rng.gen_range(deps.len())],
+                1 + rng.gen_range(20),                 // width
+                1 + rng.gen_range(12),                 // steps
+                1 + rng.gen_range(4),                  // nodes
+                1 + rng.gen_range(6),                  // cores per node
+                systems[rng.gen_range(systems.len())],
+                cfgs[rng.gen_range(cfgs.len())],
+                kerns[rng.gen_range(kerns.len())],
+                wire_models[rng.gen_range(wire_models.len())],
+                thread_counts[rng.gen_range(thread_counts.len())],
+                rng.next_u64(),                        // graph seed
+            )
+        },
+        |&(dep, width, steps, nodes, cores, system, cfg, kernel, net, threads, seed)| {
+            let g = graph(dep, width, steps, kernel, seed);
+            let m = Machine::new(nodes, cores);
+            parallel_parity(&g, system, m, &cfg, &net, threads).map_err(|e| {
+                format!(
+                    "{dep:?} {width}x{steps} on {nodes}x{cores} {:?}: {e}",
+                    net.model
+                )
+            })
         },
     );
 }

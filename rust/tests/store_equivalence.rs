@@ -47,7 +47,7 @@ fn populated_pair(tag: &str) -> (PathBuf, Campaign, DirStore, PackStore) {
     let c = small_campaign();
     let files = DirStore::new(&dir);
     let p = SimParams::default();
-    run_jobs(&c.jobs(), Some(&files), Shard::full(), 2, &p).unwrap();
+    run_jobs(&c.jobs(), Some(&files), Shard::full(), 2, 1, &p).unwrap();
     // A corrupt record under a valid record name: its id stays visible
     // in both backends, its payload parses in neither.
     std::fs::write(dir.join("00000000000000ab.json"), "{corrupt").unwrap();
@@ -121,6 +121,7 @@ fn diff_classifies_identically_through_either_backend() {
             baseline,
             Shard::full(),
             2,
+            1,
             &p,
             c.diff_tolerances(),
         )
