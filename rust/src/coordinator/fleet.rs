@@ -1,0 +1,650 @@
+//! The coordination-free fleet runner: any number of uncoordinated
+//! worker processes (or hosts sharing one results directory) grind a
+//! single campaign by *claiming* cells through the store.
+//!
+//! There is no server and no membership protocol. The whole scheme
+//! rides on two properties the engine already has:
+//!
+//! * **Records are a natural CRDT.** A record's id is a content hash of
+//!   its cell, and sim results are bitwise deterministic — so if two
+//!   workers ever race on the same cell, they publish *the identical
+//!   bytes* and merge order is irrelevant. N workers filling one
+//!   directory is byte-identical to a serial `jobs run` (the same
+//!   invariant PR 7's parallel DES holds per cell, lifted to the fleet).
+//! * **`rename(2)` is atomic.** A claim is a tiny `<job-id>.claim` file
+//!   published through the store's [`write_atomic`] temp-file + rename.
+//!   A worker that wants a cell writes its token and reads the file
+//!   back: whoever's token landed owns the cell, losers move on to the
+//!   next one. (Two workers racing the read-back window can both think
+//!   they won — that costs one duplicate execution, never a wrong or
+//!   torn record, by the CRDT property above.)
+//!
+//! Liveness is heartbeat-by-mtime: the owner refreshes its claim file
+//! every `ttl / 4` while the cell executes; a claim whose mtime is
+//! staler than the TTL belongs to a dead worker and is *taken over* —
+//! the cell re-queues onto whichever worker notices first. After the
+//! record lands the owner deletes its claim; claims that survive a
+//! crash between save and delete are orphans (a claim on a cell that
+//! already has a record) and are garbage-collected coordination-free on
+//! every worker's open, the same pattern as
+//! [`gc_temp_files_in`](crate::engine::store) for torn temp files.
+//!
+//! Claims are *ephemeral coordination state*, never results: they live
+//! beside the records but are invisible to `ids()`/`load_all()` (their
+//! extension is `.claim`, not `.json`), never snapshotted, and never a
+//! `BASELINE_VERSION` concern.
+//!
+//! The fleet claims through [`DirStore`] only — the pack log is
+//! single-writer by design, so a fleet grinds into a directory and
+//! `jobs pack` folds it afterwards. CLI: `jobs worker` /
+//! `jobs fleet-status` (`--claim-ttl` seconds).
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use crate::engine::backend::Backends;
+use crate::engine::job::{job_fingerprint_with, params_fingerprint, Job};
+use crate::engine::store::{is_record_stem, write_atomic, DirStore, ResultStore};
+use crate::sim::SimParams;
+
+/// File extension of a claim (`<job-id>.claim`). Deliberately not
+/// `.json`: the record filters (`is_record_stem` + the `.json` extension
+/// check) must never list a live claim as a cell.
+pub const CLAIM_EXT: &str = "claim";
+
+/// Default heartbeat TTL: a claim untouched for this long belongs to a
+/// dead worker and its cell re-queues. Owners refresh at `ttl / 4`, so
+/// the default tolerates three consecutive missed heartbeats.
+pub const DEFAULT_CLAIM_TTL: Duration = Duration::from_secs(60);
+
+/// A process-unique worker token: what a claim file *contains*, and how
+/// the read-back after publish decides who won. Pid + wall-clock nanos +
+/// a counter, so two workers on one host — or two hosts with colliding
+/// pids — never share a token.
+pub fn default_worker_token() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!(
+        "w-{}-{:x}-{}",
+        std::process::id(),
+        nanos,
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// How a worker behaves: heartbeat TTL, the poll interval while peers
+/// hold claims, its token, and the per-cell DES worker count.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// A claim with no heartbeat for this long is a dead worker's; the
+    /// cell is re-queued by takeover.
+    pub claim_ttl: Duration,
+    /// How long to sleep between passes while every remaining cell is
+    /// freshly claimed by a peer.
+    pub poll: Duration,
+    /// This worker's claim token (see [`default_worker_token`]).
+    pub worker: String,
+    /// DES workers per sim cell (`sim::simulate_parallel`; bitwise
+    /// identical at any count). A fleet worker runs cells one at a time,
+    /// so no cell-concurrency cap applies.
+    pub sim_threads: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            claim_ttl: DEFAULT_CLAIM_TTL,
+            poll: Duration::from_millis(500),
+            worker: default_worker_token(),
+            sim_threads: 1,
+        }
+    }
+}
+
+/// Outcome of one claim attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ClaimOutcome {
+    /// Our token landed — the cell is ours (`recovered` when we took
+    /// over a dead worker's stale claim rather than an unclaimed cell).
+    Won { recovered: bool },
+    /// A peer holds a fresh (heartbeating) claim; move on.
+    Busy,
+    /// We raced a peer for the publish and their token landed; move on.
+    Lost,
+}
+
+/// The claim side of a shared results directory: publish, heartbeat,
+/// release, and coordination-free GC. Claims only ever live in a
+/// [`DirStore`] directory (the pack log is single-writer by design).
+#[derive(Debug)]
+struct Claims {
+    dir: PathBuf,
+    ttl: Duration,
+    token: String,
+}
+
+impl Claims {
+    fn new(dir: &Path, ttl: Duration, token: String) -> Claims {
+        Claims { dir: dir.to_path_buf(), ttl, token }
+    }
+
+    fn path_for(&self, id: &str) -> PathBuf {
+        self.dir.join(format!("{id}.{CLAIM_EXT}"))
+    }
+
+    /// Try to claim `id`. First publish wins; the read-back after our
+    /// rename resolves races (whoever's token is in the file owns the
+    /// cell). A fresh foreign claim is respected; a stale one is a dead
+    /// worker's and is taken over.
+    fn try_claim(&self, id: &str) -> anyhow::Result<ClaimOutcome> {
+        let path = self.path_for(id);
+        let mut recovered = false;
+        if let Ok(md) = std::fs::metadata(&path) {
+            if !metadata_is_stale(&md, self.ttl) {
+                return Ok(ClaimOutcome::Busy);
+            }
+            recovered = true;
+        }
+        write_atomic(&self.dir, &format!("{id}.{CLAIM_EXT}"), &self.token)?;
+        // Read back: the last rename's token is the owner. If a peer
+        // renamed after us, their token is what we read — we lost.
+        let won = std::fs::read_to_string(&path)
+            .map(|t| t == self.token)
+            .unwrap_or(false);
+        Ok(if won {
+            ClaimOutcome::Won { recovered }
+        } else {
+            ClaimOutcome::Lost
+        })
+    }
+
+    /// Heartbeat: refresh the claim's mtime by republishing our token
+    /// (same atomic temp-file + rename as the original publish).
+    fn refresh(&self, id: &str) -> anyhow::Result<()> {
+        write_atomic(&self.dir, &format!("{id}.{CLAIM_EXT}"), &self.token)
+    }
+
+    /// Drop our claim on `id` (after the record landed, or after the
+    /// cell failed locally). Only our own token is deleted — if a peer
+    /// took the claim over meanwhile, theirs is left alone.
+    fn release(&self, id: &str) {
+        let path = self.path_for(id);
+        let ours = std::fs::read_to_string(&path)
+            .map(|t| t == self.token)
+            .unwrap_or(true);
+        if ours {
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    /// Coordination-free GC on open: a claim on a cell that already has
+    /// a record is an orphan (its worker died between save and release —
+    /// the record is terminal, so the claim is garbage whoever wrote
+    /// it). Every worker may run this concurrently; deleting a file
+    /// twice is a no-op. Returns the number reaped.
+    fn gc_orphans(&self, record_ids: &HashSet<String>) -> usize {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return 0;
+        };
+        let mut reaped = 0;
+        for entry in entries.filter_map(|e| e.ok()) {
+            let path = entry.path();
+            let is_claim =
+                path.extension().map(|x| x == CLAIM_EXT).unwrap_or(false);
+            let Some(stem) =
+                path.file_stem().and_then(|s| s.to_str()).filter(|_| is_claim)
+            else {
+                continue;
+            };
+            if is_record_stem(stem)
+                && record_ids.contains(stem)
+                && std::fs::remove_file(&path).is_ok()
+            {
+                reaped += 1;
+            }
+        }
+        reaped
+    }
+}
+
+/// Is this mtime staler than the TTL? A future mtime (clock skew) reads
+/// as fresh — never steal what we cannot age, the same posture as the
+/// temp-file GC.
+fn metadata_is_stale(md: &std::fs::Metadata, ttl: Duration) -> bool {
+    md.modified()
+        .ok()
+        .and_then(|m| m.elapsed().ok())
+        .map(|age| age >= ttl)
+        .unwrap_or(false)
+}
+
+/// What one worker did before the campaign (as it saw it) completed.
+#[derive(Debug, Default)]
+pub struct WorkerSummary {
+    /// Cells this worker claimed, executed and persisted.
+    pub executed: usize,
+    /// Cells that already had a (params-matching) record when visited —
+    /// finished by a peer or a previous run.
+    pub cached: usize,
+    /// Stale (dead-worker) claims this worker took over.
+    pub recovered: usize,
+    /// Orphan claims reaped on open (claim present, record present).
+    pub reaped_orphans: usize,
+    /// Cells whose backend errored under this worker, with the rendered
+    /// error. A poisoned cell never kills the worker — it is skipped
+    /// locally and the grind continues.
+    pub failed: Vec<(Job, String)>,
+}
+
+impl WorkerSummary {
+    /// One human line, mirroring `jobs run`'s summary shape.
+    pub fn render(&self) -> String {
+        format!(
+            "{} executed, {} cached, {} recovered from dead workers, \
+             {} orphan claims reaped, {} failed",
+            self.executed,
+            self.cached,
+            self.recovered,
+            self.reaped_orphans,
+            self.failed.len(),
+        )
+    }
+}
+
+/// Run one fleet worker over `jobs` until every cell has a record (or
+/// failed locally). The worker claims cells one at a time through
+/// `store`'s directory, heartbeats while executing, persists through the
+/// normal atomic record write, releases its claim, and moves on. Cells
+/// freshly claimed by peers are polled until their record lands or
+/// their claim goes stale — so a killed peer's cells re-queue here
+/// within one TTL, and the loop always terminates.
+///
+/// Returns `Err` only for store-level breakage (read-only store, an
+/// unwritable directory); per-cell failures are isolated into
+/// [`WorkerSummary::failed`].
+pub fn run_worker(
+    jobs: &[Job],
+    store: &DirStore,
+    params: &SimParams,
+    cfg: &FleetConfig,
+) -> crate::Result<WorkerSummary> {
+    anyhow::ensure!(
+        !store.is_read_only(),
+        "fleet workers write records; store {} is read-only",
+        store.dir().display()
+    );
+    let backends = Backends::with_sim_threads(params, cfg.sim_threads.max(1));
+    let sim_fp = params_fingerprint(params);
+    let claims = Claims::new(store.dir(), cfg.claim_ttl, cfg.worker.clone());
+
+    let mut summary = WorkerSummary::default();
+    // Coordination-free GC on open: claims whose record already landed.
+    let existing: HashSet<String> = store.ids().into_iter().collect();
+    summary.reaped_orphans = claims.gc_orphans(&existing);
+
+    let mut done: HashSet<String> = HashSet::new();
+    let mut failed: HashSet<String> = HashSet::new();
+    loop {
+        for job in jobs {
+            let id = job.id();
+            if done.contains(&id) || failed.contains(&id) {
+                continue;
+            }
+            let fp = job_fingerprint_with(job, sim_fp);
+            if store.load_if(job, fp).is_some() {
+                summary.cached += 1;
+                done.insert(id);
+                continue;
+            }
+            match claims.try_claim(&id)? {
+                ClaimOutcome::Busy | ClaimOutcome::Lost => {
+                    // A peer owns it; we will re-check next pass.
+                }
+                ClaimOutcome::Won { recovered } => {
+                    if recovered {
+                        summary.recovered += 1;
+                    }
+                    let outcome =
+                        execute_with_heartbeat(&backends, job, &claims, &id)
+                            .and_then(|r| {
+                                store.save(job, &r, fp)?;
+                                Ok(r)
+                            });
+                    match outcome {
+                        Ok(_) => {
+                            summary.executed += 1;
+                            done.insert(id.clone());
+                        }
+                        Err(e) => {
+                            summary.failed.push((job.clone(), format!("{e:#}")));
+                            failed.insert(id.clone());
+                        }
+                    }
+                    // Record landed (or the cell is poisoned): either
+                    // way the claim has served its purpose.
+                    claims.release(&id);
+                }
+            }
+        }
+        let remaining = jobs.iter().any(|j| {
+            let id = j.id();
+            !done.contains(&id) && !failed.contains(&id)
+        });
+        if !remaining {
+            break;
+        }
+        // Every remaining cell is claimed by a peer: wait for its record
+        // to land — or its claim to go stale, which re-queues it here.
+        std::thread::sleep(cfg.poll);
+    }
+    Ok(summary)
+}
+
+/// Execute one cell while a heartbeat thread refreshes its claim every
+/// `ttl / 4`, so a long cell never reads as a dead worker. The thread
+/// stops the moment execution returns (success or failure).
+fn execute_with_heartbeat(
+    backends: &Backends,
+    job: &Job,
+    claims: &Claims,
+    id: &str,
+) -> crate::Result<crate::engine::job::JobResult> {
+    let interval = (claims.ttl / 4).max(Duration::from_millis(10));
+    let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
+    std::thread::scope(|scope| {
+        scope.spawn(move || loop {
+            match stop_rx.recv_timeout(interval) {
+                Err(RecvTimeoutError::Timeout) => {
+                    let _ = claims.refresh(id);
+                }
+                // Stop signal or the worker dropped the sender: done.
+                _ => break,
+            }
+        });
+        let r = backends.run(job);
+        drop(stop_tx);
+        r
+    })
+}
+
+/// A point-in-time census of a fleet campaign, from the shared results
+/// directory alone (no worker cooperation needed): how many cells are
+/// done, in flight, dead-claimed (about to re-queue), or untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FleetStatus {
+    /// Cells in the campaign.
+    pub total: usize,
+    /// Cells with a params-matching record.
+    pub done: usize,
+    /// Cells under a fresh (heartbeating) claim.
+    pub claimed_fresh: usize,
+    /// Cells under a stale claim — a dead worker's; the next worker pass
+    /// re-queues them.
+    pub claimed_stale: usize,
+    /// Cells with no record and no claim.
+    pub pending: usize,
+    /// Claims on cells that already have a record (a worker died between
+    /// save and release); reaped by the next worker's open.
+    pub orphan_claims: usize,
+}
+
+impl FleetStatus {
+    pub fn is_complete(&self) -> bool {
+        self.done == self.total
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{} cells: {} done, {} in flight, {} dead-claimed (will \
+             re-queue), {} pending, {} orphan claims",
+            self.total,
+            self.done,
+            self.claimed_fresh,
+            self.claimed_stale,
+            self.pending,
+            self.orphan_claims,
+        )
+    }
+}
+
+/// Census `jobs` against `store`'s directory under `ttl` (see
+/// [`FleetStatus`]). Read-only: nothing is claimed, reaped or written.
+pub fn fleet_status(
+    jobs: &[Job],
+    store: &DirStore,
+    params: &SimParams,
+    ttl: Duration,
+) -> FleetStatus {
+    let sim_fp = params_fingerprint(params);
+    let mut status = FleetStatus { total: jobs.len(), ..FleetStatus::default() };
+    for job in jobs {
+        let id = job.id();
+        let fp = job_fingerprint_with(job, sim_fp);
+        let done = store.load_if(job, fp).is_some();
+        let claim = std::fs::metadata(
+            store.dir().join(format!("{id}.{CLAIM_EXT}")),
+        )
+        .ok();
+        if done {
+            status.done += 1;
+            if claim.is_some() {
+                status.orphan_claims += 1;
+            }
+            continue;
+        }
+        match claim {
+            Some(md) if metadata_is_stale(&md, ttl) => {
+                status.claimed_stale += 1
+            }
+            Some(_) => status.claimed_fresh += 1,
+            None => status.pending += 1,
+        }
+    }
+    status
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::DependencePattern;
+    use crate::engine::job::{ExecMode, JobSpec};
+    use crate::runtimes::{SystemConfig, SystemKind};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("taskbench_fleet_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn sim_jobs(n: usize) -> Vec<Job> {
+        (0..n)
+            .map(|i| {
+                Job::new(JobSpec {
+                    system: SystemKind::MpiLike,
+                    config: SystemConfig::default(),
+                    pattern: DependencePattern::Stencil1D,
+                    nodes: 1,
+                    cores_per_node: 4,
+                    tasks_per_core: 1,
+                    steps: 6,
+                    grain: 1 << (4 + i as u32),
+                    payload: 0,
+                    net: crate::sim::NetConfig::default(),
+                    mode: ExecMode::Sim,
+                    reps: 1,
+                    warmup: 0,
+                })
+            })
+            .collect()
+    }
+
+    fn quick_cfg() -> FleetConfig {
+        FleetConfig {
+            claim_ttl: Duration::from_millis(80),
+            poll: Duration::from_millis(10),
+            ..FleetConfig::default()
+        }
+    }
+
+    #[test]
+    fn claim_read_back_resolves_ownership() {
+        let dir = tmp("claim_ownership");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = Claims::new(&dir, Duration::from_secs(60), "a".into());
+        let b = Claims::new(&dir, Duration::from_secs(60), "b".into());
+        assert_eq!(
+            a.try_claim("00000000000000aa").unwrap(),
+            ClaimOutcome::Won { recovered: false }
+        );
+        // A fresh foreign claim is respected.
+        assert_eq!(b.try_claim("00000000000000aa").unwrap(), ClaimOutcome::Busy);
+        // Release only deletes our own token.
+        b.release("00000000000000aa");
+        assert_eq!(b.try_claim("00000000000000aa").unwrap(), ClaimOutcome::Busy);
+        a.release("00000000000000aa");
+        assert_eq!(
+            b.try_claim("00000000000000aa").unwrap(),
+            ClaimOutcome::Won { recovered: false }
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_claims_are_taken_over_fresh_ones_respected() {
+        let dir = tmp("claim_stale");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dead = Claims::new(&dir, Duration::from_millis(40), "dead".into());
+        let live = Claims::new(&dir, Duration::from_millis(40), "live".into());
+        assert_eq!(
+            dead.try_claim("00000000000000bb").unwrap(),
+            ClaimOutcome::Won { recovered: false }
+        );
+        // Heartbeating keeps it fresh...
+        dead.refresh("00000000000000bb").unwrap();
+        assert_eq!(
+            live.try_claim("00000000000000bb").unwrap(),
+            ClaimOutcome::Busy
+        );
+        // ...but once the heartbeat stops past the TTL, takeover.
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(
+            live.try_claim("00000000000000bb").unwrap(),
+            ClaimOutcome::Won { recovered: true }
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn orphan_gc_reaps_only_claims_with_records() {
+        let dir = tmp("orphan_gc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = Claims::new(&dir, Duration::from_secs(60), "c".into());
+        c.refresh("00000000000000cc").unwrap(); // record exists → orphan
+        c.refresh("00000000000000dd").unwrap(); // no record → live claim
+        std::fs::write(dir.join("not-a-record.claim"), "x").unwrap();
+        let records: HashSet<String> =
+            std::iter::once("00000000000000cc".to_string()).collect();
+        assert_eq!(c.gc_orphans(&records), 1);
+        assert!(!dir.join("00000000000000cc.claim").exists());
+        assert!(dir.join("00000000000000dd.claim").exists());
+        assert!(dir.join("not-a-record.claim").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn single_worker_grinds_a_campaign_to_done() {
+        let dir = tmp("single_worker");
+        let store = DirStore::new(&dir);
+        let jobs = sim_jobs(4);
+        let p = SimParams::default();
+        let s = run_worker(&jobs, &store, &p, &quick_cfg()).unwrap();
+        assert_eq!(s.executed, 4);
+        assert_eq!(s.cached, 0);
+        assert!(s.failed.is_empty());
+        assert_eq!(store.ids().len(), 4);
+        // No claims survive a clean grind.
+        let status =
+            fleet_status(&jobs, &store, &p, Duration::from_millis(80));
+        assert!(status.is_complete(), "{}", status.render());
+        assert_eq!(status.orphan_claims, 0);
+        // A second worker over the same store is a pure cache pass.
+        let s2 = run_worker(&jobs, &store, &p, &quick_cfg()).unwrap();
+        assert_eq!(s2.executed, 0);
+        assert_eq!(s2.cached, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_isolates_poisoned_cells() {
+        // A cell the backend rejects (native mode + sim-only payload
+        // override) must not kill the worker: the healthy cells land,
+        // the poison is reported, and no claim is left behind.
+        let dir = tmp("poisoned");
+        let store = DirStore::new(&dir);
+        let mut jobs = sim_jobs(3);
+        let mut bad = jobs[0].spec.clone();
+        bad.mode = ExecMode::Native;
+        bad.payload = 512;
+        jobs.insert(1, Job::new(bad));
+        let p = SimParams::default();
+        let s = run_worker(&jobs, &store, &p, &quick_cfg()).unwrap();
+        assert_eq!(s.executed, 3);
+        assert_eq!(s.failed.len(), 1);
+        assert_eq!(s.failed[0].0.id(), jobs[1].id());
+        assert_eq!(store.ids().len(), 3);
+        assert!(
+            !store.dir().join(format!("{}.{CLAIM_EXT}", jobs[1].id())).exists(),
+            "failed cell left a claim behind"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fleet_status_census_is_accurate() {
+        let dir = tmp("status");
+        let store = DirStore::new(&dir);
+        let jobs = sim_jobs(4);
+        let p = SimParams::default();
+        let ttl = Duration::from_millis(60);
+        // One done cell, one fresh claim, one stale claim, one pending.
+        run_worker(&jobs[..1], &store, &p, &quick_cfg()).unwrap();
+        let c = Claims::new(store.dir(), ttl, "peer".into());
+        c.refresh(&jobs[2].id()).unwrap(); // goes stale below
+        std::thread::sleep(Duration::from_millis(70));
+        c.refresh(&jobs[1].id()).unwrap(); // fresh
+        let s = fleet_status(&jobs, &store, &p, ttl);
+        assert_eq!(
+            (s.total, s.done, s.claimed_fresh, s.claimed_stale, s.pending),
+            (4, 1, 1, 1, 1),
+            "{}",
+            s.render()
+        );
+        assert!(!s.is_complete());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_refuses_a_read_only_store() {
+        let dir = tmp("read_only_worker");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = DirStore::read_only(&dir);
+        let err = run_worker(&sim_jobs(1), &store, &SimParams::default(), &quick_cfg())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("read-only"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_tokens_are_unique() {
+        let a = default_worker_token();
+        let b = default_worker_token();
+        assert_ne!(a, b);
+    }
+}

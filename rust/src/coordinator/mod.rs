@@ -23,6 +23,14 @@
 //!   mismatch is a hard failure, metric drift beyond the campaign's
 //!   [`DiffTolerances`] is a regression, and missing/extra cells are
 //!   reported so stale baselines are visible.
+//! * **Fleet mode** — [`fleet`] replaces manual `--shard k/N` with
+//!   automatic distribution: uncoordinated `jobs worker` processes
+//!   claim cells through the store (atomic-rename claim files with
+//!   mtime heartbeats), recover dead workers' cells after a TTL, and
+//!   merge byte-identically because records are content-hashed and sim
+//!   results bitwise deterministic.
+
+pub mod fleet;
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -88,12 +96,51 @@ impl std::fmt::Display for Shard {
 /// What a [`run_jobs`] invocation did.
 #[derive(Debug)]
 pub struct RunSummary {
-    /// Jobs actually executed this invocation.
+    /// Jobs actually executed (attempted) this invocation — including
+    /// the ones that failed.
     pub executed: usize,
     /// Jobs satisfied from the store without touching a task graph.
     pub cached: usize,
-    /// Every owned job's result, in job-list order (cached + executed).
+    /// Every owned job's *successful* result, in job-list order
+    /// (cached + executed). Failed cells are in [`Self::failed`].
     pub results: Vec<(Job, JobResult)>,
+    /// Cells whose backend errored, in job-list order, with the rendered
+    /// error. Failures are isolated per cell: every other runnable cell
+    /// still executed and persisted before this summary was assembled,
+    /// so one poisoned cell never discards a campaign's sibling results
+    /// (the fleet worker loop depends on exactly this).
+    pub failed: Vec<(Job, String)>,
+}
+
+impl RunSummary {
+    /// Render the failed cells, one line each (empty string when clean).
+    pub fn render_failures(&self) -> String {
+        let mut out = String::new();
+        for (job, err) in &self.failed {
+            out.push_str(&format!(
+                "FAILED   {}  {err}  [{}]\n",
+                job.id(),
+                job.spec.canonical(),
+            ));
+        }
+        out
+    }
+
+    /// Turn a partially-failed run into an error — *after* every
+    /// runnable cell finished and persisted. Callers that need the full
+    /// result set (snapshot, diff, the CLI exit status) gate through
+    /// this; callers that tolerate holes read [`Self::failed`] directly.
+    pub fn require_complete(self) -> crate::Result<RunSummary> {
+        if self.failed.is_empty() {
+            return Ok(self);
+        }
+        anyhow::bail!(
+            "{} of {} cells failed (the rest completed and persisted):\n{}",
+            self.failed.len(),
+            self.failed.len() + self.results.len(),
+            self.render_failures().trim_end(),
+        );
+    }
 }
 
 /// The sim-thread budget policy: how many DES workers each sim cell may
@@ -143,13 +190,14 @@ pub fn run_jobs(
     let sim_fp = params_fingerprint(params);
     let job_fp = |job: &Job| job_fingerprint_with(job, sim_fp);
     let mine = shard.select(jobs);
-    let mut slots: Vec<Option<JobResult>> = vec![None; mine.len()];
+    let mut slots: Vec<Option<crate::Result<JobResult>>> =
+        (0..mine.len()).map(|_| None).collect();
     let (mut todo_concurrent, mut todo_exclusive) = (Vec::new(), Vec::new());
     for (i, job) in mine.iter().enumerate() {
         // A record counts as a hit only if it was computed under the
         // params its mode depends on; anything else re-runs + overwrites.
         if let Some(r) = store.and_then(|s| s.load_if(job, job_fp(job))) {
-            slots[i] = Some(r);
+            slots[i] = Some(Ok(r));
         } else if backends.for_job(job).concurrent_safe(job) {
             todo_concurrent.push(i);
         } else {
@@ -180,9 +228,11 @@ pub fn run_jobs(
 
     // Overlappable jobs (sim cells are deterministic pure functions;
     // validation cells measure correctness, not time): run them wide.
+    // A failed cell is recorded in its slot, never propagated early —
+    // every runnable sibling still executes and persists.
     if threads <= 1 {
         for &i in &todo_concurrent {
-            slots[i] = Some(run_one(i)?);
+            slots[i] = Some(run_one(i));
         }
     } else {
         let next = AtomicUsize::new(0);
@@ -199,23 +249,27 @@ pub fn run_jobs(
             }
         });
         for (i, r) in done.into_inner().unwrap() {
-            slots[i] = Some(r?);
+            slots[i] = Some(r);
         }
     }
 
     // Exclusive jobs (native wall clocks): serial — their times are the
     // data, so the machine is theirs alone.
     for &i in &todo_exclusive {
-        slots[i] = Some(run_one(i)?);
+        slots[i] = Some(run_one(i));
     }
 
-    // Assemble the ordered summary (everything already persisted above).
+    // Assemble the ordered summary (everything already persisted above):
+    // successes and failures separately, each in job-list order.
     let mut results = Vec::with_capacity(mine.len());
+    let mut failed = Vec::new();
     for (i, job) in mine.iter().enumerate() {
-        let r = slots[i].take().expect("every owned job has a result");
-        results.push(((*job).clone(), r));
+        match slots[i].take().expect("every owned job has an outcome") {
+            Ok(r) => results.push(((*job).clone(), r)),
+            Err(e) => failed.push(((*job).clone(), format!("{e:#}"))),
+        }
     }
-    Ok(RunSummary { executed, cached, results })
+    Ok(RunSummary { executed, cached, results, failed })
 }
 
 /// One metric outside its tolerance in a golden-record diff.
@@ -442,7 +496,11 @@ pub fn diff_jobs(
     params: &SimParams,
     tol: DiffTolerances,
 ) -> crate::Result<DiffReport> {
-    let live = run_jobs(jobs, store, shard, threads, sim_threads, params)?;
+    // A failed live cell has nothing to classify; the gate needs every
+    // cell measured. Failures still surface only after all runnable
+    // cells finished (and persisted, when a live store is given).
+    let live = run_jobs(jobs, store, shard, threads, sim_threads, params)?
+        .require_complete()?;
     let mut cells = Vec::with_capacity(live.results.len());
     for (job, result) in &live.results {
         let diff = match baseline.lookup(job) {
@@ -694,6 +752,53 @@ mod tests {
         let rendered = report.render();
         assert!(rendered.contains("MISSING"), "{rendered}");
         assert!(rendered.contains("EXTRA"), "{rendered}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_cells_are_isolated_not_fatal() {
+        // Two poisoned cells — a Validate one (concurrent path) and a
+        // Native one (exclusive path), both carrying a sim-only payload
+        // override the native backend rejects — among three healthy sim
+        // cells. The run must complete, persist every healthy record,
+        // and report both failures in job-list order; only
+        // `require_complete` turns them into an error.
+        let dir = std::env::temp_dir()
+            .join(format!("taskbench_coord_fail_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut jobs = sim_jobs(3);
+        let mut bad_concurrent = jobs[0].spec.clone();
+        bad_concurrent.mode = ExecMode::Validate;
+        bad_concurrent.payload = 512;
+        let mut bad_exclusive = jobs[0].spec.clone();
+        bad_exclusive.mode = ExecMode::Native;
+        bad_exclusive.payload = 512;
+        jobs.insert(1, Job::new(bad_concurrent));
+        jobs.push(Job::new(bad_exclusive));
+
+        let store = DirStore::new(&dir);
+        let p = SimParams::default();
+        let summary =
+            run_jobs(&jobs, Some(&store), Shard::full(), 2, 1, &p).unwrap();
+        assert_eq!(summary.executed, 5);
+        assert_eq!(summary.results.len(), 3, "{}", summary.render_failures());
+        assert_eq!(summary.failed.len(), 2);
+        assert_eq!(summary.failed[0].0.id(), jobs[1].id());
+        assert_eq!(summary.failed[1].0.id(), jobs[4].id());
+        // The healthy siblings all persisted despite the failures.
+        assert_eq!(store.ids().len(), 3);
+        let err = summary.require_complete().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("2 of 5 cells failed"), "{msg}");
+        assert!(msg.contains(&jobs[1].id()), "{msg}");
+
+        // A clean run passes through require_complete untouched.
+        let clean = run_jobs(&sim_jobs(2), None, Shard::full(), 1, 1, &p)
+            .unwrap()
+            .require_complete()
+            .unwrap();
+        assert_eq!(clean.results.len(), 2);
+        assert!(clean.failed.is_empty());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

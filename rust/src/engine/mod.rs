@@ -44,6 +44,9 @@ pub use store::{DirStore, ResultStore};
 
 // The coordinator is the execution half of the engine; re-export its
 // surface so `engine::*` is one-stop.
+pub use crate::coordinator::fleet::{
+    fleet_status, run_worker, FleetConfig, FleetStatus, WorkerSummary,
+};
 pub use crate::coordinator::{
     diff_jobs, run_jobs, CellDiff, DiffReport, MetricDrift, RunSummary, Shard,
 };

@@ -69,7 +69,10 @@ pub(crate) fn write_atomic(
 /// Does `stem` look like a job content hash (16 hex chars)? The shared
 /// record-file filter: `ids` and `load_all` apply the *same* predicate,
 /// so a stray parseable non-record file can never be treated as a cell
-/// by one listing and skipped by the other.
+/// by one listing and skipped by the other. Note the stem alone is not
+/// sufficient — fleet claim files (`<job-id>.claim`,
+/// [`crate::coordinator::fleet`]) share the record stem and are kept out
+/// of the listings by the `.json` extension check at every call site.
 pub(crate) fn is_record_stem(stem: &str) -> bool {
     stem.len() == 16 && stem.bytes().all(|b| b.is_ascii_hexdigit())
 }
@@ -440,6 +443,31 @@ mod tests {
         want.sort();
         assert_eq!(store.ids(), want);
         assert_eq!(store.load_all().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn claim_files_never_masquerade_as_records() {
+        // Fleet claims live beside the records as `<job-id>.claim`
+        // (coordinator::fleet). Their stem IS a valid record stem, so
+        // the `.json` extension check is what keeps them out of
+        // `ids()`/`load_all()` — and therefore out of `jobs diff
+        // --strict`'s "extra cell" scan. A live fleet must never read
+        // as baseline drift.
+        let dir = tmp("claims");
+        let store = DirStore::new(&dir);
+        let j = job(64);
+        store.save(&j, &result(1.0), 7).unwrap();
+        // A claim for a *different* (in-flight) cell, plus a stray
+        // orphan claim for the finished one.
+        let j2 = job(128);
+        std::fs::write(dir.join(format!("{}.claim", j2.id())), "w-1-2-3")
+            .unwrap();
+        std::fs::write(dir.join(format!("{}.claim", j.id())), "w-4-5-6")
+            .unwrap();
+        assert_eq!(store.ids(), vec![j.id()], "a claim leaked into ids()");
+        assert_eq!(store.load_all().len(), 1);
+        assert!(store.load(&j2).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

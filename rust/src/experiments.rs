@@ -56,6 +56,7 @@ fn run_campaign(
 ) -> HashMap<String, JobResult> {
     let jobs = campaign.jobs();
     let summary = run_jobs(&jobs, None, Shard::full(), 0, 1, params)
+        .and_then(crate::coordinator::RunSummary::require_complete)
         .expect("in-memory sim campaign cannot fail");
     summary.results.into_iter().map(|(j, r)| (j.id(), r)).collect()
 }

@@ -46,7 +46,13 @@
 //! native jobs, and persists every [`engine::JobResult`] as a JSON record
 //! under `results/` keyed by content hash — so re-running a finished
 //! campaign is a pure cache hit (zero graph executions) and interrupted
-//! sweeps resume for free.
+//! sweeps resume for free. Failed cells never abort a sweep: every
+//! runnable cell completes and the failures are reported together at
+//! the end. Beyond manual sharding, [`coordinator::fleet`]
+//! (`jobs worker`) lets uncoordinated processes on any hosts sharing
+//! the results directory claim cells through the store and grind one
+//! campaign to completion with dead-worker recovery — the merged
+//! directory is byte-identical to a serial run.
 //!
 //! Reproduce Fig 1 through the engine:
 //!

@@ -22,7 +22,23 @@
 //! repro jobs diff  [--campaign ...] [--baseline DIR] [--tol X] [--strict] [--sim-threads N]
 //! repro jobs pack  [--results DIR]                           # compact to results.pack
 //! repro jobs bench-sim [--out BENCH_sim.json] [--steps N]    # DES throughput
+//! repro jobs worker [--campaign ...] [--results DIR] [--claim-ttl SECS]  # fleet worker
+//! repro jobs fleet-status [--campaign ...] [--results DIR]   # fleet census
 //! ```
+//!
+//! `jobs worker` is the coordination-free fleet runner: start any number
+//! of worker processes (or hosts) against one shared results directory
+//! and they divide the campaign among themselves by claiming cells
+//! through `<job-id>.claim` files (atomic rename; mtime heartbeats; a
+//! claim stale past `--claim-ttl` is a dead worker's and its cell
+//! re-queues). Because records are content-hashed and sim results
+//! bitwise deterministic, the merged directory is byte-identical to a
+//! serial `jobs run`. Workers run cells one at a time — fleet
+//! parallelism is the worker count (`--sim-threads` still shards each
+//! cell's DES). Claims go through `DirStore` records only; `--store
+//! pack` is refused (the pack log is single-writer — `jobs pack`
+//! afterwards). `jobs fleet-status` prints a read-only census:
+//! done / in-flight / dead-claimed / pending cells.
 //!
 //! Every `jobs` action reads/writes records through a [`ResultStore`]
 //! backend selected by `--store dir|pack` (default `dir`, one JSON file
@@ -101,7 +117,14 @@ fn usage() -> ! {
          \x20      repro jobs snapshot [--campaign ...] [--baseline DIR]\n\
          \x20      repro jobs diff [--campaign ...] [--baseline DIR] [--tol X] [--strict]\n\
          \x20      repro jobs pack [--results DIR]\n\
+         \x20      repro jobs worker [--campaign ...] [--results DIR] [--claim-ttl SECS] [--sim-threads N]\n\
+         \x20      \x20     uncoordinated fleet worker: claims cells via <id>.claim files in the shared\n\
+         \x20      \x20     results dir, heartbeats, re-queues claims stale past the TTL (default 60s),\n\
+         \x20      \x20     and exits when every cell has a record; DirStore only (pack is single-writer)\n\
+         \x20      repro jobs fleet-status [--campaign ...] [--results DIR] [--claim-ttl SECS]\n\
          \x20      repro jobs bench-sim [--out BENCH_sim.json] [--steps N] [--overdecompose N]\n\
+         note: a present-but-malformed flag value (e.g. --steps x, --nodes 1,y) is a hard\n\
+         error, never a silent fallback to the default\n\
          see the crate docs for details"
     );
     std::process::exit(2);
@@ -128,19 +151,42 @@ fn parse_args(args: &[String]) -> HashMap<String, String> {
     map
 }
 
+/// Parse `--key value`, defaulting when the flag is absent. A flag that
+/// *is* present but malformed is a hard error naming it — the
+/// `--grains`/`--payloads` convention, applied uniformly: silently
+/// falling back to a default would run a very different experiment (and
+/// blow a CI time budget opaquely). A bare `--key` followed by another
+/// flag carries the value `true`, so a bare numeric flag errors here
+/// too instead of quietly meaning "default".
 fn get<T: std::str::FromStr>(m: &HashMap<String, String>, k: &str, default: T) -> T {
-    m.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    match m.get(k) {
+        None => default,
+        Some(v) => v.parse().unwrap_or_else(|_| {
+            eprintln!("bad --{k} `{v}` (value does not parse for this flag)");
+            std::process::exit(2);
+        }),
+    }
 }
 
+/// Comma-separated integer list flags (`--nodes 1,2,4`). Same hard-error
+/// contract as [`get`]: one malformed token fails the invocation rather
+/// than silently running the sweep without it.
 fn get_list(m: &HashMap<String, String>, k: &str, default: Vec<usize>) -> Vec<usize> {
-    m.get(k)
-        .map(|v| {
-            v.split(',')
-                .filter_map(|s| s.trim().parse().ok())
-                .collect::<Vec<usize>>()
-        })
-        .filter(|v| !v.is_empty())
-        .unwrap_or(default)
+    let Some(v) = m.get(k) else { return default };
+    let mut out = Vec::new();
+    for tok in v.split(',') {
+        match tok.trim().parse() {
+            Ok(x) => out.push(x),
+            Err(_) => {
+                eprintln!(
+                    "bad --{k} entry `{tok}` (want comma-separated \
+                     integers, e.g. --{k} 1,2,4)"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    out
 }
 
 fn sim_params(m: &HashMap<String, String>) -> SimParams {
@@ -160,12 +206,10 @@ fn base_config(m: &HashMap<String, String>) -> ExperimentConfig {
         }),
         None => ExperimentConfig::default(),
     };
-    if let Some(s) = m.get("steps") {
-        cfg.steps = s.parse().unwrap_or(cfg.steps);
-    }
-    if let Some(c) = m.get("cores") {
-        cfg.cores = c.parse().unwrap_or(cfg.cores);
-    }
+    // Hard-error overrides (see `get`): a malformed --steps/--cores must
+    // never silently run the config-file (or built-in) value instead.
+    cfg.steps = get(m, "steps", cfg.steps);
+    cfg.cores = get(m, "cores", cfg.cores);
     cfg
 }
 
@@ -519,6 +563,86 @@ fn cmd_jobs_calibrate(store: &dyn ResultStore, m: &HashMap<String, String>) {
     }
 }
 
+/// `jobs worker` / `jobs fleet-status`: the coordination-free fleet
+/// runner (claims through the shared results directory; see
+/// `coordinator::fleet`). Always a [`DirStore`] — the caller has already
+/// rejected `--store pack`.
+fn cmd_jobs_fleet(
+    action: &str,
+    m: &HashMap<String, String>,
+    cfg: &ExperimentConfig,
+    results_dir: String,
+) {
+    use taskbench_amt::coordinator::fleet::DEFAULT_CLAIM_TTL;
+    use taskbench_amt::engine::{fleet_status, run_worker, FleetConfig};
+    let store = DirStore::new(results_dir);
+    let campaign = jobs_campaign(m, cfg);
+    // Same calibration contract as `jobs run`/`list`: only the worker
+    // (an executing action) may calibrate anew; the census reads
+    // whatever is persisted so its `done` column matches the workers'.
+    let params = if get(m, "calibrate", cfg.calibrate) {
+        match action {
+            "worker" => taskbench_amt::engine::params::load_or_calibrate(&store)
+                .unwrap_or_else(|e| {
+                    eprintln!("calibration failed: {e:#}");
+                    std::process::exit(1);
+                }),
+            _ => taskbench_amt::engine::params::load_persisted(&store)
+                .unwrap_or_default(),
+        }
+    } else {
+        SimParams::default()
+    };
+    let ttl_secs = get(m, "claim-ttl", DEFAULT_CLAIM_TTL.as_secs());
+    if ttl_secs == 0 {
+        eprintln!("bad --claim-ttl `0` (want a TTL of at least 1 second)");
+        std::process::exit(2);
+    }
+    let ttl = std::time::Duration::from_secs(ttl_secs);
+    let jobs = campaign.jobs();
+    match action {
+        "worker" => {
+            let fleet_cfg = FleetConfig {
+                claim_ttl: ttl,
+                sim_threads: get(m, "sim-threads", 1usize).max(1),
+                ..FleetConfig::default()
+            };
+            let summary = run_worker(&jobs, &store, &params, &fleet_cfg)
+                .unwrap_or_else(|e| {
+                    eprintln!("jobs worker failed: {e:#}");
+                    std::process::exit(1);
+                });
+            for (job, err) in &summary.failed {
+                eprintln!(
+                    "FAILED   {}  {err}  [{}]",
+                    job.id(),
+                    job.spec.canonical(),
+                );
+            }
+            println!(
+                "campaign {}: worker {} done — {} (claim-ttl {ttl_secs}s, \
+                 dir store in {})",
+                campaign.kind.id(),
+                fleet_cfg.worker,
+                summary.render(),
+                store.dir().display(),
+            );
+            if !summary.failed.is_empty() {
+                std::process::exit(1);
+            }
+        }
+        _ => {
+            let status = fleet_status(&jobs, &store, &params, ttl);
+            println!(
+                "campaign {} in {}: {}",
+                campaign.kind.id(),
+                store.dir().display(),
+                status.render(),
+            );
+        }
+    }
+}
+
 fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
     let cfg = base_config(m);
     let results_dir =
@@ -545,6 +669,23 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                 std::process::exit(1);
             }
         }
+        return;
+    }
+    if action == "worker" || action == "fleet-status" {
+        // Fleet workers claim cells through `<id>.claim` files beside
+        // the directory records; the pack log is single-writer by
+        // design, so `--store pack` is a hard error here — grind into a
+        // directory, then `jobs pack` afterwards.
+        if m.get("store").map(String::as_str).unwrap_or("dir") != "dir" {
+            eprintln!(
+                "jobs {action} requires --store dir: fleet workers claim \
+                 cells through directory records, and the pack log is \
+                 single-writer by design (run the fleet against a \
+                 directory, then fold it with `jobs pack`)"
+            );
+            std::process::exit(2);
+        }
+        cmd_jobs_fleet(action, m, &cfg, results_dir);
         return;
     }
     let store = open_store(m, results_dir);
@@ -659,15 +800,27 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                         eprintln!("jobs run failed: {e:#}");
                         std::process::exit(1);
                     });
+            // Failures are isolated per cell: every runnable sibling has
+            // executed and persisted by now. Report them, then fail the
+            // invocation — a partial campaign must not exit 0.
+            eprint!("{}", summary.render_failures());
+            let failed_note = if summary.failed.is_empty() {
+                String::new()
+            } else {
+                format!(", {} FAILED", summary.failed.len())
+            };
             println!(
-                "campaign {}: {} executed, {} cached (shard {shard}, \
-                 {} store in {}, sim-threads {sim_threads})",
+                "campaign {}: {} executed, {} cached{failed_note} \
+                 (shard {shard}, {} store in {}, sim-threads {sim_threads})",
                 campaign.kind.id(),
                 summary.executed,
                 summary.cached,
                 store.backend_id(),
                 store.dir().display(),
             );
+            if !summary.failed.is_empty() {
+                std::process::exit(1);
+            }
         }
         "table" => {
             let (map, missing) = jobs_results(&campaign, store);
@@ -721,8 +874,12 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                     );
                 }
             }
+            // A baseline must cover every cell: a partially-failed
+            // measurement run aborts the pin (after all runnable cells
+            // finished, so the error lists every poisoned cell at once).
             let summary =
                 run_jobs(&jobs, None, shard, threads, sim_threads, &params)
+                    .and_then(taskbench_amt::coordinator::RunSummary::require_complete)
                     .unwrap_or_else(|e| {
                         eprintln!("jobs snapshot failed: {e:#}");
                         std::process::exit(1);

@@ -1,0 +1,228 @@
+//! Fleet-runner acceptance tests (ISSUE 8):
+//!
+//! * N uncoordinated workers grinding one campaign into a shared
+//!   directory produce a results directory *byte-identical* to a serial
+//!   `jobs run` — the fleet's CRDT contract (content-hashed ids ×
+//!   bitwise-deterministic sim results), the same invariant PR 7's
+//!   parallel DES holds per cell;
+//! * a dead worker's stale claim (old mtime, no record) is re-queued:
+//!   a surviving worker takes it over, executes the cell, and reaps the
+//!   claim;
+//! * claim files are ephemeral coordination state — invisible to the
+//!   golden diff (`--strict` must never call a live claim an "extra
+//!   cell") and orphans (claim + record) are GC'd coordination-free.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use taskbench_amt::coordinator::{diff_jobs, run_jobs, Shard};
+use taskbench_amt::engine::{
+    fleet_status, run_worker, Campaign, CampaignKind, DiffTolerances,
+    DirStore, FleetConfig, ReplayBackend, ResultStore,
+};
+use taskbench_amt::runtimes::SystemKind;
+use taskbench_amt::sim::SimParams;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("taskbench_fleet_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+/// A campaign small enough for the DES to chew through in milliseconds,
+/// but wide enough (12 cells) that two workers genuinely interleave.
+fn small_campaign() -> Campaign {
+    let mut c = Campaign::new(
+        CampaignKind::Table2,
+        vec![SystemKind::MpiLike, SystemKind::CharmLike],
+        6,
+        &[1 << 4, 1 << 8, 1 << 12],
+    );
+    c.cores_per_node = 4;
+    c.tasks_per_core = vec![1, 2];
+    c
+}
+
+fn quick_cfg() -> FleetConfig {
+    FleetConfig {
+        claim_ttl: Duration::from_millis(100),
+        poll: Duration::from_millis(10),
+        ..FleetConfig::default()
+    }
+}
+
+/// Every record file in `dir`, name → exact bytes.
+fn record_files(dir: &Path) -> BTreeMap<String, Vec<u8>> {
+    std::fs::read_dir(dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            e.path().extension().map(|x| x == "json").unwrap_or(false)
+        })
+        .map(|e| {
+            (
+                e.file_name().to_string_lossy().into_owned(),
+                std::fs::read(e.path()).unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn two_workers_merge_byte_identically_with_a_serial_run() {
+    let serial_dir = tmpdir("serial");
+    let fleet_dir = tmpdir("fleet");
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let p = SimParams::default();
+
+    // The reference: one serial `jobs run`.
+    let serial_store = DirStore::new(&serial_dir);
+    let summary =
+        run_jobs(&jobs, Some(&serial_store), Shard::full(), 1, 1, &p).unwrap();
+    assert_eq!(summary.executed, jobs.len());
+
+    // The fleet: two uncoordinated in-process workers, one shared dir.
+    let fleet_store = DirStore::new(&fleet_dir);
+    let (a, b) = std::thread::scope(|scope| {
+        let ta = scope
+            .spawn(|| run_worker(&jobs, &fleet_store, &p, &quick_cfg()));
+        let tb = scope
+            .spawn(|| run_worker(&jobs, &fleet_store, &p, &quick_cfg()));
+        (ta.join().unwrap().unwrap(), tb.join().unwrap().unwrap())
+    });
+    // Each worker accounts for every cell exactly once (executed by it,
+    // or finished by its peer = cached). A lost claim race can cost a
+    // duplicate execution — never a missing or divergent record.
+    assert_eq!(a.executed + a.cached, jobs.len(), "worker a: {a:?}");
+    assert_eq!(b.executed + b.cached, jobs.len(), "worker b: {b:?}");
+    assert!(a.executed + b.executed >= jobs.len());
+    assert!(a.failed.is_empty() && b.failed.is_empty());
+
+    // The acceptance gate: the merged fleet directory is byte-identical
+    // to the serial run's — same file names, same bytes.
+    let serial = record_files(&serial_dir);
+    let fleet = record_files(&fleet_dir);
+    let serial_names: Vec<&String> = serial.keys().collect();
+    let fleet_names: Vec<&String> = fleet.keys().collect();
+    assert_eq!(serial_names, fleet_names);
+    for (name, bytes) in &serial {
+        assert!(
+            fleet.get(name) == Some(bytes),
+            "record {name} differs between serial and fleet runs"
+        );
+    }
+    // No coordination state survives a completed grind.
+    let census =
+        fleet_status(&jobs, &fleet_store, &p, Duration::from_millis(100));
+    assert!(census.is_complete(), "{}", census.render());
+    assert_eq!(census.orphan_claims, 0);
+
+    // And a `jobs run` over the fleet's store is a pure cache pass —
+    // the CI fleet-smoke leg's `0 executed` assertion, in-process.
+    let rerun =
+        run_jobs(&jobs, Some(&fleet_store), Shard::full(), 1, 1, &p).unwrap();
+    assert_eq!(rerun.executed, 0);
+    assert_eq!(rerun.cached, jobs.len());
+
+    let _ = std::fs::remove_dir_all(&serial_dir);
+    let _ = std::fs::remove_dir_all(&fleet_dir);
+}
+
+#[test]
+fn dead_workers_stale_claim_is_requeued_and_reaped() {
+    let dir = tmpdir("dead_worker");
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let p = SimParams::default();
+    let store = DirStore::new(&dir);
+
+    // A worker died holding a claim: the claim file is there, its
+    // heartbeat stopped (mtime ages past the TTL), and no record landed.
+    let victim = &jobs[0];
+    let claim = dir.join(format!("{}.claim", victim.id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(&claim, "w-dead-worker-token").unwrap();
+    std::thread::sleep(Duration::from_millis(150)); // TTL is 100ms
+
+    // A pre-grind census sees the dead claim for what it is.
+    let before = fleet_status(&jobs, &store, &p, Duration::from_millis(100));
+    assert_eq!(before.claimed_stale, 1, "{}", before.render());
+    assert_eq!(before.done, 0);
+
+    // The survivor re-queues the cell, executes it, and reaps the claim.
+    let s = run_worker(&jobs, &store, &p, &quick_cfg()).unwrap();
+    assert_eq!(s.executed, jobs.len());
+    assert_eq!(s.recovered, 1, "stale claim was not taken over: {s:?}");
+    assert!(s.failed.is_empty());
+    assert!(store.load(victim).is_some(), "victim cell never completed");
+    assert!(!claim.exists(), "stale claim not reaped after recovery");
+
+    let after = fleet_status(&jobs, &store, &p, Duration::from_millis(100));
+    assert!(after.is_complete(), "{}", after.render());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn orphan_claims_are_gcd_on_worker_open() {
+    // A worker died *between* saving the record and releasing its claim:
+    // the next worker's open reaps the orphan without coordination.
+    let dir = tmpdir("orphan");
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let p = SimParams::default();
+    let store = DirStore::new(&dir);
+    run_jobs(&jobs, Some(&store), Shard::full(), 1, 1, &p).unwrap();
+    let orphan = dir.join(format!("{}.claim", jobs[1].id()));
+    std::fs::write(&orphan, "w-crashed-after-save").unwrap();
+
+    let census = fleet_status(&jobs, &store, &p, Duration::from_secs(60));
+    assert_eq!(census.orphan_claims, 1, "{}", census.render());
+
+    let s = run_worker(&jobs, &store, &p, &quick_cfg()).unwrap();
+    assert_eq!(s.reaped_orphans, 1);
+    assert_eq!(s.executed, 0, "an orphan claim must not force a re-run");
+    assert_eq!(s.cached, jobs.len());
+    assert!(!orphan.exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn live_claims_are_invisible_to_a_strict_golden_diff() {
+    // Regression (ISSUE 8): a `<job-id>.claim` in a diffed store must
+    // never surface as an "extra cell" — claims are coordination state,
+    // not records, and `jobs diff --strict` gates on records alone.
+    let dir = tmpdir("diff_claims");
+    let campaign = small_campaign();
+    let jobs = campaign.jobs();
+    let p = SimParams::default();
+    let bstore = DirStore::new(&dir);
+    run_jobs(&jobs, Some(&bstore), Shard::full(), 1, 1, &p).unwrap();
+    // A live claim (in-flight peer) and an orphan claim in the baseline
+    // directory — e.g. a fleet dir pinned mid-grind.
+    std::fs::write(dir.join(format!("{}.claim", jobs[0].id())), "w-live")
+        .unwrap();
+    std::fs::write(dir.join("00000000deadbeef.claim"), "w-other").unwrap();
+
+    let baseline = ReplayBackend::open(&dir);
+    let report = diff_jobs(
+        &jobs,
+        None,
+        &baseline,
+        Shard::full(),
+        1,
+        1,
+        &p,
+        DiffTolerances::exact(),
+    )
+    .unwrap();
+    assert!(
+        report.extra.is_empty(),
+        "claims reported as extra cells: {:?}",
+        report.extra
+    );
+    assert!(report.is_strictly_clean(), "{}", report.render());
+    let _ = std::fs::remove_dir_all(&dir);
+}
