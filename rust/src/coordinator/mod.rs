@@ -154,7 +154,11 @@ impl RunSummary {
 ///   exceed host parallelism.
 ///
 /// The cap only changes *speed*, never *results*: the sharded DES is
-/// bitwise identical to the sequential engine at every thread count.
+/// bitwise identical to the sequential engine at every thread count —
+/// including NIC-contention cells, whose deferred sends replay through
+/// the per-node wire shard rather than a single-threaded merge, so the
+/// contended campaigns (`fig5_stress`, `fig2_huge`) scale with this
+/// budget too.
 pub fn effective_sim_threads(
     requested: usize,
     cell_threads: usize,

@@ -12,9 +12,13 @@
 //! engine ([`simulate_parallel`] on [`PAR_THREADS`] workers), recording
 //! `parallel_speedup` over the sequential windowed run and a
 //! `parallel_bitwise` parity bit — the speedup is hardware-dependent and
-//! recorded honestly; the parity bit is a hard gate like the others. CI
-//! publishes the file as a build artifact, so the perf trajectory has
-//! data points instead of anecdotes.
+//! recorded honestly; the parity bit is a hard gate like the others.
+//! Since the contended wire is sharded per node too, the same pair of
+//! axes is recorded under NIC contention
+//! (`contention_parallel_speedup` / `contention_parallel_bitwise`) — the
+//! regime where the parallel engine used to be Amdahl-capped by a
+//! single-threaded merge. CI publishes the file as a build artifact, so
+//! the perf trajectory has data points instead of anecdotes.
 //!
 //! Entry points: `repro jobs bench-sim [--out FILE]` and
 //! `cargo bench --bench sim_core`.
@@ -71,6 +75,16 @@ pub struct SimBenchCell {
     pub parallel_speedup: f64,
     /// Did the sharded engine agree bitwise with the sequential one?
     pub parallel_bitwise: bool,
+    /// Host-side throughput of the sharded parallel engine under the
+    /// NIC-contention wire model, tasks/sec.
+    pub contention_parallel_tasks_per_sec: f64,
+    /// `contended-parallel / contended-sequential` throughput ratio:
+    /// what the per-node wire shard buys on the contended campaigns.
+    /// Hardware-dependent; recorded honestly, not asserted.
+    pub contention_parallel_speedup: f64,
+    /// Did the sharded engine agree bitwise with the sequential one
+    /// under contention (i.e. through the sharded-wire replay path)?
+    pub contention_parallel_bitwise: bool,
 }
 
 /// DES worker threads the recorder's parallel axis runs on.
@@ -96,11 +110,38 @@ impl SimBenchReport {
     }
 
     /// Every cell reproduced the oracle bitwise — under both wire models
-    /// — and the sharded parallel engine reproduced the sequential one.
+    /// — and the sharded parallel engine reproduced the sequential one,
+    /// also under both wire models.
     pub fn all_bitwise(&self) -> bool {
-        self.cells.iter().all(|c| {
-            c.bitwise_match && c.contention_bitwise && c.parallel_bitwise
-        })
+        self.bitwise_failures().is_empty()
+    }
+
+    /// Every `(cell, axis)` pair whose bitwise parity bit is false, as
+    /// human-readable labels — what `jobs bench-sim --check` reports
+    /// before exiting nonzero.
+    pub fn bitwise_failures(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for c in &self.cells {
+            let axes: [(&str, bool); 4] = [
+                ("bitwise_match", c.bitwise_match),
+                ("contention_bitwise", c.contention_bitwise),
+                ("parallel_bitwise", c.parallel_bitwise),
+                (
+                    "contention_parallel_bitwise",
+                    c.contention_parallel_bitwise,
+                ),
+            ];
+            for (axis, ok) in axes {
+                if !ok {
+                    out.push(format!(
+                        "{} nodes={}: {axis}",
+                        c.system.id(),
+                        c.nodes
+                    ));
+                }
+            }
+        }
+        out
     }
 
     /// The `BENCH_sim.json` byte stream.
@@ -153,11 +194,23 @@ impl SimBenchReport {
                         "parallel_bitwise".into(),
                         Json::Bool(c.parallel_bitwise),
                     ),
+                    (
+                        "contention_parallel_tasks_per_sec".into(),
+                        Json::Num(c.contention_parallel_tasks_per_sec),
+                    ),
+                    (
+                        "contention_parallel_speedup".into(),
+                        Json::Num(c.contention_parallel_speedup),
+                    ),
+                    (
+                        "contention_parallel_bitwise".into(),
+                        Json::Bool(c.contention_parallel_bitwise),
+                    ),
                 ])
             })
             .collect();
         let mut text = Json::Obj(vec![
-            ("v".into(), Json::Num(2.0)),
+            ("v".into(), Json::Num(3.0)),
             ("steps".into(), Json::Num(self.steps as f64)),
             ("tasks_per_core".into(), Json::Num(self.tasks_per_core as f64)),
             ("grain".into(), Json::Num(self.grain as f64)),
@@ -184,6 +237,7 @@ impl SimBenchReport {
             "par speedup",
             "nic tasks/s",
             "nic ratio",
+            "con par speedup",
             "frontier (tasks)",
             "oracle resident",
         ]);
@@ -199,6 +253,7 @@ impl SimBenchReport {
                 format!("{:.2}x", c.parallel_speedup),
                 format!("{:.3e}", c.contention_tasks_per_sec),
                 format!("{:.2}x", c.contention_ratio),
+                format!("{:.2}x", c.contention_parallel_speedup),
                 c.peak_frontier_tasks.to_string(),
                 c.oracle_resident_tasks.to_string(),
             ]);
@@ -286,6 +341,19 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
                 &graph, system, machine, &params, &cfg, &nic,
             );
 
+            // And through the sharded parallel engine under contention:
+            // the round's deferred sends replay through the per-node
+            // wire shard, so this axis tracks what that shard buys.
+            // Contract: bitwise equality with the sequential contended
+            // run; speedup is whatever this host's cores deliver.
+            let (cp_bits, cp_msgs, cp_secs) = timed(|| {
+                let m = simulate_parallel(
+                    &graph, system, machine, &params, &cfg, &nic,
+                    PAR_THREADS,
+                );
+                (m.wall_secs.to_bits(), m.messages)
+            });
+
             cells.push(SimBenchCell {
                 system,
                 nodes,
@@ -304,6 +372,10 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
                 parallel_tasks_per_sec: n as f64 / p_secs,
                 parallel_speedup: w_secs / p_secs,
                 parallel_bitwise: p_bits == w_bits && p_msgs == w_msgs,
+                contention_parallel_tasks_per_sec: n as f64 / cp_secs,
+                contention_parallel_speedup: c_secs / cp_secs,
+                contention_parallel_bitwise: cp_bits == c_bits
+                    && cp_msgs == c_msgs,
             });
         }
     }
@@ -346,8 +418,27 @@ mod tests {
             assert!(c.parallel_tasks_per_sec > 0.0);
             assert!(c.parallel_speedup > 0.0);
             assert!(c.parallel_bitwise, "{c:#?}");
+            assert!(c.contention_parallel_tasks_per_sec > 0.0);
+            assert!(c.contention_parallel_speedup > 0.0);
+            assert!(c.contention_parallel_bitwise, "{c:#?}");
         }
         assert!(r.geomean_speedup() > 0.0);
+        assert!(r.bitwise_failures().is_empty(), "{:?}", r.bitwise_failures());
+    }
+
+    #[test]
+    fn bitwise_failures_name_the_cell_and_axis() {
+        let mut r = run_sim_bench(3, 1);
+        r.cells[0].contention_parallel_bitwise = false;
+        r.cells[1].bitwise_match = false;
+        let failures = r.bitwise_failures();
+        assert_eq!(failures.len(), 2, "{failures:?}");
+        assert!(
+            failures[0].contains("contention_parallel_bitwise"),
+            "{failures:?}"
+        );
+        assert!(failures[1].contains("bitwise_match"), "{failures:?}");
+        assert!(!r.all_bitwise());
     }
 
     #[test]
@@ -355,7 +446,7 @@ mod tests {
         let r = run_sim_bench(3, 1);
         let text = r.to_json();
         let v = Json::parse(&text).expect("recorder JSON must parse");
-        assert_eq!(v.get("v").and_then(Json::as_u64), Some(2));
+        assert_eq!(v.get("v").and_then(Json::as_u64), Some(3));
         assert_eq!(
             v.get("parallel_threads").and_then(Json::as_u64),
             Some(PAR_THREADS as u64)
@@ -372,9 +463,13 @@ mod tests {
         assert!(text.contains("contention_tasks_per_sec"), "{text}");
         assert!(text.contains("parallel_speedup"), "{text}");
         assert!(text.contains("parallel_bitwise"), "{text}");
+        assert!(text.contains("contention_parallel_tasks_per_sec"), "{text}");
+        assert!(text.contains("contention_parallel_speedup"), "{text}");
+        assert!(text.contains("contention_parallel_bitwise"), "{text}");
         let rendered = r.render();
         assert!(rendered.contains("geomean speedup"), "{rendered}");
         assert!(rendered.contains("nic ratio"), "{rendered}");
         assert!(rendered.contains("par speedup"), "{rendered}");
+        assert!(rendered.contains("con par speedup"), "{rendered}");
     }
 }

@@ -21,7 +21,7 @@
 //! repro jobs snapshot [--campaign ...] [--baseline DIR] [--sim-threads N]  # pin goldens
 //! repro jobs diff  [--campaign ...] [--baseline DIR] [--tol X] [--strict] [--sim-threads N]
 //! repro jobs pack  [--results DIR]                           # compact to results.pack
-//! repro jobs bench-sim [--out BENCH_sim.json] [--steps N]    # DES throughput
+//! repro jobs bench-sim [--out BENCH_sim.json] [--steps N] [--check]  # DES throughput
 //! repro jobs worker [--campaign ...] [--results DIR] [--claim-ttl SECS]  # fleet worker
 //! repro jobs fleet-status [--campaign ...] [--results DIR]   # fleet census
 //! ```
@@ -122,7 +122,9 @@ fn usage() -> ! {
          \x20      \x20     results dir, heartbeats, re-queues claims stale past the TTL (default 60s),\n\
          \x20      \x20     and exits when every cell has a record; DirStore only (pack is single-writer)\n\
          \x20      repro jobs fleet-status [--campaign ...] [--results DIR] [--claim-ttl SECS]\n\
-         \x20      repro jobs bench-sim [--out BENCH_sim.json] [--steps N] [--overdecompose N]\n\
+         \x20      repro jobs bench-sim [--out BENCH_sim.json] [--steps N] [--overdecompose N] [--check]\n\
+         \x20      \x20     --check exits nonzero (naming the cell and axis) if any *_bitwise\n\
+         \x20      \x20     axis is false; without it the same parity gate still applies\n\
          note: a present-but-malformed flag value (e.g. --steps x, --nodes 1,y) is a hard\n\
          error, never a silent fallback to the default\n\
          see the crate docs for details"
@@ -697,23 +699,36 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
     if action == "bench-sim" {
         // DES throughput recorder: windowed core vs the frozen oracle,
         // with the embedded bitwise-parity check as a hard gate.
+        // `--check` additionally names every failed `*_bitwise` axis on
+        // stderr, so CI gates on the exit code instead of artifact greps.
         let out = m
             .get("out")
             .cloned()
             .unwrap_or_else(|| "BENCH_sim.json".to_string());
         let steps = get(m, "steps", 64usize);
         let tpc = get(m, "overdecompose", 4usize);
+        let check = get(m, "check", false);
         match taskbench_amt::engine::simbench::write_sim_bench(&out, steps, tpc)
         {
             Ok(report) => {
                 print!("{}", report.render());
                 println!("recorded in {out}");
-                if !report.all_bitwise() {
+                let failures = report.bitwise_failures();
+                if !failures.is_empty() {
+                    for f in &failures {
+                        eprintln!("bitwise parity FAILED: {f}");
+                    }
                     eprintln!(
-                        "windowed core diverged from the oracle scheduler — \
+                        "an engine diverged from its parity oracle — \
                          this is a correctness bug, not a perf datum"
                     );
                     std::process::exit(1);
+                }
+                if check {
+                    println!(
+                        "--check: every bitwise axis held on {} cells",
+                        report.cells.len()
+                    );
                 }
             }
             Err(e) => {

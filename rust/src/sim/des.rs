@@ -46,8 +46,33 @@ use crate::runtimes::{
 };
 
 use super::machine::Machine;
-use super::net::{NetConfig, WireState};
+use super::net::{NetConfig, SendWire, WireState};
 use super::params::SimParams;
+
+/// Replay one task's send phase through a wire: open the phase
+/// (`begin_send` resets the per-destination-core dedup), then price one
+/// message per consumer in slice order and hand each arrival to
+/// `deliver`. This is the *only* way either engine talks to the wire
+/// during a send — the sequential event loop below drives it with
+/// [`WireState`], and the sharded parallel replay (`super::pdes`) drives
+/// it with the per-node sharded wire — so the call sequence the wire
+/// sees is identical by construction and the sequential engine stays
+/// the parity oracle.
+#[inline]
+pub(super) fn replay_send<W: SendWire>(
+    wire: &mut W,
+    machine: Machine,
+    core: usize,
+    send_done: f64,
+    msgs: impl IntoIterator<Item = (u32, usize, f64)>,
+    mut deliver: impl FnMut(u32, f64),
+) {
+    wire.begin_send();
+    for (c, cc, wire_ns) in msgs {
+        let arrival = wire.arrival(machine, core, cc, send_done, wire_ns);
+        deliver(c, arrival);
+    }
+}
 
 /// Resource footprint of one simulation run — the windowed engine's
 /// working-set counters, recorded so the perf trajectory (`jobs
@@ -505,28 +530,34 @@ fn simulate_event_driven(
             }
             let send_done = end;
             let next_idx = t + 1 - frontier.base;
-            wire_state.begin_send();
-            for &c in rdeps {
-                let cc = match system {
-                    SystemKind::HpxLocal if steal => core,
-                    SystemKind::CharmLike => c as usize % cores,
-                    _ => part.owner(c as usize),
-                };
-                let (_, wire, _) =
-                    edge_cost(system, machine, params, charm, core, cc);
-                let arrival =
-                    wire_state.arrival(machine, core, cc, send_done, wire);
-                let cons = c as usize;
-                let next = &mut frontier.slabs[next_idx];
-                next.ready_at[cons] = next.ready_at[cons].max(arrival);
-                next.pending[cons] -= 1;
-                if next.pending[cons] == 0 {
-                    heap.push(Reverse((
-                        key(next.ready_at[cons]),
-                        PointCoord::new(cons, t + 1).index(width),
-                    )));
-                }
-            }
+            replay_send(
+                &mut wire_state,
+                machine,
+                core,
+                send_done,
+                rdeps.iter().map(|&c| {
+                    let cc = match system {
+                        SystemKind::HpxLocal if steal => core,
+                        SystemKind::CharmLike => c as usize % cores,
+                        _ => part.owner(c as usize),
+                    };
+                    let (_, wire, _) =
+                        edge_cost(system, machine, params, charm, core, cc);
+                    (c, cc, wire)
+                }),
+                |c, arrival| {
+                    let cons = c as usize;
+                    let next = &mut frontier.slabs[next_idx];
+                    next.ready_at[cons] = next.ready_at[cons].max(arrival);
+                    next.pending[cons] -= 1;
+                    if next.pending[cons] == 0 {
+                        heap.push(Reverse((
+                            key(next.ready_at[cons]),
+                            PointCoord::new(cons, t + 1).index(width),
+                        )));
+                    }
+                },
+            );
             // Trivial pattern: self-schedule the next step.
             let next = &mut frontier.slabs[next_idx];
             if next.win.deps(x).is_empty() {

@@ -32,7 +32,12 @@
 //! across worker threads by core-range ownership with window-edge
 //! synchronization ([`pdes`]) — **bitwise identical** to the sequential
 //! path (which remains the parity oracle), falling back to it wherever
-//! sharding cannot preserve the bits.
+//! sharding cannot preserve the bits. Under NIC contention the rolling
+//! wire state is sharded too: each round's deferred sends are
+//! partitioned into node-disjoint chains and replayed concurrently
+//! through atomic per-node channels ([`wire_shard_eligible`] reports
+//! whether a cell takes that path), so `--sim-threads` speeds up the
+//! contended campaigns as well — still without moving a bit.
 //!
 //! The point-to-point wire is a pluggable [`NetModel`] ([`net`]): the
 //! congestion-free default reproduces the historical latency+bandwidth
@@ -56,4 +61,5 @@ pub use oracle::simulate_oracle;
 pub use params::{calibrate, SimParams};
 pub use pdes::{
     parallel_eligible, simulate_parallel, simulate_parallel_with_stats,
+    wire_shard_eligible,
 };

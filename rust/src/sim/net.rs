@@ -36,6 +36,8 @@
 //! asynchrony — there is no latency hiding to model — and always price
 //! their wire congestion-free.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use super::machine::Machine;
 
 /// Which [`NetModel`] prices a cell's messages.
@@ -198,6 +200,28 @@ impl NicContention {
     pub fn ser_ns(&self) -> f64 {
         self.ser_ns
     }
+
+    /// The channel advance itself, as a pure function of the two touched
+    /// busy-times: serialize through the source's injection channel, fly
+    /// the wire, serialize through the destination's ejection channel.
+    /// Every arrival computation — sequential ([`NicContention`]) or
+    /// sharded ([`ShardedNic`]) — funnels through this one function, so
+    /// the bitwise contract has exactly one float sequence to preserve.
+    #[inline]
+    pub fn price(
+        inj: &mut f64,
+        ej: &mut f64,
+        ser_ns: f64,
+        send_done: f64,
+        wire: f64,
+    ) -> f64 {
+        let depart = send_done.max(*inj) + ser_ns;
+        *inj = depart;
+        let at_dst = depart + wire;
+        let arrival = at_dst.max(*ej) + ser_ns;
+        *ej = arrival;
+        arrival
+    }
 }
 
 impl NetModel for NicContention {
@@ -221,23 +245,42 @@ impl NetModel for NicContention {
         }
         let src = machine.node_of(cp);
         let dst = machine.node_of(cc);
-        let depart = send_done.max(self.inj[src]) + self.ser_ns;
-        self.inj[src] = depart;
-        let at_dst = depart + wire;
-        let arrival = at_dst.max(self.ej[dst]) + self.ser_ns;
-        self.ej[dst] = arrival;
-        arrival
+        NicContention::price(
+            &mut self.inj[src],
+            &mut self.ej[dst],
+            self.ser_ns,
+            send_done,
+            wire,
+        )
     }
 }
 
-/// The per-run wire-model state both simulation engines drive — built
-/// from the job's [`NetConfig`], shared verbatim between the windowed
-/// core and the oracle so the two can never diverge. The sharded
-/// parallel engine ([`super::pdes`]) drives one instance too: because
-/// the contended arm is order-dependent (rolling NIC busy-times +
-/// per-send dedup cache), workers defer their sends and a single merge
-/// thread replays them here in the global `(key, task)` execution order
-/// — the exact sequence the sequential loop would have presented.
+/// One send phase's view of the wire: `begin_send` opens a task's send
+/// phase (resetting the per-destination-core dedup), `arrival` prices
+/// one consumer message. Implemented by the engines' sequential
+/// [`WireState`] and by the parallel replay's [`ShardedWire`], so the
+/// shared replay helper (`des::replay_send`) drives either through the
+/// identical call sequence.
+pub(super) trait SendWire {
+    fn begin_send(&mut self);
+    fn arrival(
+        &mut self,
+        machine: Machine,
+        cp: usize,
+        cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64;
+}
+
+/// The per-run wire-model state both sequential simulation engines drive
+/// — built from the job's [`NetConfig`], shared verbatim between the
+/// windowed core and the oracle so the two can never diverge. (The
+/// sharded parallel engine's contended arm drives [`ShardedNic`]
+/// instead: workers defer their sends and replay node-disjoint chains of
+/// them concurrently, each chain in the global `(key, task)` execution
+/// order — per channel, the exact sequence the sequential loop would
+/// have presented.)
 ///
 /// An enum rather than a `Box<dyn NetModel>` on the hot path: the
 /// congestion-free arm must stay a bare `send_done + wire` (the bitwise
@@ -308,6 +351,135 @@ impl WireState {
                 a
             }
         }
+    }
+}
+
+impl SendWire for WireState {
+    #[inline]
+    fn begin_send(&mut self) {
+        WireState::begin_send(self)
+    }
+
+    #[inline]
+    fn arrival(
+        &mut self,
+        machine: Machine,
+        cp: usize,
+        cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64 {
+        WireState::arrival(self, machine, cp, cc, send_done, wire)
+    }
+}
+
+/// The NIC channel state sharded for concurrent replay: the same
+/// per-node rolling busy-times [`NicContention`] keeps, stored as
+/// bit-cast atomics so replay workers can advance *disjoint* channel
+/// pairs concurrently without a lock. Correctness contract (upheld by
+/// the conflict partition in [`super::pdes`]): two sends replay
+/// concurrently only if their `{src_node, dst_node}` sets are disjoint,
+/// so no channel word is ever touched by two workers inside one merge
+/// phase — the `Relaxed` ordering is then enough, because the round
+/// barriers already order phases across threads.
+pub(super) struct ShardedNic {
+    /// Injection-channel busy-time per source node, ns (f64 bits).
+    inj: Vec<AtomicU64>,
+    /// Ejection-channel busy-time per destination node, ns (f64 bits).
+    ej: Vec<AtomicU64>,
+    /// Per-message channel occupancy, ns.
+    ser_ns: f64,
+}
+
+impl ShardedNic {
+    pub(super) fn new(
+        cfg: &NetConfig,
+        nodes: usize,
+        payload_bytes: usize,
+    ) -> ShardedNic {
+        let zero = 0.0f64.to_bits();
+        ShardedNic {
+            inj: (0..nodes).map(|_| AtomicU64::new(zero)).collect(),
+            ej: (0..nodes).map(|_| AtomicU64::new(zero)).collect(),
+            ser_ns: cfg.nic_ser_ns(payload_bytes),
+        }
+    }
+
+    /// Arrival of one message from core `cp` to core `cc` — the same
+    /// [`NicContention::price`] advance over this message's two channel
+    /// words. The caller must own both touched nodes' channels for the
+    /// duration of the call (the node-disjoint chain contract).
+    #[inline]
+    fn arrival_ns(
+        &self,
+        machine: Machine,
+        cp: usize,
+        cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64 {
+        if cp == cc || machine.same_node(cp, cc) {
+            return send_done + wire;
+        }
+        let src = machine.node_of(cp);
+        let dst = machine.node_of(cc);
+        let mut inj = f64::from_bits(self.inj[src].load(Ordering::Relaxed));
+        let mut ej = f64::from_bits(self.ej[dst].load(Ordering::Relaxed));
+        let a = NicContention::price(&mut inj, &mut ej, self.ser_ns, send_done, wire);
+        self.inj[src].store(inj.to_bits(), Ordering::Relaxed);
+        self.ej[dst].store(ej.to_bits(), Ordering::Relaxed);
+        a
+    }
+}
+
+/// Per-destination-core dedup scratch for one replay worker — the
+/// worker-local half of the contended wire (the send-scoped cache
+/// [`WireState::Contended`] carries inline). Allocated once per run per
+/// worker, reused across every round's replay.
+pub(super) struct WireDedup {
+    stamp: Vec<u64>,
+    cached: Vec<f64>,
+    epoch: u64,
+}
+
+impl WireDedup {
+    pub(super) fn new(cores: usize) -> WireDedup {
+        WireDedup { stamp: vec![0; cores], cached: vec![0.0; cores], epoch: 0 }
+    }
+}
+
+/// One replay worker's handle on the sharded contended wire: shared
+/// atomic channels + private dedup. Drives the same `begin_send` /
+/// `arrival` sequence as [`WireState`] (via [`SendWire`]), so the shared
+/// replay helper replays a send identically through either.
+pub(super) struct ShardedWire<'a> {
+    pub(super) nic: &'a ShardedNic,
+    pub(super) dedup: &'a mut WireDedup,
+}
+
+impl SendWire for ShardedWire<'_> {
+    #[inline]
+    fn begin_send(&mut self) {
+        self.dedup.epoch += 1;
+    }
+
+    #[inline]
+    fn arrival(
+        &mut self,
+        machine: Machine,
+        cp: usize,
+        cc: usize,
+        send_done: f64,
+        wire: f64,
+    ) -> f64 {
+        let d = &mut *self.dedup;
+        if d.stamp[cc] == d.epoch {
+            return d.cached[cc];
+        }
+        d.stamp[cc] = d.epoch;
+        let a = self.nic.arrival_ns(machine, cp, cc, send_done, wire);
+        d.cached[cc] = a;
+        a
     }
 }
 
@@ -394,6 +566,54 @@ mod tests {
         // each channel pair.
         let ser = cfg.nic_ser_ns(4096);
         assert!(a[7] >= 1_000.0 + 8.0 * ser, "{a:?}");
+    }
+
+    #[test]
+    fn sharded_nic_prices_bitwise_like_the_sequential_nic() {
+        // The same message sequence through NicContention and ShardedNic
+        // must return identical arrivals and leave identical channel
+        // state — `price` is the single shared advance, the atomics are
+        // only storage.
+        let cfg = NetConfig::contention();
+        let m = Machine::new(4, 2);
+        let mut seq = NicContention::new(&cfg, 4, 4096);
+        let sharded = ShardedNic::new(&cfg, 4, 4096);
+        let msgs = [
+            (0usize, 2usize, 10.0, 500.0), // node 0 -> 1
+            (2, 4, 0.0, 1_000.0),          // node 1 -> 2
+            (1, 0, 5.0, 750.0),            // intra-node bypass
+            (5, 0, 3.0, 1_000.0),          // node 2 -> 0
+            (0, 2, 12.0, 500.0),           // queues behind the first
+            (7, 2, 0.0, 250.0),            // node 3 -> 1, ejection queue
+        ];
+        for &(cp, cc, sd, w) in &msgs {
+            let a = seq.arrival_ns(m, cp, cc, sd, w);
+            let b = sharded.arrival_ns(m, cp, cc, sd, w);
+            assert_eq!(a.to_bits(), b.to_bits(), "{cp}->{cc} diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_wire_dedups_like_wire_state() {
+        // The replay worker's handle replays whole send phases — dedup
+        // included — bitwise like the sequential WireState.
+        let cfg = NetConfig::contention();
+        let m = Machine::new(2, 2);
+        let mut ws = WireState::new(&cfg, m, 64);
+        let nic = ShardedNic::new(&cfg, 2, 64);
+        let mut dedup = WireDedup::new(m.total_cores());
+        let mut sw = ShardedWire { nic: &nic, dedup: &mut dedup };
+        for send in 0..3u32 {
+            ws.begin_send();
+            sw.begin_send();
+            // Two consumers on one destination core (dedup) + another.
+            for &(cp, cc) in &[(0usize, 2usize), (0, 2), (1, 3)] {
+                let sd = send as f64 * 7.5;
+                let a = ws.arrival(m, cp, cc, sd, 1_000.0);
+                let b = SendWire::arrival(&mut sw, m, cp, cc, sd, 1_000.0);
+                assert_eq!(a.to_bits(), b.to_bits(), "send {send} {cp}->{cc}");
+            }
+        }
     }
 
     #[test]

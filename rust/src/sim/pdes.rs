@@ -37,13 +37,24 @@
 //! directly (own slab or the consumer-owner's inbox). Under NIC
 //! contention the wire is order-dependent shared state, so workers only
 //! *log* `(key, task, send_done, consumers)` and a **(3)** post-barrier
-//! merge on one thread replays every send of the round through the one
-//! [`WireState`] in global `(key, index)` order — the same order the
-//! sequential loop would have driven it — then routes the arrivals.
-//! Windows strictly ascend, so the replay order is globally correct
-//! across rounds too. Makespan (max of ends), message counts (sums)
-//! and the `ready_at` max-accumulation are order-insensitive, so the
-//! deterministic per-worker folds reproduce the sequential bits.
+//! merge replays every send of the round through the wire — **sharded
+//! per node**. The NIC state is one rolling busy-time per node per
+//! direction, and each send reads/advances only its source node's
+//! injection channel and its destination nodes' ejection channels, so
+//! two sends commute bitwise iff their touched node sets are disjoint.
+//! One thread deterministically partitions the round's sends — sorted
+//! into the canonical global `(key, task)` order — into node-disjoint
+//! chains (union-find over touched nodes, walked in sorted order), then
+//! every worker replays its share of the chains concurrently through
+//! the atomic per-node channels ([`ShardedNic`]): within a chain sends
+//! replay in sorted order, and across chains no channel is shared, so
+//! every channel sees the exact op sequence the sequential loop would
+//! have driven. Arrivals route lock-free through the same per-worker
+//! out buffers the congestion-free arm uses. Windows strictly ascend,
+//! so the replay order is globally correct across rounds too. Makespan
+//! (max of ends), message counts (sums) and the `ready_at`
+//! max-accumulation are order-insensitive, so the deterministic
+//! per-worker folds reproduce the sequential bits.
 //!
 //! # When it falls back
 //!
@@ -61,7 +72,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Barrier, Mutex, RwLock};
 
 use crate::core::{Kernel, PointCoord, StepWindow, TaskGraph};
 use crate::runtimes::{
@@ -70,10 +81,13 @@ use crate::runtimes::{
 
 use super::des::{
     base_task_ns, compute_ns, edge_cost, measurement_of, queue_multiplier,
-    ready_key, simulate_with_stats, SimStats,
+    ready_key, replay_send, simulate_with_stats, SimStats,
 };
 use super::machine::Machine;
-use super::net::{CongestionFree, NetConfig, NetModel, NetModelKind, WireState};
+use super::net::{
+    CongestionFree, NetConfig, NetModel, NetModelKind, ShardedNic,
+    ShardedWire, WireDedup,
+};
 use super::params::SimParams;
 
 /// [`simulate`](super::simulate) on `threads` worker threads — bitwise
@@ -124,6 +138,25 @@ pub fn parallel_eligible(
     threads: usize,
 ) -> bool {
     plan(graph, system, machine, params, cfg, threads).is_some()
+}
+
+/// Would [`simulate_parallel`] drive this cell's contended wire through
+/// the per-node **sharded replay** — i.e. shard the DES *and* price the
+/// cell under NIC contention? (Congestion-free cells never touch the
+/// wire shard; ineligible cells fall back to the sequential engine
+/// entirely.) Exposed so the parity suite can assert the sharded-wire
+/// path is really the one being diffed, not the fallback.
+pub fn wire_shard_eligible(
+    graph: &TaskGraph,
+    system: SystemKind,
+    machine: Machine,
+    params: &SimParams,
+    cfg: &SystemConfig,
+    net: &NetConfig,
+    threads: usize,
+) -> bool {
+    net.model == NetModelKind::Contention
+        && plan(graph, system, machine, params, cfg, threads).is_some()
 }
 
 /// The shard layout + lookahead of one parallel run.
@@ -225,6 +258,12 @@ struct Shared<'g> {
     point_local: Vec<u32>,
     /// Per worker: owned points, ascending.
     owned: Vec<Vec<u32>>,
+    /// Contended-merge scratch, recycled across rounds: thread 0 takes
+    /// the write lock to gather + sort + partition the round's send log,
+    /// then every worker takes a read lock to replay its chains. All
+    /// buffers persist for the run — the per-round `Vec` churn of the
+    /// old single-threaded merge is gone.
+    merge: RwLock<MergeScratch>,
 }
 
 impl Shared<'_> {
@@ -252,15 +291,84 @@ struct WSlab<'g> {
 }
 
 /// A deferred send of the contended wire: everything the merge phase
-/// needs to replay it through [`WireState`] in global order.
+/// needs to replay it through the sharded wire in canonical order. The
+/// consumer messages live in the logging worker's flat `log_msgs`
+/// buffer (`lo..hi`), so a send log is plain `Copy` data and the whole
+/// round's log recycles without per-send allocations.
+#[derive(Clone, Copy)]
 struct SendLog {
     key: u64,
     task: usize,
     core: u32,
     send_done: f64,
-    /// `(consumer point, consumer core, congestion-free wire ns)` in
-    /// consumer-slice order — the sequential per-task iteration order.
-    msgs: Vec<(u32, u32, f64)>,
+    /// Range into the worker's `log_msgs`: `(consumer point, consumer
+    /// core, congestion-free wire ns)` in consumer-slice order — the
+    /// sequential per-task iteration order.
+    lo: u32,
+    hi: u32,
+}
+
+/// Sentinel for "no entry" in the merge scratch's chain links.
+const NONE: u32 = u32::MAX;
+
+/// Round-scoped state of the contended merge, owned by `Shared` behind
+/// an `RwLock` and recycled for the whole run.
+struct MergeScratch {
+    /// Per source worker: the round's send metadata + flat message
+    /// buffer, swapped in whole from the worker (the worker gets last
+    /// round's cleared buffers back, capacities intact).
+    wlog: Vec<Vec<SendLog>>,
+    wmsgs: Vec<Vec<(u32, u32, f64)>>,
+    /// The round's sends in canonical replay order:
+    /// `(key, task, worker, index-in-worker-log)` sorted ascending —
+    /// `(key, task)` is globally unique, so the tuple sort *is* the
+    /// sequential execution order.
+    order: Vec<(u64, u64, u32, u32)>,
+    /// `link[i]` = next `order` index in `i`'s chain (`NONE` = end).
+    link: Vec<u32>,
+    /// Union-find forest over chains + each chain's replay list.
+    parent: Vec<u32>,
+    head: Vec<u32>,
+    tail: Vec<u32>,
+    /// Live chain roots, ascending — the deterministic replay work
+    /// list, dealt round-robin to the workers.
+    roots: Vec<u32>,
+    /// Per node: owning chain of its channels this round (valid iff
+    /// `node_stamp[n] == round`).
+    node_owner: Vec<u32>,
+    node_stamp: Vec<u32>,
+    round: u32,
+    /// Distinct touched nodes of the send under partition (tiny).
+    touched: Vec<u32>,
+}
+
+impl MergeScratch {
+    fn new(workers: usize, nodes: usize) -> MergeScratch {
+        MergeScratch {
+            wlog: (0..workers).map(|_| Vec::new()).collect(),
+            wmsgs: (0..workers).map(|_| Vec::new()).collect(),
+            order: Vec::new(),
+            link: Vec::new(),
+            parent: Vec::new(),
+            head: Vec::new(),
+            tail: Vec::new(),
+            roots: Vec::new(),
+            node_owner: vec![0; nodes],
+            node_stamp: vec![0; nodes],
+            round: 0,
+            touched: Vec::new(),
+        }
+    }
+
+    /// Union-find root of chain `c`, with path halving.
+    fn find(&mut self, mut c: u32) -> u32 {
+        while self.parent[c as usize] != c {
+            let p = self.parent[c as usize];
+            self.parent[c as usize] = self.parent[p as usize];
+            c = self.parent[c as usize];
+        }
+        c
+    }
 }
 
 struct Worker<'g> {
@@ -275,11 +383,19 @@ struct Worker<'g> {
     /// Per-destination-core message dedup, worker-local scratch.
     stamp: Vec<u64>,
     epoch: u64,
-    /// Congestion-free cross-worker arrivals buffered per destination
-    /// worker, flushed to inboxes once per window.
+    /// Cross-worker arrivals buffered per destination worker, flushed to
+    /// inboxes once per window (congestion-free arm) or once per replay
+    /// phase (contended arm) — the lock-free routing path either way.
     out: Vec<Vec<(usize, f64)>>,
-    /// Contended-mode send log of the current round.
+    /// Contended-mode send log of the current round (meta + flat
+    /// messages), swapped whole into the merge scratch each round.
     log: Vec<SendLog>,
+    log_msgs: Vec<(u32, u32, f64)>,
+    /// Inbox swap buffer: the round's mail is swapped in (and the spent
+    /// buffer swapped back to the inbox), so neither side reallocates.
+    mail: Vec<(usize, f64)>,
+    /// Per-destination-core dedup for the contended replay phase.
+    replay_dedup: WireDedup,
     messages: usize,
     makespan: f64,
 }
@@ -300,6 +416,9 @@ impl<'g> Worker<'g> {
             epoch: 0,
             out: vec![Vec::new(); cx.shards.len()],
             log: Vec::new(),
+            log_msgs: Vec::new(),
+            mail: Vec::new(),
+            replay_dedup: WireDedup::new(if cx.contended { cx.cores } else { 0 }),
             messages: 0,
             makespan: 0.0,
         };
@@ -367,12 +486,14 @@ impl<'g> Worker<'g> {
         }
     }
 
-    /// Drain the round's inbox, then report the heap minimum (`u64::MAX`
-    /// = this worker is drained).
-    fn begin_round(&mut self, mail: Vec<(usize, f64)>, cx: &Shared<'g>) -> u64 {
-        for (task, arrival) in mail {
+    /// Drain the round's mail (already swapped into `self.mail`), then
+    /// report the heap minimum (`u64::MAX` = this worker is drained).
+    fn begin_round(&mut self, cx: &Shared<'g>) -> u64 {
+        let mut mail = std::mem::take(&mut self.mail);
+        for (task, arrival) in mail.drain(..) {
             self.deliver(task, arrival, cx);
         }
+        self.mail = mail;
         self.heap.peek().map_or(u64::MAX, |Reverse((k, _))| *k)
     }
 
@@ -424,21 +545,22 @@ impl<'g> Worker<'g> {
                 let send_done = end;
                 if cx.contended {
                     // The wire is order-dependent shared state: defer
-                    // the whole send to the merge phase's global replay.
-                    let mut msgs = Vec::with_capacity(rdeps.len());
+                    // the whole send to the merge phase's sharded replay.
+                    let lo = self.log_msgs.len() as u32;
                     for &c in rdeps {
                         let cc = cx.place(c as usize);
                         let (_, wire, _) = edge_cost(
                             cx.system, cx.machine, cx.params, cx.charm, core, cc,
                         );
-                        msgs.push((c, cc as u32, wire));
+                        self.log_msgs.push((c, cc as u32, wire));
                     }
                     self.log.push(SendLog {
                         key: k,
                         task,
                         core: core as u32,
                         send_done,
-                        msgs,
+                        lo,
+                        hi: self.log_msgs.len() as u32,
                     });
                 } else {
                     // Stateless wire: arrivals computable in-phase.
@@ -477,6 +599,50 @@ impl<'g> Worker<'g> {
             slab.remaining -= 1;
             self.makespan = self.makespan.max(end);
             self.retire();
+        }
+    }
+
+    /// Replay this worker's share of the round's node-disjoint chains
+    /// through the sharded wire. Chains are dealt round-robin off the
+    /// deterministic `roots` list; within a chain, sends replay in the
+    /// canonical `(key, task)` order, and no two live chains share a
+    /// node, so every channel sees exactly the op sequence the
+    /// sequential loop would have driven. Arrivals route into the
+    /// per-destination-worker `out` buffers — lock-free, flushed to
+    /// inboxes by the caller.
+    fn replay_chains(
+        &mut self,
+        s: &MergeScratch,
+        nic: &ShardedNic,
+        cx: &Shared<'g>,
+    ) {
+        let workers_n = cx.shards.len();
+        let out = &mut self.out;
+        let mut wire = ShardedWire { nic, dedup: &mut self.replay_dedup };
+        for (j, &root) in s.roots.iter().enumerate() {
+            if j % workers_n != self.id {
+                continue;
+            }
+            let mut oi = s.head[root as usize];
+            while oi != NONE {
+                let (_, _, w, i) = s.order[oi as usize];
+                let l = s.wlog[w as usize][i as usize];
+                let msgs = &s.wmsgs[w as usize][l.lo as usize..l.hi as usize];
+                let t_next = l.task / cx.width + 1;
+                replay_send(
+                    &mut wire,
+                    cx.machine,
+                    l.core as usize,
+                    l.send_done,
+                    msgs.iter().map(|&(c, cc, wire_ns)| (c, cc as usize, wire_ns)),
+                    |c, arrival| {
+                        let cons = c as usize;
+                        let ctask = PointCoord::new(cons, t_next).index(cx.width);
+                        out[cx.point_worker[cons] as usize].push((ctask, arrival));
+                    },
+                );
+                oi = s.link[oi as usize];
+            }
         }
     }
 }
@@ -519,6 +685,7 @@ fn run_sharded(
         owned[w].push(x as u32);
     }
 
+    let contended = net.model == NetModelKind::Contention;
     let cx = Shared {
         graph,
         system,
@@ -532,11 +699,15 @@ fn run_sharded(
         base_ns: base_task_ns(system, params),
         qmul: p.qmul,
         lookahead: p.lookahead,
-        contended: net.model == NetModelKind::Contention,
+        contended,
         shards,
         point_worker,
         point_local,
         owned,
+        merge: RwLock::new(MergeScratch::new(
+            workers_n,
+            if contended { machine.nodes } else { 0 },
+        )),
     };
 
     let workers: Vec<Mutex<Worker>> =
@@ -545,15 +716,16 @@ fn run_sharded(
         (0..workers_n).map(|_| Mutex::new(Vec::new())).collect();
     let mins: Vec<AtomicU64> =
         (0..workers_n).map(|_| AtomicU64::new(u64::MAX)).collect();
-    let wire = Mutex::new(WireState::new(net, machine, params.payload_bytes));
+    let nic = contended
+        .then(|| ShardedNic::new(net, machine.nodes, params.payload_bytes));
     let barrier = Barrier::new(workers_n);
 
     std::thread::scope(|s| {
         for i in 0..workers_n {
-            let (cx, workers, inboxes, mins, wire, barrier) =
-                (&cx, &workers, &inboxes, &mins, &wire, &barrier);
+            let (cx, workers, inboxes, mins, nic, barrier) =
+                (&cx, &workers, &inboxes, &mins, &nic, &barrier);
             s.spawn(move || {
-                worker_loop(i, cx, workers, inboxes, mins, wire, barrier)
+                worker_loop(i, cx, workers, inboxes, mins, nic.as_ref(), barrier)
             });
         }
     });
@@ -582,28 +754,35 @@ fn run_sharded(
 /// One worker thread's round loop. Barrier discipline: apply + publish
 /// min → **barrier** → execute the common window (routing
 /// congestion-free arrivals; inbox locks are leaves, so cross-pushes
-/// cannot deadlock) → **barrier** → (contended only) thread 0 replays
-/// the round's sends through the wire in global order → **barrier**.
+/// cannot deadlock) → **barrier** → (contended only) thread 0 gathers,
+/// sorts and partitions the round's sends into node-disjoint chains →
+/// **barrier** → every worker replays its chains through the sharded
+/// wire and flushes the arrivals → **barrier**.
 fn worker_loop<'g>(
     i: usize,
     cx: &Shared<'g>,
     workers: &[Mutex<Worker<'g>>],
     inboxes: &[Mutex<Vec<(usize, f64)>>],
     mins: &[AtomicU64],
-    wire: &Mutex<WireState>,
+    nic: Option<&ShardedNic>,
     barrier: &Barrier,
 ) {
     loop {
         {
-            let mail = std::mem::take(&mut *inboxes[i].lock().unwrap());
             let mut w = workers[i].lock().unwrap();
-            let min = w.begin_round(mail, cx);
+            {
+                // Swap, don't take: the spent mail buffer goes back to
+                // the inbox, so neither side ever reallocates.
+                let mut inbox = inboxes[i].lock().unwrap();
+                std::mem::swap(&mut *inbox, &mut w.mail);
+            }
+            let min = w.begin_round(cx);
             mins[i].store(min, Ordering::SeqCst);
         }
         barrier.wait();
         let kmin = mins.iter().map(|m| m.load(Ordering::SeqCst)).min().unwrap();
         if kmin == u64::MAX {
-            // Every heap drained and (since each round's merge precedes
+            // Every heap drained and (since each round's replay precedes
             // the next apply) every inbox empty: all tasks executed.
             break;
         }
@@ -618,56 +797,148 @@ fn worker_loop<'g>(
             }
         }
         barrier.wait();
-        if cx.contended {
+        if let Some(nic) = nic {
             if i == 0 {
-                merge_contended(cx, workers, inboxes, wire);
+                let mut s = cx.merge.write().unwrap();
+                partition_round(cx, workers, &mut s);
+            }
+            barrier.wait();
+            {
+                let s = cx.merge.read().unwrap();
+                let mut w = workers[i].lock().unwrap();
+                w.replay_chains(&s, nic, cx);
+                for (j, inbox) in inboxes.iter().enumerate() {
+                    if !w.out[j].is_empty() {
+                        inbox.lock().unwrap().append(&mut w.out[j]);
+                    }
+                }
             }
             barrier.wait();
         }
     }
 }
 
-/// Contended-wire merge: collect the round's send logs, sort by the
-/// global `(key, task)` execution order, replay each send through the
-/// one [`WireState`] exactly as the sequential loop would have
-/// (`begin_send`, then per-consumer `arrival` in slice order — the
-/// per-destination-core dedup cache replays identically), and route the
-/// arrivals to their owners' inboxes for the next round.
-fn merge_contended<'g>(
+/// Deterministic conflict partition of the round's contended sends
+/// (thread 0, under the scratch write lock): gather every worker's send
+/// log, sort into the canonical global `(key, task)` order, and
+/// decompose into **node-disjoint chains** — union-find over each
+/// send's touched NIC nodes (`{src_node} ∪ {dst nodes}` of its
+/// inter-node messages; intra-node-only sends touch no channel and form
+/// free singleton chains). Two sends sharing a node always land in one
+/// chain ordered as the sequential loop would order them; chains never
+/// share a node, so replaying them concurrently cannot reorder any
+/// channel's op sequence. Chain concatenation on merge keeps each
+/// chain's internal order, which is all bitwise replay needs: sends
+/// from formerly-separate chains commute (their node sets were disjoint
+/// while separate).
+fn partition_round<'g>(
     cx: &Shared<'g>,
     workers: &[Mutex<Worker<'g>>],
-    inboxes: &[Mutex<Vec<(usize, f64)>>],
-    wire: &Mutex<WireState>,
+    s: &mut MergeScratch,
 ) {
-    let mut logs: Vec<SendLog> = Vec::new();
-    for w in workers {
-        logs.append(&mut w.lock().unwrap().log);
+    // Swap each worker's round log into the scratch; the worker gets
+    // last round's cleared buffers back, capacities intact.
+    for (w, m) in workers.iter().enumerate() {
+        let mut wk = m.lock().unwrap();
+        s.wlog[w].clear();
+        s.wmsgs[w].clear();
+        std::mem::swap(&mut wk.log, &mut s.wlog[w]);
+        std::mem::swap(&mut wk.log_msgs, &mut s.wmsgs[w]);
     }
-    if logs.is_empty() {
-        return;
-    }
-    logs.sort_unstable_by_key(|l| (l.key, l.task));
-    let mut wire = wire.lock().unwrap();
-    let mut routed: Vec<Vec<(usize, f64)>> = vec![Vec::new(); workers.len()];
-    for l in &logs {
-        let t_next = l.task / cx.width + 1;
-        wire.begin_send();
-        for &(c, cc, wire_ns) in &l.msgs {
-            let arrival = wire.arrival(
-                cx.machine,
-                l.core as usize,
-                cc as usize,
-                l.send_done,
-                wire_ns,
-            );
-            let cons = c as usize;
-            let ctask = PointCoord::new(cons, t_next).index(cx.width);
-            routed[cx.point_worker[cons] as usize].push((ctask, arrival));
+    s.order.clear();
+    for (w, logs) in s.wlog.iter().enumerate() {
+        for (i, l) in logs.iter().enumerate() {
+            s.order.push((l.key, l.task as u64, w as u32, i as u32));
         }
     }
-    for (j, v) in routed.into_iter().enumerate() {
-        if !v.is_empty() {
-            inboxes[j].lock().unwrap().extend(v);
+    // `(key, task)` is globally unique (each task sends once), so the
+    // full-tuple sort *is* the canonical sequential replay order.
+    s.order.sort_unstable();
+
+    s.parent.clear();
+    s.head.clear();
+    s.tail.clear();
+    s.roots.clear();
+    s.link.clear();
+    s.link.resize(s.order.len(), NONE);
+    s.round = s.round.wrapping_add(1);
+    if s.round == 0 {
+        // u32 stamp wrapped: invalidate every stale stamp once.
+        s.node_stamp.fill(0);
+        s.round = 1;
+    }
+    let machine = cx.machine;
+    let mut touched = std::mem::take(&mut s.touched);
+    for oi in 0..s.order.len() {
+        let (_, _, w, i) = s.order[oi];
+        let l = s.wlog[w as usize][i as usize];
+        let src_core = l.core as usize;
+        touched.clear();
+        for &(_, cc, _) in &s.wmsgs[w as usize][l.lo as usize..l.hi as usize] {
+            let cc = cc as usize;
+            if cc != src_core && !machine.same_node(src_core, cc) {
+                let dn = machine.node_of(cc) as u32;
+                if !touched.contains(&dn) {
+                    touched.push(dn);
+                }
+            }
+        }
+        if !touched.is_empty() {
+            let sn = machine.node_of(src_core) as u32;
+            if !touched.contains(&sn) {
+                touched.push(sn);
+            }
+        }
+        // Resolve the owning chain: none → new singleton; one → join;
+        // several → merge them (smallest root absorbs, lists concat).
+        let mut chain = NONE;
+        for &n in &touched {
+            if s.node_stamp[n as usize] != s.round {
+                continue;
+            }
+            let owner = s.node_owner[n as usize];
+            let r = s.find(owner);
+            if chain == NONE || chain == r {
+                chain = r;
+            } else {
+                let (keep, gone) = if chain < r { (chain, r) } else { (r, chain) };
+                s.parent[gone as usize] = keep;
+                let gh = s.head[gone as usize];
+                if gh != NONE {
+                    let kt = s.tail[keep as usize];
+                    if kt == NONE {
+                        s.head[keep as usize] = gh;
+                    } else {
+                        s.link[kt as usize] = gh;
+                    }
+                    s.tail[keep as usize] = s.tail[gone as usize];
+                }
+                chain = keep;
+            }
+        }
+        if chain == NONE {
+            chain = s.parent.len() as u32;
+            s.parent.push(chain);
+            s.head.push(NONE);
+            s.tail.push(NONE);
+        }
+        for &n in &touched {
+            s.node_stamp[n as usize] = s.round;
+            s.node_owner[n as usize] = chain;
+        }
+        // Append this send to its chain's replay list.
+        let t = s.tail[chain as usize];
+        if t == NONE {
+            s.head[chain as usize] = oi as u32;
+        } else {
+            s.link[t as usize] = oi as u32;
+        }
+        s.tail[chain as usize] = oi as u32;
+    }
+    s.touched = touched;
+    for c in 0..s.parent.len() as u32 {
+        if s.parent[c as usize] == c {
+            s.roots.push(c);
         }
     }
 }
@@ -820,6 +1091,77 @@ mod tests {
                     net.model
                 );
                 assert_eq!(seq.messages, par.messages, "{dep:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_shard_probe_requires_contention_and_sharding() {
+        let g = graph(48, 20, 7);
+        let m = Machine::new(4, 6);
+        let p = SimParams::default();
+        let cfg = SystemConfig::default();
+        let nic = NetConfig::contention();
+        // Sharded + contended: the per-node wire shard is live.
+        assert!(wire_shard_eligible(&g, SystemKind::MpiLike, m, &p, &cfg, &nic, 4));
+        // The congestion-free wire never touches the shard.
+        assert!(!wire_shard_eligible(
+            &g,
+            SystemKind::MpiLike,
+            m,
+            &p,
+            &cfg,
+            &NetConfig::default(),
+            4
+        ));
+        // Ineligible cells (one worker, fork-join) fall back entirely.
+        assert!(!wire_shard_eligible(&g, SystemKind::MpiLike, m, &p, &cfg, &nic, 1));
+        assert!(!wire_shard_eligible(
+            &g,
+            SystemKind::OpenMpLike,
+            m,
+            &p,
+            &cfg,
+            &nic,
+            4
+        ));
+    }
+
+    #[test]
+    fn starved_nic_dense_patterns_replay_bitwise() {
+        // A deliberately starved NIC (every send queues) on patterns
+        // whose sends span many nodes (fft, all-to-all): nearly every
+        // round's conflict partition degenerates to one long chain —
+        // heavy chain *merging*, the hardest corner of the sharded
+        // replay — while trivial/no-comm rounds produce only free
+        // singleton chains. All must stay bitwise-sequential.
+        let starved = NetConfig {
+            model: NetModelKind::Contention,
+            nic_bytes_per_ns: 0.05,
+            nic_msgs_per_us: 2.0,
+        };
+        let m = Machine::new(4, 4);
+        for dep in [
+            DependencePattern::Fft,
+            DependencePattern::AllToAll,
+            DependencePattern::NoComm,
+        ] {
+            let g = TaskGraph::new(GraphConfig {
+                width: 32,
+                steps: 10,
+                dependence: dep,
+                kernel: KernelConfig::compute_bound(8),
+                ..GraphConfig::default()
+            });
+            for threads in [2usize, 4, 8] {
+                let (seq, par) =
+                    both(&g, SystemKind::CharmLike, m, &starved, threads);
+                assert_eq!(
+                    seq.wall_secs.to_bits(),
+                    par.wall_secs.to_bits(),
+                    "{dep:?} x{threads}"
+                );
+                assert_eq!(seq.messages, par.messages, "{dep:?} x{threads}");
             }
         }
     }

@@ -22,7 +22,8 @@ use taskbench_amt::core::{
 use taskbench_amt::runtimes::{SystemConfig, SystemKind};
 use taskbench_amt::sim::{
     parallel_eligible, simulate, simulate_oracle, simulate_parallel,
-    simulate_with_stats, Machine, NetConfig, NetModelKind, SimParams,
+    simulate_with_stats, wire_shard_eligible, Machine, NetConfig,
+    NetModelKind, SimParams,
 };
 use taskbench_amt::util::propcheck;
 
@@ -247,6 +248,105 @@ fn parallel_parity_matrix_every_system_both_wires() {
     assert!(
         sharded_cells > 0,
         "no cell took the sharded path — the matrix tests nothing"
+    );
+}
+
+#[test]
+fn wire_shard_parity_matrix_saturated_and_starved_nic() {
+    // The contended arm of the tentpole, deterministically: a saturated
+    // NIC (stock contention parameters) and a starved NIC (queueing
+    // dominates) × communication-heavy patterns × every system ×
+    // {2, 4, 8} DES workers. Every cell must be bitwise-sequential, and
+    // at least one must actually take the sharded-wire replay path (not
+    // the sequential fallback) or the matrix gates nothing.
+    let m = Machine::new(4, 6);
+    let cfg = SystemConfig::default();
+    let p = SimParams::default();
+    let saturated = NetConfig::contention();
+    let starved = NetConfig {
+        model: NetModelKind::Contention,
+        nic_bytes_per_ns: 0.05,
+        nic_msgs_per_us: 2.0,
+    };
+    let mut sharded_wire_cells = 0usize;
+    for dep in [
+        DependencePattern::Stencil1D,
+        DependencePattern::Fft,
+        DependencePattern::AllToAll,
+    ] {
+        let g = graph(dep, 48, 10, KernelConfig::compute_bound(16), 11);
+        for net in [&saturated, &starved] {
+            for system in SystemKind::all() {
+                for threads in [2usize, 4, 8] {
+                    parallel_parity(&g, system, m, &cfg, net, threads)
+                        .unwrap_or_else(|e| panic!("{dep:?}: {e}"));
+                    if wire_shard_eligible(
+                        &g, system, m, &p, &cfg, net, threads,
+                    ) {
+                        sharded_wire_cells += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert!(
+        sharded_wire_cells > 0,
+        "no cell took the sharded-wire path — the matrix tests nothing"
+    );
+}
+
+#[test]
+fn property_contended_replay_is_bitwise_and_the_shard_path_is_exercised() {
+    // Contention-only propcheck: random graphs × systems × the two
+    // contended wire shapes × {2, 4, 8} threads must be bitwise-
+    // sequential, and the sample must include at least one cell that
+    // replayed through the per-node wire shard rather than falling back.
+    let deps = DependencePattern::all();
+    let systems = SystemKind::all();
+    let cfgs = configs();
+    let kerns = kernels();
+    let contended: Vec<NetConfig> = nets()
+        .into_iter()
+        .filter(|n| n.model == NetModelKind::Contention)
+        .collect();
+    let thread_counts = [2usize, 4, 8];
+    let mut sharded_wire_cases = 0usize;
+    propcheck::check(
+        "contended parallel replay bitwise-equals the sequential engine",
+        40,
+        |rng| {
+            (
+                deps[rng.gen_range(deps.len())],
+                1 + rng.gen_range(20),                 // width
+                1 + rng.gen_range(12),                 // steps
+                1 + rng.gen_range(4),                  // nodes
+                1 + rng.gen_range(6),                  // cores per node
+                systems[rng.gen_range(systems.len())],
+                cfgs[rng.gen_range(cfgs.len())],
+                kerns[rng.gen_range(kerns.len())],
+                contended[rng.gen_range(contended.len())],
+                thread_counts[rng.gen_range(thread_counts.len())],
+                rng.next_u64(),                        // graph seed
+            )
+        },
+        |&(dep, width, steps, nodes, cores, system, cfg, kernel, net, threads, seed)| {
+            let g = graph(dep, width, steps, kernel, seed);
+            let m = Machine::new(nodes, cores);
+            let p = SimParams::default();
+            if wire_shard_eligible(&g, system, m, &p, &cfg, &net, threads) {
+                sharded_wire_cases += 1;
+            }
+            parallel_parity(&g, system, m, &cfg, &net, threads).map_err(|e| {
+                format!(
+                    "{dep:?} {width}x{steps} on {nodes}x{cores} {:?}: {e}",
+                    net.model
+                )
+            })
+        },
+    );
+    assert!(
+        sharded_wire_cases > 0,
+        "propcheck sample never took the sharded-wire path"
     );
 }
 
