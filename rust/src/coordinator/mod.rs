@@ -110,6 +110,12 @@ pub struct RunSummary {
     /// so one poisoned cell never discards a campaign's sibling results
     /// (the fleet worker loop depends on exactly this).
     pub failed: Vec<(Job, String)>,
+    /// Graph materializations served by an already-resident topology
+    /// (cells that shared another cell's dependence tables).
+    pub topo_hits: usize,
+    /// Graph materializations that had to build — the number of distinct
+    /// topologies this invocation actually constructed.
+    pub topo_misses: usize,
 }
 
 impl RunSummary {
@@ -273,7 +279,14 @@ pub fn run_jobs(
             Err(e) => failed.push(((*job).clone(), format!("{e:#}"))),
         }
     }
-    Ok(RunSummary { executed, cached, results, failed })
+    Ok(RunSummary {
+        executed,
+        cached,
+        results,
+        failed,
+        topo_hits: backends.topo.hits(),
+        topo_misses: backends.topo.misses(),
+    })
 }
 
 /// One metric outside its tolerance in a golden-record diff.
@@ -617,6 +630,14 @@ mod tests {
         let wide = run_jobs(&jobs, None, Shard::full(), 4, 1, &p).unwrap();
         assert_eq!(serial.executed, 5);
         assert_eq!(wide.executed, 5);
+        // A grain sweep is one topology: built once, shared by the rest —
+        // serially and under cell concurrency alike.
+        assert_eq!(
+            (serial.topo_hits, serial.topo_misses),
+            (4, 1),
+            "grain-sweep cells must share one resident topology"
+        );
+        assert_eq!((wide.topo_hits, wide.topo_misses), (4, 1));
         for ((ja, ra), (jb, rb)) in
             serial.results.iter().zip(wide.results.iter())
         {

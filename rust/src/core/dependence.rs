@@ -133,6 +133,10 @@ impl DependencePattern {
 
     /// Dependencies of point `x` under dependence set `dset`, sorted
     /// ascending, deduplicated. `graph_seed` feeds the random pattern.
+    ///
+    /// Thin wrapper over [`DependencePattern::deps_into`] for callers
+    /// that want an owned `Vec<usize>`; the CSR graph builder uses the
+    /// buffer-reuse path directly.
     pub fn deps(
         &self,
         dset: usize,
@@ -140,54 +144,76 @@ impl DependencePattern {
         width: usize,
         graph_seed: u64,
     ) -> Vec<usize> {
+        let mut buf = Vec::new();
+        self.deps_into(&mut buf, dset, x, width, graph_seed);
+        buf.into_iter().map(|d| d as usize).collect()
+    }
+
+    /// [`DependencePattern::deps`] into a caller-owned buffer: `out` is
+    /// cleared and refilled with the same sorted, deduplicated point
+    /// indices, already narrowed to the `u32` the dependence tables
+    /// store (a single pass, no intermediate `Vec<usize>`). Reusing one
+    /// buffer across a whole CSR build keeps graph construction free of
+    /// per-point transient allocations.
+    pub fn deps_into(
+        &self,
+        out: &mut Vec<u32>,
+        dset: usize,
+        x: usize,
+        width: usize,
+        graph_seed: u64,
+    ) {
         use DependencePattern::*;
         debug_assert!(x < width);
-        let mut out = match *self {
-            Trivial => vec![],
-            NoComm => vec![x],
+        debug_assert!(width <= u32::MAX as usize);
+        out.clear();
+        match *self {
+            Trivial => {}
+            NoComm => out.push(x as u32),
             Stencil1D => {
                 let lo = x.saturating_sub(1);
                 let hi = (x + 1).min(width - 1);
-                (lo..=hi).collect()
+                out.extend((lo..=hi).map(|d| d as u32));
             }
             Stencil1DPeriodic => {
                 if width == 1 {
-                    vec![0]
+                    out.push(0);
                 } else {
-                    vec![(x + width - 1) % width, x, (x + 1) % width]
+                    let wrap = [(x + width - 1) % width, x, (x + 1) % width];
+                    out.extend(wrap.map(|d| d as u32));
                 }
             }
             Dom => {
                 if x == 0 {
-                    vec![0]
+                    out.push(0);
                 } else {
-                    vec![x - 1, x]
+                    out.extend([x as u32 - 1, x as u32]);
                 }
             }
             Tree => {
                 let cleared = x & !(1usize << dset);
-                vec![cleared, x]
+                out.extend([cleared as u32, x as u32]);
             }
             Fft => {
                 let partner = x ^ (1usize << dset);
                 if partner < width {
-                    vec![partner, x]
+                    out.extend([partner as u32, x as u32]);
                 } else {
-                    vec![x]
+                    out.push(x as u32);
                 }
             }
-            AllToAll => (0..width).collect(),
+            AllToAll => out.extend(0..width as u32),
             Nearest { radix } => {
                 let half = radix / 2;
                 let lo = x.saturating_sub(half);
                 let hi = (x + radix.saturating_sub(half + 1)).min(width - 1);
-                (lo..=hi).collect()
+                out.extend((lo..=hi).map(|d| d as u32));
             }
             Spread { radix } => {
                 let r = radix.max(1).min(width);
-                (0..r)
-                    .map(|i| (x + i * width / r + dset + i) % width)
-                    .collect()
+                out.extend(
+                    (0..r).map(|i| ((x + i * width / r + dset + i) % width) as u32),
+                );
             }
             RandomNearest { radix } => {
                 let r = radix.max(1).min(width);
@@ -196,12 +222,11 @@ impl DependencePattern {
                         ^ (dset as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
                         ^ (x as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
                 );
-                (0..r).map(|_| rng.gen_range(width)).collect()
+                out.extend((0..r).map(|_| rng.gen_range(width) as u32));
             }
-        };
+        }
         out.sort_unstable();
         out.dedup();
-        out
     }
 
     /// Upper bound on the fan-in of any point under this pattern.
@@ -324,6 +349,24 @@ mod tests {
                         assert!(d.windows(2).all(|w| w[0] < w[1]), "{p:?}");
                         assert!(d.iter().all(|&i| i < width), "{p:?}");
                         assert!(d.len() <= p.max_fanin(width), "{p:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deps_into_matches_deps_and_reuses_the_buffer() {
+        let mut buf = Vec::new();
+        for p in DependencePattern::all() {
+            for width in [1usize, 2, 3, 8, 17] {
+                let period = p.timestep_period(width, 4);
+                for dset in 0..period {
+                    for x in 0..width {
+                        p.deps_into(&mut buf, dset, x, width, 42);
+                        let widened: Vec<usize> =
+                            buf.iter().map(|&d| d as usize).collect();
+                        assert_eq!(widened, p.deps(dset, x, width, 42), "{p:?}");
                     }
                 }
             }

@@ -1,8 +1,18 @@
 //! The task graph: a `width × steps` grid plus cached dependence tables.
 //!
 //! Dependence/reverse-dependence lookups are on every runtime's hot path,
-//! so [`TaskGraph::new`] materializes per-dependence-set tables once
-//! (`O(width · fanin)` memory per set) and lookups are slice borrows.
+//! so the tables are materialized once — per dependence set and direction,
+//! a flat CSR pair (`offsets` + `edges`) instead of per-point `Vec<u32>`s:
+//! two allocations per direction regardless of width, rows contiguous in
+//! memory, and lookups still plain slice borrows. The tables live in a
+//! [`GraphTopology`] shared behind an `Arc`; a [`TaskGraph`] is a cheap
+//! per-cell shell (the [`GraphConfig`], kernel included) over it, and a
+//! [`TopologyCache`] deduplicates topologies by their content key so a
+//! grain sweep builds its tables once instead of once per cell.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use super::dependence::DependencePattern;
 use super::kernel::KernelConfig;
@@ -35,52 +45,243 @@ impl Default for GraphConfig {
     }
 }
 
-/// A fully-materialized task graph.
+/// The content fingerprint of a topology: exactly the [`GraphConfig`]
+/// fields the dependence tables derive from. The kernel (grain, payload)
+/// is deliberately absent — every cell of a grain sweep shares one
+/// topology under this key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TopologyKey {
+    pub width: usize,
+    pub steps: usize,
+    pub dependence: DependencePattern,
+    pub random_period: usize,
+    pub seed: u64,
+}
+
+impl TopologyKey {
+    pub fn of(cfg: &GraphConfig) -> Self {
+        Self {
+            width: cfg.width,
+            steps: cfg.steps,
+            dependence: cfg.dependence,
+            random_period: cfg.random_period,
+            seed: cfg.seed,
+        }
+    }
+}
+
+/// One direction's dependence tables for every dset, flattened to CSR:
+/// row `dset * width + x` spans
+/// `edges[offsets[row] as usize .. offsets[row + 1] as usize]`.
+#[derive(Debug)]
+struct CsrDir {
+    offsets: Vec<u32>,
+    edges: Vec<u32>,
+}
+
+impl CsrDir {
+    #[inline]
+    fn row(&self, dset: usize, x: usize, width: usize) -> &[u32] {
+        let r = dset * width + x;
+        &self.edges[self.offsets[r] as usize..self.offsets[r + 1] as usize]
+    }
+
+    /// One dset's `width + 1` offsets plus the whole edge array (the
+    /// offsets are global, so the edge slice need not be re-based).
+    #[inline]
+    fn rows(&self, dset: usize, width: usize) -> CsrRows<'_> {
+        CsrRows {
+            offsets: &self.offsets[dset * width..(dset + 1) * width + 1],
+            edges: &self.edges,
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        (self.offsets.capacity() + self.edges.capacity())
+            * std::mem::size_of::<u32>()
+    }
+}
+
+/// One dependence set's rows borrowed from a [`CsrDir`] — what a
+/// [`StepWindow`] holds per direction.
+#[derive(Debug, Clone, Copy)]
+struct CsrRows<'g> {
+    offsets: &'g [u32],
+    edges: &'g [u32],
+}
+
+impl<'g> CsrRows<'g> {
+    #[inline]
+    fn row(&self, x: usize) -> &'g [u32] {
+        &self.edges[self.offsets[x] as usize..self.offsets[x + 1] as usize]
+    }
+}
+
+/// The materialized dependence structure shared by every cell with the
+/// same [`TopologyKey`]: both CSR directions plus the edge-count
+/// bookkeeping derived once at build time.
+#[derive(Debug)]
+pub struct GraphTopology {
+    key: TopologyKey,
+    /// Edges into a point: row `(dset, x)` = sorted deps at `t-1`.
+    fwd: CsrDir,
+    /// Edges out of a point: row `(dset, x)` = sorted consumers at `t+1`.
+    rev: CsrDir,
+    /// Total number of dependence sets actually used over `steps`.
+    num_dsets: usize,
+    /// Forward edges materialized per dependence set.
+    dset_edges: Vec<usize>,
+    /// Total edges over all timesteps, from per-dset counts × dset usage
+    /// counts — precomputed so `num_edges()` is O(1) rather than an
+    /// O(steps × width) walk on every call.
+    num_edges: usize,
+}
+
+impl GraphTopology {
+    /// Materialize the tables for `key`: `O(width · fanin)` memory per
+    /// dset, one `deps_into` pass per point into a reused scratch buffer.
+    pub fn build(key: TopologyKey) -> Self {
+        assert!(key.width > 0, "width must be positive");
+        assert!(key.steps > 0, "steps must be positive");
+        assert!(
+            key.width <= u32::MAX as usize,
+            "width must fit the u32 point indices"
+        );
+        let (width, dep) = (key.width, key.dependence);
+        // Count how often each dset governs a timestep. The table span is
+        // the highest dset reached (at least one set, even for steps == 1);
+        // the counts turn per-dset edge totals into the graph-wide total.
+        let mut usage: Vec<usize> = Vec::new();
+        for t in 1..key.steps {
+            let dset = dep.dset_at(t, width, key.random_period);
+            if dset >= usage.len() {
+                usage.resize(dset + 1, 0);
+            }
+            usage[dset] += 1;
+        }
+        if usage.is_empty() {
+            usage.push(0);
+        }
+        let num_dsets = usage.len();
+
+        let mut fwd = CsrDir {
+            offsets: Vec::with_capacity(num_dsets * width + 1),
+            edges: Vec::new(),
+        };
+        fwd.offsets.push(0);
+        let mut dset_edges = Vec::with_capacity(num_dsets);
+        let mut buf: Vec<u32> = Vec::new();
+        for dset in 0..num_dsets {
+            let start = fwd.edges.len();
+            for x in 0..width {
+                dep.deps_into(&mut buf, dset, x, width, key.seed);
+                fwd.edges.extend_from_slice(&buf);
+                let end = u32::try_from(fwd.edges.len())
+                    .expect("edge count must fit the u32 CSR offsets");
+                fwd.offsets.push(end);
+            }
+            dset_edges.push(fwd.edges.len() - start);
+        }
+
+        // Reverse CSR by counting sort: in-degrees, prefix-sum, fill.
+        // Scanning x ascending appends each consumer row in ascending
+        // order, so rows come out sorted — exactly the contents the
+        // push-and-sort nested builder produces.
+        let mut rev_offsets = vec![0u32; num_dsets * width + 1];
+        for dset in 0..num_dsets {
+            for x in 0..width {
+                for &d in fwd.row(dset, x, width) {
+                    rev_offsets[dset * width + d as usize + 1] += 1;
+                }
+            }
+        }
+        for i in 1..rev_offsets.len() {
+            rev_offsets[i] += rev_offsets[i - 1];
+        }
+        let mut cursor: Vec<u32> = rev_offsets[..rev_offsets.len() - 1].to_vec();
+        let mut rev_edges = vec![0u32; fwd.edges.len()];
+        for dset in 0..num_dsets {
+            for x in 0..width {
+                for &d in fwd.row(dset, x, width) {
+                    let slot = dset * width + d as usize;
+                    rev_edges[cursor[slot] as usize] = x as u32;
+                    cursor[slot] += 1;
+                }
+            }
+        }
+        let rev = CsrDir { offsets: rev_offsets, edges: rev_edges };
+
+        let num_edges = usage
+            .iter()
+            .zip(&dset_edges)
+            .map(|(&uses, &edges)| uses * edges)
+            .sum();
+        Self { key, fwd, rev, num_dsets, dset_edges, num_edges }
+    }
+
+    /// The fingerprint this topology was built for.
+    pub fn key(&self) -> &TopologyKey {
+        &self.key
+    }
+
+    /// Number of materialized dependence sets.
+    pub fn num_dsets(&self) -> usize {
+        self.num_dsets
+    }
+
+    /// Forward edges materialized for one dependence set.
+    pub fn dset_edges(&self, dset: usize) -> usize {
+        self.dset_edges[dset]
+    }
+
+    /// Heap bytes resident in the CSR tables.
+    pub fn heap_bytes(&self) -> usize {
+        self.fwd.heap_bytes()
+            + self.rev.heap_bytes()
+            + self.dset_edges.capacity() * std::mem::size_of::<usize>()
+    }
+}
+
+/// A task graph: a per-cell [`GraphConfig`] shell over a shared
+/// [`GraphTopology`]. Cloning is cheap (one `Arc` bump).
 #[derive(Debug, Clone)]
 pub struct TaskGraph {
     cfg: GraphConfig,
-    /// `tables[dset][x]` = sorted deps of `x` (indices at `t-1`).
-    tables: Vec<Vec<Vec<u32>>>,
-    /// `rtables[dset][x]` = sorted consumers of `x` (indices at `t+1`).
-    rtables: Vec<Vec<Vec<u32>>>,
-    /// Total number of dependence sets actually used over `steps`.
-    num_dsets: usize,
+    topo: Arc<GraphTopology>,
 }
 
 impl TaskGraph {
+    /// Build a graph with a freshly-materialized (unshared) topology.
+    /// Sweep-shaped callers should go through a [`TopologyCache`].
     pub fn new(cfg: GraphConfig) -> Self {
-        assert!(cfg.width > 0, "width must be positive");
-        assert!(cfg.steps > 0, "steps must be positive");
-        // Enumerate the dsets reachable over this run's timesteps.
-        let mut used = std::collections::BTreeSet::new();
-        for t in 1..cfg.steps {
-            used.insert(cfg.dependence.dset_at(t, cfg.width, cfg.random_period));
-        }
-        let num_dsets = used.iter().copied().max().map_or(1, |m| m + 1);
+        let topo = Arc::new(GraphTopology::build(TopologyKey::of(&cfg)));
+        Self { cfg, topo }
+    }
 
-        let mut tables = Vec::with_capacity(num_dsets);
-        let mut rtables = Vec::with_capacity(num_dsets);
-        for dset in 0..num_dsets {
-            let mut fwd: Vec<Vec<u32>> = Vec::with_capacity(cfg.width);
-            let mut rev: Vec<Vec<u32>> = vec![Vec::new(); cfg.width];
-            for x in 0..cfg.width {
-                let deps = cfg.dependence.deps(dset, x, cfg.width, cfg.seed);
-                for &d in &deps {
-                    rev[d].push(x as u32);
-                }
-                fwd.push(deps.into_iter().map(|d| d as u32).collect());
-            }
-            for r in rev.iter_mut() {
-                r.sort_unstable();
-            }
-            tables.push(fwd);
-            rtables.push(rev);
-        }
-        Self { cfg, tables, rtables, num_dsets }
+    /// Wrap an already-materialized topology. Panics if `topo` was built
+    /// for a different fingerprint than `cfg`'s.
+    pub fn with_topology(cfg: GraphConfig, topo: Arc<GraphTopology>) -> Self {
+        assert_eq!(
+            TopologyKey::of(&cfg),
+            *topo.key(),
+            "topology was built for a different graph fingerprint"
+        );
+        Self { cfg, topo }
     }
 
     pub fn config(&self) -> &GraphConfig {
         &self.cfg
+    }
+
+    /// The shared dependence structure (exposed for `Arc::ptr_eq`
+    /// sharing checks and resident-memory accounting).
+    pub fn topology(&self) -> &Arc<GraphTopology> {
+        &self.topo
+    }
+
+    /// Heap bytes resident in this graph's (possibly shared) topology.
+    pub fn topology_bytes(&self) -> usize {
+        self.topo.heap_bytes()
     }
 
     pub fn width(&self) -> usize {
@@ -97,7 +298,7 @@ impl TaskGraph {
 
     /// Number of materialized dependence sets.
     pub fn num_dsets(&self) -> usize {
-        self.num_dsets
+        self.topo.num_dsets
     }
 
     /// The dependence set governing edges *into* timestep `t` (`t >= 1`).
@@ -113,24 +314,24 @@ impl TaskGraph {
         if t == 0 {
             return &[];
         }
-        &self.tables[self.dset_at(t)][x]
+        self.topo.fwd.row(self.dset_at(t), x, self.cfg.width)
     }
 
     /// The dependence window of timestep `t`: both tables the streaming
     /// engines touch while step `t` is active, with the per-step dset
     /// resolution done once instead of per point. Borrows straight from
-    /// the cached tables — taking a window allocates nothing, and the
+    /// the CSR tables — taking a window allocates nothing, and the
     /// memory a consumer holds stays `O(width)` per resident step no
     /// matter how large `steps` grows.
     pub fn window(&self, t: usize) -> StepWindow<'_> {
         StepWindow {
             deps: if t >= 1 && t < self.cfg.steps {
-                Some(&self.tables[self.dset_at(t)])
+                Some(self.topo.fwd.rows(self.dset_at(t), self.cfg.width))
             } else {
                 None
             },
             consumers: if t + 1 < self.cfg.steps {
-                Some(&self.rtables[self.dset_at(t + 1)])
+                Some(self.topo.rev.rows(self.dset_at(t + 1), self.cfg.width))
             } else {
                 None
             },
@@ -142,17 +343,12 @@ impl TaskGraph {
         if t + 1 >= self.cfg.steps {
             return &[];
         }
-        &self.rtables[self.dset_at(t + 1)][x]
+        self.topo.rev.row(self.dset_at(t + 1), x, self.cfg.width)
     }
 
-    /// Total dependency edges in the graph.
+    /// Total dependency edges in the graph (precomputed at build).
     pub fn num_edges(&self) -> usize {
-        (1..self.cfg.steps)
-            .map(|t| {
-                let dset = self.dset_at(t);
-                self.tables[dset].iter().map(|d| d.len()).sum::<usize>()
-            })
-            .sum()
+        self.topo.num_edges
     }
 
     /// Total FLOPs the whole graph performs (compute kernels only).
@@ -170,13 +366,13 @@ impl TaskGraph {
 /// *into* step `t` ([`StepWindow::deps`]) and the edges *out of* step `t`
 /// toward `t+1` ([`StepWindow::consumers`]). This is the whole iteration
 /// surface a windowed consumer needs — per-point vectors are never
-/// materialized, only borrowed from the graph's per-dset tables.
+/// materialized, only CSR rows borrowed from the graph's topology.
 #[derive(Debug, Clone, Copy)]
 pub struct StepWindow<'g> {
-    /// Table of edges into the windowed step (`None` for step 0).
-    deps: Option<&'g [Vec<u32>]>,
-    /// Table of edges out of the windowed step (`None` for the last).
-    consumers: Option<&'g [Vec<u32>]>,
+    /// Rows of edges into the windowed step (`None` for step 0).
+    deps: Option<CsrRows<'g>>,
+    /// Rows of edges out of the windowed step (`None` for the last).
+    consumers: Option<CsrRows<'g>>,
 }
 
 impl<'g> StepWindow<'g> {
@@ -184,7 +380,7 @@ impl<'g> StepWindow<'g> {
     /// without the per-call dset resolution. Empty for `t == 0`.
     pub fn deps(&self, x: usize) -> &'g [u32] {
         match self.deps {
-            Some(tbl) => &tbl[x],
+            Some(rows) => rows.row(x),
             None => &[],
         }
     }
@@ -194,9 +390,65 @@ impl<'g> StepWindow<'g> {
     /// resolution. Empty for the last timestep.
     pub fn consumers(&self, x: usize) -> &'g [u32] {
         match self.consumers {
-            Some(tbl) => &tbl[x],
+            Some(rows) => rows.row(x),
             None => &[],
         }
+    }
+}
+
+/// Content-keyed dedup of graph topologies: every lookup for the same
+/// [`TopologyKey`] shares one resident `Arc<GraphTopology>`, so a grain
+/// sweep (or N concurrent `--threads`/fleet cells) materializes the
+/// dependence tables once instead of once per cell.
+#[derive(Debug, Default)]
+pub struct TopologyCache {
+    map: Mutex<HashMap<TopologyKey, Arc<GraphTopology>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl TopologyCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A graph for `cfg`, sharing the resident topology if one matches.
+    /// The map lock is held across a build, so concurrent cells racing
+    /// for the same new topology build it exactly once and the rest hit.
+    pub fn graph(&self, cfg: GraphConfig) -> TaskGraph {
+        use std::collections::hash_map::Entry;
+        let key = TopologyKey::of(&cfg);
+        let topo = match self.map.lock().unwrap().entry(key) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.get())
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(v.insert(Arc::new(GraphTopology::build(key))))
+            }
+        };
+        TaskGraph::with_topology(cfg, topo)
+    }
+
+    /// Lookups served by an already-resident topology.
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to materialize (== distinct topologies built).
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct topologies currently resident.
+    pub fn resident(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    /// Total heap bytes across all resident topologies.
+    pub fn resident_bytes(&self) -> usize {
+        self.map.lock().unwrap().values().map(|t| t.heap_bytes()).sum()
     }
 }
 
@@ -262,6 +514,21 @@ mod tests {
     }
 
     #[test]
+    fn num_edges_matches_a_full_recomputation() {
+        for dep in DependencePattern::all() {
+            let g = graph(dep, 16, 9);
+            let recomputed: usize = (1..g.steps())
+                .map(|t| {
+                    (0..g.width())
+                        .map(|x| g.dependencies(x, t).len())
+                        .sum::<usize>()
+                })
+                .sum();
+            assert_eq!(g.num_edges(), recomputed, "{dep:?}");
+        }
+    }
+
+    #[test]
     fn fft_uses_multiple_dsets() {
         let g = graph(Fft, 8, 10);
         assert_eq!(g.num_dsets(), 3);
@@ -304,5 +571,42 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cache_shares_topologies_across_kernels() {
+        let cache = TopologyCache::new();
+        let a = cache.graph(GraphConfig::default());
+        let b = cache.graph(GraphConfig {
+            kernel: KernelConfig::compute_bound(4096),
+            ..GraphConfig::default()
+        });
+        assert!(
+            Arc::ptr_eq(a.topology(), b.topology()),
+            "kernel must not split the topology key"
+        );
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        let c = cache.graph(GraphConfig { width: 8, ..GraphConfig::default() });
+        assert!(!Arc::ptr_eq(a.topology(), c.topology()));
+        assert_eq!((cache.hits(), cache.misses()), (1, 2));
+        assert_eq!(cache.resident(), 2);
+        assert!(cache.resident_bytes() >= a.topology_bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "different graph fingerprint")]
+    fn mismatched_topology_rejected() {
+        let donor = TaskGraph::new(GraphConfig::default());
+        TaskGraph::with_topology(
+            GraphConfig { width: 8, ..GraphConfig::default() },
+            Arc::clone(donor.topology()),
+        );
+    }
+
+    #[test]
+    fn topology_bytes_counts_the_csr_arrays() {
+        let g = graph(Stencil1D, 4, 3);
+        // 4+1 offsets and 10 edges per direction, u32 each, at minimum.
+        assert!(g.topology_bytes() >= 2 * (5 + 10) * 4);
     }
 }

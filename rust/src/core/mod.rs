@@ -16,7 +16,10 @@ mod point;
 mod validate;
 
 pub use dependence::{ceil_log2, DependencePattern};
-pub use graph::{GraphConfig, StepWindow, TaskGraph};
+pub use graph::{
+    GraphConfig, GraphTopology, StepWindow, TaskGraph, TopologyCache,
+    TopologyKey,
+};
 pub use kernel::{
     fma_loop, stream_loop, Kernel, KernelConfig, FMA_A, FMA_B,
     FLOPS_PER_ELEM_PER_ITER, TILE_ELEMS,

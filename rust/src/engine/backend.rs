@@ -28,6 +28,7 @@ use anyhow::Context;
 
 use crate::core::{
     oracle_outputs, validate_execution, GraphConfig, KernelConfig, TaskGraph,
+    TopologyCache, TopologyKey,
 };
 use crate::metg::measure_peak_flops;
 use crate::runtimes::{run_with, Measurement, RunOptions};
@@ -53,17 +54,41 @@ pub trait Backend: Sync {
     fn execute(&self, job: &Job, graph: &TaskGraph) -> crate::Result<Measurement>;
 }
 
-/// Materialize the task graph a job spec describes. Both backends run
-/// the *same* graph for the same cell — that is what makes native and
+/// The graph configuration a job spec describes. Both backends run the
+/// *same* graph for the same cell — that is what makes native and
 /// simulated measurements comparable (and their checksums equal).
-pub fn job_graph(spec: &JobSpec) -> TaskGraph {
-    TaskGraph::new(GraphConfig {
+pub fn job_graph_config(spec: &JobSpec) -> GraphConfig {
+    GraphConfig {
         width: spec.nodes * spec.cores_per_node * spec.tasks_per_core,
         steps: spec.steps,
         dependence: spec.pattern,
         kernel: KernelConfig::compute_bound(spec.grain),
         ..GraphConfig::default()
-    })
+    }
+}
+
+/// Materialize the task graph a job spec describes, unshared. Callers
+/// with more than one cell in flight should route through
+/// [`Backends::run`], which deduplicates topologies via a
+/// [`TopologyCache`].
+pub fn job_graph(spec: &JobSpec) -> TaskGraph {
+    TaskGraph::new(job_graph_config(spec))
+}
+
+/// The topology fingerprint of a job's graph — cells that differ only in
+/// kernel grain (or payload, reps, mode, ...) collide here, which is
+/// exactly the sharing a grain sweep wants.
+pub fn job_topology_key(spec: &JobSpec) -> TopologyKey {
+    TopologyKey::of(&job_graph_config(spec))
+}
+
+/// Number of distinct graph topologies a job list will materialize —
+/// the sharing factor a sweep author sees before running.
+pub fn distinct_topologies<J: std::borrow::Borrow<Job>>(jobs: &[J]) -> usize {
+    jobs.iter()
+        .map(|j| job_topology_key(&j.borrow().spec))
+        .collect::<std::collections::HashSet<_>>()
+        .len()
 }
 
 /// Total cores of the cell's (simulated or real) machine.
@@ -328,11 +353,18 @@ impl Backend for ReplayBackend {
     }
 }
 
-/// The engine's backend set: one instance of each, routed by `ExecMode`.
+/// The engine's backend set: one instance of each, routed by `ExecMode`,
+/// plus the process-wide topology cache every cell's graph goes through.
 #[derive(Debug)]
 pub struct Backends {
     pub sim: SimBackend,
     pub native: NativeBackend,
+    /// Content-keyed dedup of graph topologies across this backend set's
+    /// cells: a grain sweep materializes its dependence tables once, and
+    /// concurrent `--threads`/fleet cells share one resident copy. Pure
+    /// sharing — the tables are immutable, so cached and uncached cells
+    /// measure bitwise-identical results.
+    pub topo: TopologyCache,
 }
 
 impl Backends {
@@ -340,6 +372,7 @@ impl Backends {
         Backends {
             sim: SimBackend::new(*params),
             native: NativeBackend::default(),
+            topo: TopologyCache::new(),
         }
     }
 
@@ -350,6 +383,7 @@ impl Backends {
         Backends {
             sim: SimBackend::new(*params).with_sim_threads(sim_threads),
             native: NativeBackend::default(),
+            topo: TopologyCache::new(),
         }
     }
 
@@ -361,10 +395,11 @@ impl Backends {
         }
     }
 
-    /// Materialize the job's graph, execute it on the right backend, and
-    /// normalize the measurement into the persisted result form.
+    /// Materialize the job's graph (through the topology cache), execute
+    /// it on the right backend, and normalize the measurement into the
+    /// persisted result form.
     pub fn run(&self, job: &Job) -> crate::Result<JobResult> {
-        let graph = job_graph(&job.spec);
+        let graph = self.topo.graph(job_graph_config(&job.spec));
         let m = self.for_job(job).execute(job, &graph)?;
         Ok(JobResult::from_measurement(&m, job_cores(&job.spec)))
     }
@@ -530,6 +565,29 @@ mod tests {
                 "wall diverged at {threads} sim threads"
             );
             assert_eq!(r, base, "result diverged at {threads} sim threads");
+        }
+    }
+
+    #[test]
+    fn backends_share_one_topology_across_a_grain_sweep() {
+        let b = Backends::new(&SimParams::default());
+        let jobs: Vec<Job> = [8u64, 64, 512]
+            .iter()
+            .map(|&grain| {
+                let mut s = spec(ExecMode::Sim);
+                s.grain = grain;
+                Job::new(s)
+            })
+            .collect();
+        // Grain is a kernel knob, not a topology dimension.
+        assert_eq!(distinct_topologies(&jobs), 1);
+        let cached: Vec<JobResult> =
+            jobs.iter().map(|j| b.run(j).unwrap()).collect();
+        assert_eq!((b.topo.hits(), b.topo.misses()), (2, 1));
+        // Sharing the resident topology must not move a single bit.
+        for (job, r) in jobs.iter().zip(&cached) {
+            let fresh = Backends::new(&SimParams::default()).run(job).unwrap();
+            assert_eq!(*r, fresh, "cached topology moved a measurement");
         }
     }
 

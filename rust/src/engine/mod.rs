@@ -33,7 +33,10 @@ pub mod simbench;
 pub mod stats;
 pub mod store;
 
-pub use backend::{Backend, Backends, NativeBackend, ReplayBackend, SimBackend};
+pub use backend::{
+    distinct_topologies, job_topology_key, Backend, Backends, NativeBackend,
+    ReplayBackend, SimBackend,
+};
 pub use campaign::{Campaign, CampaignKind, DiffTolerances};
 pub use exec::execute_job;
 pub use job::{ExecMode, Job, JobResult, JobSpec};

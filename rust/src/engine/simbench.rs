@@ -20,6 +20,13 @@
 //! single-threaded merge. CI publishes the file as a build artifact, so
 //! the perf trajectory has data points instead of anecdotes.
 //!
+//! Schema v4 adds the graph-layer axes: per-cell `graph_build_ns` and
+//! `topology_bytes`, the recorder-wide `topo_cache_hits`/`topo_cache_misses`
+//! (the matrix routes its graphs through one [`TopologyCache`], so the
+//! sharing a campaign gets is measured, not assumed), and the `layout_*`
+//! micro-axis — identical windowed traversals over the CSR tables vs the
+//! seed-era nested `Vec<Vec<Vec<u32>>>` layout.
+//!
 //! Entry points: `repro jobs bench-sim [--out FILE]` and
 //! `cargo bench --bench sim_core`.
 
@@ -27,7 +34,9 @@ use std::time::Instant;
 
 use anyhow::Context;
 
-use crate::core::{DependencePattern, GraphConfig, KernelConfig, TaskGraph};
+use crate::core::{
+    DependencePattern, GraphConfig, KernelConfig, TaskGraph, TopologyCache,
+};
 use crate::harness::report::Table;
 use crate::runtimes::{SystemConfig, SystemKind};
 use crate::sim::{
@@ -85,10 +94,37 @@ pub struct SimBenchCell {
     /// Did the sharded engine agree bitwise with the sequential one
     /// under contention (i.e. through the sharded-wire replay path)?
     pub contention_parallel_bitwise: bool,
+    /// Host nanoseconds to materialize this cell's graph through the
+    /// recorder's [`TopologyCache`] — near zero for cells served by a
+    /// resident topology, which is exactly the win being recorded.
+    pub graph_build_ns: f64,
+    /// Heap bytes resident in the cell's (shared) CSR topology.
+    pub topology_bytes: usize,
 }
 
 /// DES worker threads the recorder's parallel axis runs on.
 pub const PAR_THREADS: usize = 8;
+
+/// The layout micro-axis: one windowed traversal pass (every step's
+/// deps + consumers) over the CSR tables vs the same pass over the
+/// seed-era nested `Vec<Vec<Vec<u32>>>` layout, rebuilt here as a
+/// reference shape.
+#[derive(Debug, Clone, Copy)]
+pub struct LayoutBench {
+    /// Grid points per traversal pass.
+    pub tasks: usize,
+    /// Traversal throughput over the nested (old-shape) tables.
+    pub nested_tasks_per_sec: f64,
+    /// Traversal throughput over the flat CSR tables.
+    pub csr_tasks_per_sec: f64,
+    /// `nested time / CSR time` — above 1 means the flat layout wins.
+    /// Hardware-dependent; recorded honestly, not asserted.
+    pub csr_ratio: f64,
+    /// Both layouts accumulated identical edge checksums — the traversal
+    /// really visited the same graph (gated by `--check` like the other
+    /// parity bits).
+    pub traversals_agree: bool,
+}
 
 /// A full recorder run.
 #[derive(Debug, Clone)]
@@ -97,6 +133,12 @@ pub struct SimBenchReport {
     pub tasks_per_core: usize,
     pub grain: u64,
     pub cells: Vec<SimBenchCell>,
+    /// Graph materializations served by a resident topology (the matrix
+    /// shares one topology per node count across its three systems).
+    pub topo_cache_hits: usize,
+    /// Graph materializations that had to build.
+    pub topo_cache_misses: usize,
+    pub layout: LayoutBench,
 }
 
 impl SimBenchReport {
@@ -140,6 +182,9 @@ impl SimBenchReport {
                     ));
                 }
             }
+        }
+        if !self.layout.traversals_agree {
+            out.push("layout micro-axis: traversals_agree".into());
         }
         out
     }
@@ -206,17 +251,44 @@ impl SimBenchReport {
                         "contention_parallel_bitwise".into(),
                         Json::Bool(c.contention_parallel_bitwise),
                     ),
+                    ("graph_build_ns".into(), Json::Num(c.graph_build_ns)),
+                    (
+                        "topology_bytes".into(),
+                        Json::Num(c.topology_bytes as f64),
+                    ),
                 ])
             })
             .collect();
         let mut text = Json::Obj(vec![
-            ("v".into(), Json::Num(3.0)),
+            ("v".into(), Json::Num(4.0)),
             ("steps".into(), Json::Num(self.steps as f64)),
             ("tasks_per_core".into(), Json::Num(self.tasks_per_core as f64)),
             ("grain".into(), Json::Num(self.grain as f64)),
             ("parallel_threads".into(), Json::Num(PAR_THREADS as f64)),
             ("geomean_speedup".into(), Json::Num(self.geomean_speedup())),
             ("all_bitwise".into(), Json::Bool(self.all_bitwise())),
+            (
+                "topo_cache_hits".into(),
+                Json::Num(self.topo_cache_hits as f64),
+            ),
+            (
+                "topo_cache_misses".into(),
+                Json::Num(self.topo_cache_misses as f64),
+            ),
+            ("layout_tasks".into(), Json::Num(self.layout.tasks as f64)),
+            (
+                "layout_nested_tasks_per_sec".into(),
+                Json::Num(self.layout.nested_tasks_per_sec),
+            ),
+            (
+                "layout_csr_tasks_per_sec".into(),
+                Json::Num(self.layout.csr_tasks_per_sec),
+            ),
+            ("layout_csr_ratio".into(), Json::Num(self.layout.csr_ratio)),
+            (
+                "layout_traversals_agree".into(),
+                Json::Bool(self.layout.traversals_agree),
+            ),
             ("cells".into(), Json::Arr(cells)),
         ])
         .render();
@@ -238,6 +310,8 @@ impl SimBenchReport {
             "nic tasks/s",
             "nic ratio",
             "con par speedup",
+            "build µs",
+            "topo KiB",
             "frontier (tasks)",
             "oracle resident",
         ]);
@@ -254,15 +328,24 @@ impl SimBenchReport {
                 format!("{:.3e}", c.contention_tasks_per_sec),
                 format!("{:.2}x", c.contention_ratio),
                 format!("{:.2}x", c.contention_parallel_speedup),
+                format!("{:.1}", c.graph_build_ns / 1e3),
+                format!("{:.1}", c.topology_bytes as f64 / 1024.0),
                 c.peak_frontier_tasks.to_string(),
                 c.oracle_resident_tasks.to_string(),
             ]);
         }
         format!(
-            "{}\ngeomean speedup {:.2}x, bitwise parity: {}\n",
+            "{}\ngeomean speedup {:.2}x, bitwise parity: {}\n\
+             topology cache: {} hits / {} misses; layout traversal: CSR \
+             {:.3e} vs nested {:.3e} tasks/s ({:.2}x)\n",
             t.to_markdown(),
             self.geomean_speedup(),
             if self.all_bitwise() { "OK" } else { "FAILED" },
+            self.topo_cache_hits,
+            self.topo_cache_misses,
+            self.layout.csr_tasks_per_sec,
+            self.layout.nested_tasks_per_sec,
+            self.layout.csr_ratio,
         )
     }
 }
@@ -273,6 +356,109 @@ fn timed<F: FnOnce() -> (u64, usize)>(f: F) -> (u64, usize, f64) {
     let t0 = Instant::now();
     let (bits, messages) = f();
     (bits, messages, t0.elapsed().as_secs_f64().max(1e-9))
+}
+
+/// The seed-era nested layout, rebuilt as the layout micro-axis
+/// reference: `tables[dset][x]` / `rtables[dset][x]` per-point vectors,
+/// exactly the shape the CSR core replaced.
+struct NestedTables {
+    tables: Vec<Vec<Vec<u32>>>,
+    rtables: Vec<Vec<Vec<u32>>>,
+}
+
+fn nested_tables(graph: &TaskGraph) -> NestedTables {
+    let cfg = graph.config();
+    let mut tables = Vec::with_capacity(graph.num_dsets());
+    let mut rtables = Vec::with_capacity(graph.num_dsets());
+    for dset in 0..graph.num_dsets() {
+        let mut fwd: Vec<Vec<u32>> = Vec::with_capacity(cfg.width);
+        let mut rev: Vec<Vec<u32>> = vec![Vec::new(); cfg.width];
+        for x in 0..cfg.width {
+            let deps = cfg.dependence.deps(dset, x, cfg.width, cfg.seed);
+            for &d in &deps {
+                rev[d].push(x as u32);
+            }
+            fwd.push(deps.into_iter().map(|d| d as u32).collect());
+        }
+        for r in rev.iter_mut() {
+            r.sort_unstable();
+        }
+        tables.push(fwd);
+        rtables.push(rev);
+    }
+    NestedTables { tables, rtables }
+}
+
+/// One windowed traversal pass over the CSR graph: every step's deps and
+/// consumers, accumulated so the work cannot be optimized away.
+fn traverse_csr(graph: &TaskGraph) -> u64 {
+    let mut acc = 0u64;
+    for t in 0..graph.steps() {
+        let w = graph.window(t);
+        for x in 0..graph.width() {
+            for &d in w.deps(x) {
+                acc = acc.wrapping_add(d as u64);
+            }
+            for &c in w.consumers(x) {
+                acc = acc.wrapping_add(c as u64);
+            }
+        }
+    }
+    acc
+}
+
+/// The identical traversal over the nested reference layout.
+fn traverse_nested(graph: &TaskGraph, nested: &NestedTables) -> u64 {
+    let mut acc = 0u64;
+    for t in 0..graph.steps() {
+        let deps =
+            (t >= 1 && t < graph.steps()).then(|| &nested.tables[graph.dset_at(t)]);
+        let cons = (t + 1 < graph.steps())
+            .then(|| &nested.rtables[graph.dset_at(t + 1)]);
+        for x in 0..graph.width() {
+            if let Some(tbl) = deps {
+                for &d in &tbl[x] {
+                    acc = acc.wrapping_add(d as u64);
+                }
+            }
+            if let Some(tbl) = cons {
+                for &c in &tbl[x] {
+                    acc = acc.wrapping_add(c as u64);
+                }
+            }
+        }
+    }
+    acc
+}
+
+/// Run the layout micro-axis on `graph`: the same windowed traversal
+/// over both layouts, checksummed against each other.
+fn layout_micro_bench(graph: &TaskGraph) -> LayoutBench {
+    const REPS: usize = 8;
+    let nested = nested_tables(graph);
+    // Warm both table sets out of the build's cache shadow.
+    let warm_csr = traverse_csr(graph);
+    let warm_nested = traverse_nested(graph, &nested);
+    let t0 = Instant::now();
+    let mut csr_acc = 0u64;
+    for _ in 0..REPS {
+        csr_acc = csr_acc.wrapping_add(traverse_csr(graph));
+    }
+    let csr_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let t0 = Instant::now();
+    let mut nested_acc = 0u64;
+    for _ in 0..REPS {
+        nested_acc = nested_acc.wrapping_add(traverse_nested(graph, &nested));
+    }
+    let nested_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let visited = (graph.num_points() * REPS) as f64;
+    LayoutBench {
+        tasks: graph.num_points(),
+        nested_tasks_per_sec: visited / nested_secs,
+        csr_tasks_per_sec: visited / csr_secs,
+        csr_ratio: nested_secs / csr_secs,
+        traversals_agree: csr_acc == nested_acc && warm_csr == warm_nested,
+    }
 }
 
 /// Run the recorder matrix: every event-driven system on an 8-node and a
@@ -286,6 +472,7 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
     let cfg = SystemConfig::default();
     let wire = NetConfig::default();
     let nic = NetConfig::contention();
+    let topo_cache = TopologyCache::new();
     let mut cells = Vec::new();
     for &nodes in &[8usize, 64] {
         for system in [
@@ -294,13 +481,18 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
             SystemKind::HpxDistributed,
         ] {
             let machine = Machine::rostam(nodes);
-            let graph = TaskGraph::new(GraphConfig {
+            // Through the shared cache, as a campaign would run: the
+            // three systems of one node count share one topology, so
+            // only the first build per node count pays construction.
+            let build_t0 = Instant::now();
+            let graph = topo_cache.graph(GraphConfig {
                 width: machine.total_cores() * tasks_per_core,
                 steps,
                 dependence: DependencePattern::Stencil1D,
                 kernel: KernelConfig::compute_bound(GRAIN),
                 ..GraphConfig::default()
             });
+            let graph_build_ns = build_t0.elapsed().as_nanos() as f64;
             let n = graph.num_points();
 
             let mut stats = None;
@@ -376,10 +568,29 @@ pub fn run_sim_bench(steps: usize, tasks_per_core: usize) -> SimBenchReport {
                 contention_parallel_speedup: c_secs / cp_secs,
                 contention_parallel_bitwise: cp_bits == c_bits
                     && cp_msgs == c_msgs,
+                graph_build_ns,
+                topology_bytes: stats.topology_bytes,
             });
         }
     }
-    SimBenchReport { steps, tasks_per_core, grain: GRAIN, cells }
+    // The layout micro-axis runs on the 8-node shape, uncached — it
+    // compares memory layouts, not cache behavior.
+    let layout = layout_micro_bench(&TaskGraph::new(GraphConfig {
+        width: Machine::rostam(8).total_cores() * tasks_per_core,
+        steps,
+        dependence: DependencePattern::Stencil1D,
+        kernel: KernelConfig::compute_bound(GRAIN),
+        ..GraphConfig::default()
+    }));
+    SimBenchReport {
+        steps,
+        tasks_per_core,
+        grain: GRAIN,
+        cells,
+        topo_cache_hits: topo_cache.hits(),
+        topo_cache_misses: topo_cache.misses(),
+        layout,
+    }
 }
 
 /// [`run_sim_bench`] and persist the JSON record at `path`.
@@ -421,9 +632,29 @@ mod tests {
             assert!(c.contention_parallel_tasks_per_sec > 0.0);
             assert!(c.contention_parallel_speedup > 0.0);
             assert!(c.contention_parallel_bitwise, "{c:#?}");
+            assert!(c.graph_build_ns >= 0.0);
+            assert!(c.topology_bytes > 0, "{c:#?}");
         }
         assert!(r.geomean_speedup() > 0.0);
         assert!(r.bitwise_failures().is_empty(), "{:?}", r.bitwise_failures());
+        // Two node counts × three systems through one cache: one build
+        // per node count, the other two systems share it.
+        assert_eq!((r.topo_cache_hits, r.topo_cache_misses), (4, 2));
+        assert!(r.layout.tasks > 0);
+        assert!(r.layout.nested_tasks_per_sec > 0.0);
+        assert!(r.layout.csr_tasks_per_sec > 0.0);
+        assert!(r.layout.csr_ratio > 0.0);
+        assert!(r.layout.traversals_agree, "{:#?}", r.layout);
+    }
+
+    #[test]
+    fn layout_disagreement_fails_the_bitwise_gate() {
+        let mut r = run_sim_bench(3, 1);
+        r.layout.traversals_agree = false;
+        let failures = r.bitwise_failures();
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("layout"), "{failures:?}");
+        assert!(!r.all_bitwise());
     }
 
     #[test]
@@ -446,7 +677,7 @@ mod tests {
         let r = run_sim_bench(3, 1);
         let text = r.to_json();
         let v = Json::parse(&text).expect("recorder JSON must parse");
-        assert_eq!(v.get("v").and_then(Json::as_u64), Some(3));
+        assert_eq!(v.get("v").and_then(Json::as_u64), Some(4));
         assert_eq!(
             v.get("parallel_threads").and_then(Json::as_u64),
             Some(PAR_THREADS as u64)
@@ -466,10 +697,27 @@ mod tests {
         assert!(text.contains("contention_parallel_tasks_per_sec"), "{text}");
         assert!(text.contains("contention_parallel_speedup"), "{text}");
         assert!(text.contains("contention_parallel_bitwise"), "{text}");
+        assert!(text.contains("graph_build_ns"), "{text}");
+        assert!(text.contains("topology_bytes"), "{text}");
+        assert_eq!(
+            v.get("topo_cache_hits").and_then(Json::as_u64),
+            Some(4),
+            "{text}"
+        );
+        assert_eq!(v.get("topo_cache_misses").and_then(Json::as_u64), Some(2));
+        assert!(text.contains("layout_nested_tasks_per_sec"), "{text}");
+        assert!(text.contains("layout_csr_tasks_per_sec"), "{text}");
+        assert!(text.contains("layout_csr_ratio"), "{text}");
+        assert!(matches!(
+            v.get("layout_traversals_agree"),
+            Some(Json::Bool(true))
+        ));
         let rendered = r.render();
         assert!(rendered.contains("geomean speedup"), "{rendered}");
         assert!(rendered.contains("nic ratio"), "{rendered}");
         assert!(rendered.contains("par speedup"), "{rendered}");
         assert!(rendered.contains("con par speedup"), "{rendered}");
+        assert!(rendered.contains("topology cache"), "{rendered}");
+        assert!(rendered.contains("layout traversal"), "{rendered}");
     }
 }

@@ -796,12 +796,16 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
                     job.spec.canonical(),
                 );
             }
+            // Distinct topologies over the *selected* shard: cells that
+            // differ only in kernel/grain share one resident CSR topology,
+            // so this is the number the process will actually build.
             eprintln!(
-                "{} jobs in campaign {} (shard {shard}: {}; {} store in {}; \
-                 sim-threads {sim_threads})",
+                "{} jobs in campaign {} (shard {shard}: {}; {} distinct \
+                 topologies; {} store in {}; sim-threads {sim_threads})",
                 jobs.len(),
                 campaign.kind.id(),
                 mine.len(),
+                taskbench_amt::engine::distinct_topologies(&mine),
                 store.backend_id(),
                 store.dir().display(),
             );
@@ -824,12 +828,18 @@ fn cmd_jobs(action: &str, m: &HashMap<String, String>) {
             } else {
                 format!(", {} FAILED", summary.failed.len())
             };
+            // `topo-cache N hits/M misses`: misses = CSR topologies built
+            // this run, hits = cells served by an already-resident one.
+            // CI greps this exact phrase to assert sweeps share topology.
             println!(
-                "campaign {}: {} executed, {} cached{failed_note} \
+                "campaign {}: {} executed, {} cached{failed_note}, \
+                 topo-cache {} hits/{} misses \
                  (shard {shard}, {} store in {}, sim-threads {sim_threads})",
                 campaign.kind.id(),
                 summary.executed,
                 summary.cached,
+                summary.topo_hits,
+                summary.topo_misses,
                 store.backend_id(),
                 store.dir().display(),
             );

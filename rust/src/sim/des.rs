@@ -87,6 +87,10 @@ pub struct SimStats {
     /// Peak resident frontier entries (`peak_window_steps × width`) —
     /// the engine's working-set measure, constant in `steps`.
     pub peak_frontier_tasks: usize,
+    /// Heap bytes resident in the graph's CSR dependence tables. With
+    /// topology sharing one copy may back many concurrent cells, so this
+    /// is the per-topology figure, not a per-cell cost.
+    pub topology_bytes: usize,
 }
 
 /// Simulate `graph` on `system` over `machine` with the given build /
@@ -137,6 +141,7 @@ fn fork_join_stats(graph: &TaskGraph) -> SimStats {
         tasks: graph.num_points(),
         peak_window_steps: 1,
         peak_frontier_tasks: graph.width(),
+        topology_bytes: graph.topology_bytes(),
     }
 }
 
@@ -581,6 +586,7 @@ fn simulate_event_driven(
         tasks: graph.num_points(),
         peak_window_steps: frontier.peak_slabs,
         peak_frontier_tasks: frontier.peak_slabs * width,
+        topology_bytes: graph.topology_bytes(),
     };
     (makespan, messages, stats)
 }

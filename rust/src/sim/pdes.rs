@@ -747,6 +747,7 @@ fn run_sharded(
         tasks: graph.num_points(),
         peak_window_steps: peak_depth,
         peak_frontier_tasks: peak_tasks,
+        topology_bytes: graph.topology_bytes(),
     };
     (measurement_of(graph, system, makespan, messages), stats)
 }
